@@ -1,0 +1,122 @@
+"""Checkpoint-path benchmark: measured C (the paper's key constant).
+
+Reports blocking vs full cost of the async path, codec compression ratios,
+buddy-memory restore time, and what each C_eff implies for the optimal
+period and waste at the paper's 2^19-processor platform."""
+
+from __future__ import annotations
+
+import math
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, BuddyMemoryCheckpoint, CheckpointStore
+from repro.configs.paper import C, D, MU_IND, R
+from repro.core import Platform, PredictorModel, optimize_exact
+
+from .common import emit, timed
+
+
+def _state(mb: float = 64.0):
+    rng = np.random.default_rng(0)
+    n = int(mb * 2**20 / 4)
+    return {
+        "params": jax.numpy.asarray(rng.standard_normal(n // 2).astype(np.float32)),
+        "m": jax.numpy.asarray(rng.standard_normal(n // 4).astype(np.float32)),
+        "v": jax.numpy.asarray(
+            np.abs(rng.standard_normal(n // 4)).astype(np.float32)
+        ),
+    }
+
+
+def run(quick: bool = True) -> None:
+    state = _state(32.0 if quick else 256.0)
+    raw_bytes = sum(x.nbytes for x in jax.tree.leaves(state))
+    root = tempfile.mkdtemp(prefix="ckpt_bench")
+    try:
+        for codec in ["raw", "int8", "int8_delta"]:
+            store = CheckpointStore(os.path.join(root, codec), codec=codec)
+            prev = None
+            if codec == "int8_delta":
+                store.save(0, state)
+                prev = state
+            m, us = timed(store.save, 1, state, prev_tree=prev)
+            _, us_r = timed(
+                store.restore, 1, jax.eval_shape(lambda: state), None, prev
+            )
+            emit(
+                f"ckpt/save/{codec}",
+                us,
+                {
+                    "MBps": round(raw_bytes / (us / 1e6) / 2**20, 1),
+                    "ratio": round(m["raw_bytes"] / m["stored_bytes"], 2),
+                    "restore_us": round(us_r, 1),
+                },
+            )
+
+        ac = AsyncCheckpointer(CheckpointStore(os.path.join(root, "async")))
+        c_block, us = timed(ac.save, 2, state)
+        ac.wait()
+        mm = ac.metrics
+        emit(
+            "ckpt/async", us,
+            {
+                "c_block_s": round(mm["c_block"], 4),
+                "c_full_s": round(mm["c_full"], 4),
+                "overlap_ratio": round(mm["c_full"] / max(mm["c_block"], 1e-9), 1),
+            },
+        )
+
+        bm = BuddyMemoryCheckpoint(n_nodes=2)
+        _, us_save = timed(bm.save, 3, state)
+        _, us_rest = timed(bm.restore, 0, lost=True)
+        emit("ckpt/buddy", us_save, {"restore_us": round(us_rest, 1)})
+
+        # beyond-paper: two-level (buddy RAM + disk) optimal hierarchy
+        from repro.core.periods import two_level_periods
+        from repro.core.waste import waste_two_level, waste_young
+        from repro.core.periods import t_extr
+
+        mu19 = MU_IND / 2**19
+        f = 0.9  # single-node failures recoverable from the buddy tier
+        c_m = C / 20.0
+        t_m, t_d = two_level_periods(mu19, c_m, C, f)
+        w2 = waste_two_level(t_m, t_d, c_m, C, D, D, R, mu19, f)
+        w1 = waste_young(max(t_extr(mu19, C), C), C, D, R, mu19)
+        emit(
+            "ckpt/two_level", 0.0,
+            {
+                "T_mem_s": round(t_m, 1),
+                "T_disk_s": round(t_d, 1),
+                "waste": round(w2, 4),
+                "vs_single_level": round(w1, 4),
+                "reduction_pct": round(100 * (1 - w2 / w1), 1),
+            },
+        )
+
+        # what C_eff means for the paper's platform (2^19 procs)
+        plat0 = Platform(mu=MU_IND / 2**19, C=C, D=D, R=R)
+        pred = PredictorModel(0.85, 0.82)
+        w0 = optimize_exact(plat0, pred).waste
+        for factor, name in [(1.0, "baseline_C"), (0.25, "int8_C"), (0.1, "async_C")]:
+            plat = Platform(mu=plat0.mu, C=C * factor, D=D, R=R)
+            pol = optimize_exact(plat, pred)
+            emit(
+                f"ckpt/waste_impact/{name}", 0.0,
+                {
+                    "C_s": C * factor,
+                    "T_opt_s": round(pol.T_R, 1),
+                    "waste": round(pol.waste, 4),
+                    "waste_reduction_pct": round(100 * (1 - pol.waste / w0), 1),
+                },
+            )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(quick=False)

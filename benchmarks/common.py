@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark harness (CSV: name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    if not isinstance(derived, str):
+        derived = json.dumps(derived, separators=(",", ":"))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable, *args, n: int = 1, **kw):
+    t0 = time.monotonic()
+    out = None
+    for _ in range(n):
+        out = fn(*args, **kw)
+    dt = (time.monotonic() - t0) / n
+    return out, dt * 1e6

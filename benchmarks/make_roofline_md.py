@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_md [tag]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .roofline_report import rows
+
+
+def gib(b):
+    return b / 2**30
+
+
+def main(tag: str = "baseline") -> None:
+    rs = [r for r in rows() if r.get("tag") == tag]
+    rs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### Dry-run: memory per device (both meshes)\n")
+    print("| arch | shape | mesh | compile s | args GiB | temp GiB | peak GiB | fits 16GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        m = r["memory"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compile_s']} "
+            f"| {gib(m['argument_bytes']):.2f} | {gib(m['temp_bytes']):.2f} "
+            f"| {gib(m['peak_est_bytes']):.2f} | {'yes' if m['fits_hbm'] else 'NO'} |"
+        )
+
+    print("\n### Roofline terms (single-pod 16x16, per step)\n")
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant "
+          "| MODEL/HLO flops | bound ms |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if r["mesh"] != "16x16":
+            continue
+        ro = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']*1e3:.2f} "
+            f"| {ro['t_memory_s']*1e3:.2f} | {ro['t_collective_s']*1e3:.2f} "
+            f"| **{ro['dominant']}** | {ro['useful_flops_fraction']:.2f} "
+            f"| {ro['step_lower_bound_s']*1e3:.2f} |"
+        )
+
+    print("\n### Collective breakdown (single-pod)\n")
+    print("| arch | shape | wire GB/dev | by kind |")
+    print("|---|---|---|---|")
+    for r in rs:
+        if r["mesh"] != "16x16":
+            continue
+        h = r["hlo"]
+        kinds = ", ".join(
+            f"{k.replace('all-','a')}: {v/1e9:.1f}"
+            for k, v in sorted(h["collective_by_kind"].items())
+        )
+        print(f"| {r['arch']} | {r['shape']} | {h['collective_bytes']/1e9:.2f} | {kinds} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "baseline")

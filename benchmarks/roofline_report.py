@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run JSON cache (results/dryrun/).
+
+Emits one CSV row per (arch x shape x mesh x tag) cell with the three
+roofline terms, the dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs
+ratio — the §Roofline deliverable, regenerable without recompiling."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows(tag=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if "skipped" in r:
+            continue
+        if tag and r.get("tag") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def run(quick: bool = True) -> None:
+    for r in rows():
+        roof = r["roofline"]
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('tag','baseline')}",
+            roof["step_lower_bound_s"] * 1e6,
+            {
+                "t_comp_ms": round(roof["t_compute_s"] * 1e3, 2),
+                "t_mem_ms": round(roof["t_memory_s"] * 1e3, 2),
+                "t_coll_ms": round(roof["t_collective_s"] * 1e3, 2),
+                "dominant": roof["dominant"],
+                "useful_flops_frac": round(roof["useful_flops_fraction"], 3),
+                "fits_hbm": r["memory"]["fits_hbm"],
+                "mem_gib": round(r["memory"]["peak_est_bytes"] / 2**30, 2),
+            },
+        )
+
+
+if __name__ == "__main__":
+    run()

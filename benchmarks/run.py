@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure plus the
+system-level checkpoint/step/roofline benches.
+
+Prints ``name,us_per_call,derived`` CSV (assignment format).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only sim_tables]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale run counts")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import ckpt_bench, recall_precision, roofline_report, sim_tables, step_bench, waste_curves
+
+    modules = {
+        "sim_tables": sim_tables,        # Tables 1-2
+        "waste_curves": waste_curves,    # Figures 4-7
+        "recall_precision": recall_precision,  # Figures 8-11
+        "ckpt_bench": ckpt_bench,        # C measurement + waste impact
+        "step_bench": step_bench,        # real CPU step timings
+        "roofline_report": roofline_report,  # Roofline table from cache
+    }
+    print("name,us_per_call,derived")
+    t0 = time.monotonic()
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# == {name} ==", file=sys.stderr, flush=True)
+        mod.run(quick=not args.full)
+    print(f"# total {time.monotonic() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

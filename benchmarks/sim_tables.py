@@ -1,0 +1,82 @@
+"""Tables 1-2 analog: job execution times and gains vs Young.
+
+Grid: (p, r) in {(0.82, 0.85), (0.4, 0.7)} x N in {2^16, 2^19} x
+I in {300 s, 3000 s} x failure law in {Exponential, Weibull k=0.7,
+Weibull k=0.5 (fresh-start superposed — see DESIGN.md on the paper's
+under-specified trace generator)}.  Strategies: Young baseline,
+ExactPrediction, Instant, NoCkptI, WithCkptI.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Platform, PredictorModel, simulate_many
+from repro.core import events as E
+from repro.core import simulator as S
+from repro.configs.paper import C, D, MU_IND, R
+
+from .common import emit, timed
+
+MN = 60.0
+WORK = 10 * 86400.0
+
+
+def _strategies(plat, pred):
+    return [
+        S.young(plat),
+        S.exact_prediction(plat, PredictorModel(pred.recall, pred.precision)),
+        S.instant(plat, pred),
+        S.nockpt(plat, pred),
+        S.withckpt(plat, pred),
+    ]
+
+
+def run(quick: bool = True) -> None:
+    n_runs = 6 if quick else 30
+    dists = [
+        ("exp", E.exponential(), None),
+        ("weibull0.7", E.weibull(0.7), None),
+        ("weibull0.5-fresh", E.weibull(0.5), "superposed"),
+    ]
+    for p, r in [(0.82, 0.85), (0.4, 0.7)]:
+        for n_procs in [2**16, 2**19]:
+            plat = Platform(mu=MU_IND / n_procs, C=C, D=D, R=R)
+            for I in [300.0, 3000.0]:
+                pred = PredictorModel(r, p, window=I, lead=3600.0)
+                for dname, dist, mode in dists:
+                    if quick and dname == "weibull0.5-fresh" and n_procs == 2**19:
+                        continue  # heavy burn-in trace; full mode only
+                    kw = dict(
+                        n_runs=n_runs,
+                        seed=100,
+                        fault_dist=dist,
+                        horizon_factor=30,
+                    )
+                    if mode == "superposed":
+                        kw["n_components"] = min(n_procs, 2**15)
+                    base_t = None
+                    for strat in _strategies(plat, pred):
+                        res, us = timed(
+                            simulate_many, WORK, plat, strat, pred, **kw
+                        )
+                        mk = float(np.mean([x.makespan for x in res]))
+                        if strat.name == "Young":
+                            base_t = mk
+                        gain = 0.0 if base_t is None else (1 - mk / base_t)
+                        emit(
+                            f"table12/{dname}/p{p}_r{r}/N{n_procs}/I{int(I)}/"
+                            f"{strat.name}",
+                            us / n_runs,
+                            {
+                                "days": round(mk / 86400, 2),
+                                "gain_vs_young_pct": round(100 * gain, 1),
+                                "waste": round(
+                                    float(np.mean([x.waste for x in res])), 4
+                                ),
+                            },
+                        )
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,63 @@
+"""Real CPU step timing for reduced configs (train + decode) and the
+measured per-step checkpoint cost feeding the executor's C estimate."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.steps import build_decode_step, build_model, build_prefill_step, build_train_step
+from repro.models.layers import RuntimeFlags
+from repro.optim.adamw import adamw_init
+
+from .common import emit, timed
+
+ARCHS_QUICK = ["smollm-135m", "qwen3-moe-30b-a3b", "rwkv6-7b"]
+
+
+def run(quick: bool = True) -> None:
+    archs = ARCHS_QUICK if quick else configs.ARCH_NAMES
+    for name in archs:
+        cfg = configs.get(name).reduced()
+        model, _ = build_model(cfg, mesh=None, flags=RuntimeFlags(dense_attn_max=256))
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        rng = np.random.default_rng(0)
+        B, S = 4, 64
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        }
+        if cfg.frontend:
+            batch["frontend"] = jnp.asarray(
+                rng.standard_normal((B, cfg.frontend_prefix, cfg.d_model)) * 0.02,
+                jnp.bfloat16,
+            )
+        step = jax.jit(build_train_step(model))
+        p, o, m = step(params, opt, batch)  # compile+warm
+        jax.block_until_ready(m["loss"])
+        (_, _, m2), us = timed(lambda: step(p, o, batch), n=3)
+        jax.block_until_ready(m2["loss"])
+        tokens = B * S
+        emit(
+            f"step/train/{name}", us,
+            {"tok_per_s": round(tokens / (us / 1e6)), "loss": round(float(m2["loss"]), 3)},
+        )
+
+        max_seq = S + (cfg.frontend_prefix or 0) + 8
+        prefill = jax.jit(lambda p_, b_: build_prefill_step(model, max_seq)(p_, b_))
+        logits, cache = prefill(params, batch)
+        decode = jax.jit(build_decode_step(model))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = decode(params, cache, tok)
+        jax.block_until_ready(out[0])
+        (_, cache2), us_d = timed(lambda: decode(params, cache, tok), n=5)
+        emit(
+            f"step/decode/{name}", us_d,
+            {"tok_per_s": round(B / (us_d / 1e6))},
+        )
+
+
+if __name__ == "__main__":
+    run(quick=False)

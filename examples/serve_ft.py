@@ -1,0 +1,24 @@
+"""Fault-tolerant batched serving example (decode with cache snapshots).
+
+    PYTHONPATH=src python examples/serve_ft.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [
+        sys.executable,
+        "-m",
+        "repro.launch.serve",
+        "--arch", "qwen2-0.5b",
+        "--requests", "4",
+        "--prompt-len", "24",
+        "--gen", "40",
+        "--snapshot-every", "8",
+        "--inject-faults",
+        "--fault-mtbf", "3",
+    ],
+    env={"PYTHONPATH": "src"},
+    check=True,
+)

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a reduced model under injected faults, with the
+paper's prediction-aware checkpointing vs Young on the SAME fault trace.
+
+    PYTHONPATH=src python examples/train_ft.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import AsyncCheckpointer, CheckpointStore, latest_step
+from repro.core.events import make_event_trace
+from repro.core.predictor import SimulatedPredictor
+from repro.core.waste import Platform, PredictorModel
+from repro.data.pipeline import SyntheticLMDataset
+from repro.ft import FaultInjector, FaultTolerantExecutor, SimClock
+from repro.launch.steps import build_model, build_train_step
+from repro.models.layers import RuntimeFlags
+from repro.optim.adamw import adamw_init
+
+STEPS = 60
+cfg = configs.get("smollm-135m").reduced()
+model, _ = build_model(cfg, mesh=None, flags=RuntimeFlags(dense_attn_max=256))
+inner = jax.jit(build_train_step(model, lr=1e-3))
+data = SyntheticLMDataset(cfg.vocab_size, 64, 4, seed=1)
+
+plat = Platform(mu=40.0, C=2.0, D=0.5, R=1.0)  # harsh simulated platform
+pm = PredictorModel(0.85, 0.82, window=1.0, lead=10.0)
+
+
+def run(strategy: str, recall: float, ckpt_dir: str):
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    losses = {}
+
+    def step_fn(st, k):
+        batch = {kk: jnp.asarray(v) for kk, v in data.batch(k).items()}
+        p, o, m = inner(st["params"], st["opt"], batch)
+        losses[k] = float(m["loss"])
+        return {"params": p, "opt": o}
+
+    trace = make_event_trace(
+        np.random.default_rng(7), horizon=1e5, mtbf=plat.mu,
+        recall=recall, precision=pm.precision, window=pm.window, lead=pm.lead,
+    )
+    store = CheckpointStore(ckpt_dir)
+    ckpt = AsyncCheckpointer(store)
+
+    def restore_fn(_):
+        s = latest_step(ckpt_dir)
+        if s is None:
+            p0 = model.init(jax.random.PRNGKey(0))
+            return {"params": p0, "opt": adamw_init(p0)}
+        return store.restore(s, target=jax.eval_shape(lambda: state))
+
+    ex = FaultTolerantExecutor(
+        step_fn=step_fn, state=state, platform=plat, pred_model=pm,
+        predictor=SimulatedPredictor(trace, pm) if recall else None,
+        checkpointer=ckpt, restore_fn=restore_fn,
+        load_state=lambda st, t, k: t,
+        injector=FaultInjector(trace), clock=SimClock(), step_time=1.0,
+        strategy=strategy,
+    )
+    rep = ex.run(STEPS)
+    return rep, losses
+
+
+rep_y, losses_y = run("young", 0.0, "/tmp/ex_ft_young")
+rep_p, losses_p = run("auto", pm.recall, "/tmp/ex_ft_pred")
+
+print("Young           :", rep_y.summary())
+print("Prediction-aware:", rep_p.summary())
+print(f"\nfinal losses converge identically (deterministic replay): "
+      f"{losses_y[STEPS-1]:.4f} vs {losses_p[STEPS-1]:.4f}")
+print(f"waste reduction: {100*(1 - rep_p.ledger.waste()/rep_y.ledger.waste()):.0f}%")

@@ -1,0 +1,17 @@
+"""Checkpoint substrate: sharded store, async pipeline, buddy memory tier,
+int8 delta codec.  The measured blocking cost feeds the paper's period
+formula as C (see ft/executor.py)."""
+
+from .store import CheckpointStore, latest_step
+from .async_ckpt import AsyncCheckpointer
+from .memory import BuddyMemoryCheckpoint
+from .codec import encode_tree, decode_tree
+
+__all__ = [
+    "CheckpointStore",
+    "latest_step",
+    "AsyncCheckpointer",
+    "BuddyMemoryCheckpoint",
+    "encode_tree",
+    "decode_tree",
+]

@@ -1,0 +1,58 @@
+"""In-memory buddy checkpointing (double in-memory checkpoint/restart,
+after Zheng, Ni & Kale [13]).
+
+Each node keeps its own newest snapshot in host RAM *and* a replica of a
+buddy node's snapshot.  A single-node failure restores from the buddy in
+O(RAM copy) instead of O(disk read), collapsing the paper's R for the
+common case; only multi-node or correlated failures fall back to the disk
+tier.  On this single-process container the "nodes" are logical ranks and
+the buddy exchange is a dict copy; on a real pod the exchange is one
+ICI/DCN neighbor send of the local shard (cost modelled in ft/elastic.py).
+
+The executor composes tiers: memory tier for fast restart, disk tier
+(AsyncCheckpointer) for durability.
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["BuddyMemoryCheckpoint"]
+
+
+class BuddyMemoryCheckpoint:
+    def __init__(self, n_nodes: int = 2):
+        self.n_nodes = n_nodes
+        # own[i] = (step, snapshot of rank i); buddy[i] = replica of own[(i-1) % n]
+        self._own: Dict[int, Any] = {}
+        self._buddy: Dict[int, Any] = {}
+
+    def buddy_of(self, rank: int) -> int:
+        return (rank + 1) % self.n_nodes
+
+    def save(self, step: int, tree, rank: int = 0) -> float:
+        """Snapshot to own RAM and replicate to the buddy.  Returns seconds."""
+        t0 = time.monotonic()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._own[rank] = (step, host)
+        self._buddy[self.buddy_of(rank)] = (step, copy.deepcopy(host))
+        return time.monotonic() - t0
+
+    def restore(self, rank: int = 0, lost: bool = False):
+        """Restore rank's snapshot; ``lost=True`` simulates the node's RAM
+        being gone, forcing the buddy path."""
+        if not lost and rank in self._own:
+            return self._own[rank]
+        buddy_holder = self.buddy_of(rank)
+        if buddy_holder in self._buddy:
+            return self._buddy[buddy_holder]
+        return None
+
+    def latest_step(self, rank: int = 0) -> Optional[int]:
+        got = self.restore(rank)
+        return got[0] if got else None

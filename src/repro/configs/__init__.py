@@ -1,0 +1,64 @@
+"""Assigned-architecture registry.
+
+``get("qwen2-72b")`` returns the exact published config; ``get(name).reduced()``
+is the CPU smoke-test variant.  ``--arch <id>`` in the launchers resolves
+through this registry.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict, List
+
+from .base import (
+    ArchConfig,
+    FTSpec,
+    LayerSpec,
+    MoESpec,
+    ShapeConfig,
+    SHAPES,
+    SSMSpec,
+    shape_applicable,
+)
+
+_MODULES = {
+    "arctic-480b": "arctic_480b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "granite-8b": "granite_8b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen2-72b": "qwen2_72b",
+    "smollm-135m": "smollm_135m",
+    "musicgen-large": "musicgen_large",
+    "rwkv6-7b": "rwkv6_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def get(name: str) -> ArchConfig:
+    try:
+        mod = _MODULES[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}") from None
+    return import_module(f".{mod}", __package__).CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get(n) for n in ARCH_NAMES}
+
+
+__all__ = [
+    "ArchConfig",
+    "FTSpec",
+    "LayerSpec",
+    "MoESpec",
+    "SSMSpec",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_NAMES",
+    "get",
+    "all_configs",
+    "shape_applicable",
+]

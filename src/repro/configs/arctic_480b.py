@@ -1,0 +1,25 @@
+"""Snowflake Arctic 480B: 128-expert top-2 MoE with a dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base; hf].  56 heads do not divide the
+16-way model axis -> attention is replicated across `model` (MoE/MLP soak
+the TP); noted in DESIGN.md.  400B-class: bf16 params + 8-bit Adam moments.
+"""
+
+from .base import ArchConfig, FTSpec, LayerSpec, MoESpec
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    moe=MoESpec(num_experts=128, top_k=2, dense_residual=True),
+    pattern=(LayerSpec("attn", "moe"),),
+    param_dtype="bfloat16",
+    optimizer="adamw8bit",
+    ft=FTSpec(C=1200.0, R=1200.0, predictor="paper-accurate"),
+    source="hf:Snowflake/snowflake-arctic-base",
+)

@@ -1,0 +1,18 @@
+"""IBM Granite 8B code model (llama arch) [arXiv:2405.04324; hf]."""
+
+from .base import ArchConfig, FTSpec, LayerSpec
+
+CONFIG = ArchConfig(
+    name="granite-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=49152,
+    rope_theta=1e7,
+    pattern=(LayerSpec("attn", "dense"),),
+    ft=FTSpec(C=120.0, R=120.0),
+    source="arXiv:2405.04324",
+)

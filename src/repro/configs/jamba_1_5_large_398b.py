@@ -1,0 +1,35 @@
+"""Jamba-1.5-large 398B: Mamba+attention 1:7 interleave, 16-expert top-2
+MoE on alternate layers [arXiv:2403.19887; hf].
+
+Block of 8 (repeated 9x = 72 layers): attention at position 4, Mamba
+elsewhere; MoE MLP on odd positions.  Hybrid -> long_500k applies (the
+9 attention layers decode linearly against their KV cache).
+400B-class: bf16 params + 8-bit Adam moments.
+"""
+
+from .base import ArchConfig, FTSpec, LayerSpec, MoESpec, SSMSpec
+
+_P = []
+for i in range(8):
+    mixer = "attn" if i == 4 else "mamba"
+    mlp = "moe" if i % 2 == 1 else "dense"
+    _P.append(LayerSpec(mixer, mlp))
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    moe=MoESpec(num_experts=16, top_k=2),
+    pattern=tuple(_P),
+    ssm=SSMSpec(d_state=16, d_conv=4, expand=2),
+    subquadratic=True,
+    param_dtype="bfloat16",
+    optimizer="adamw8bit",
+    ft=FTSpec(C=1200.0, R=1200.0),
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,24 @@
+"""MusicGen-large: decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+Backbone only; the EnCodec/conditioning frontend is a stub -- input_specs()
+provides precomputed conditioning frame embeddings (prefix of 64 frames).
+kv=32 == num_heads: full MHA.
+"""
+
+from .base import ArchConfig, FTSpec, LayerSpec
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    pattern=(LayerSpec("attn", "dense"),),
+    frontend="audio_frames",
+    frontend_prefix=64,
+    ft=FTSpec(C=60.0, R=60.0),
+    source="arXiv:2306.05284",
+)

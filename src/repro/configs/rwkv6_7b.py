@@ -1,0 +1,21 @@
+"""RWKV-6 (Finch) 7B: attention-free, data-dependent decay
+[arXiv:2404.05892; hf].  Sub-quadratic -> long_500k applies.
+64 WKV heads of dim 64."""
+
+from .base import ArchConfig, FTSpec, LayerSpec, SSMSpec
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,   # WKV heads (d_model / 64); attention-free
+    num_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    pattern=(LayerSpec("rwkv", "rwkv_cm"),),
+    ssm=SSMSpec(rwkv_head_dim=64, decay_lora=64),
+    subquadratic=True,
+    ft=FTSpec(C=120.0, R=120.0),
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,20 @@
+"""SmolLM-135M (llama arch, tied embeddings)
+[hf:HuggingFaceTB/SmolLM-135M; hf].  9 heads -> attention replicated
+across the model axis."""
+
+from .base import ArchConfig, FTSpec, LayerSpec
+
+CONFIG = ArchConfig(
+    name="smollm-135m",
+    family="dense",
+    num_layers=30,
+    d_model=576,
+    num_heads=9,
+    num_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+    pattern=(LayerSpec("attn", "dense"),),
+    ft=FTSpec(C=10.0, R=10.0),
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

@@ -1,0 +1,71 @@
+"""Core of the reproduction: the paper's analytical models and simulator.
+
+Aupy, Robert, Vivien, Zaidouni — "Impact of fault prediction on
+checkpointing strategies" (2012).
+
+Modules:
+  events      fault/prediction traces, rate identities (Section 2)
+  waste       closed-form waste models, Eqs (1)(3)(4)(5)(6) (Sections 3-4)
+  periods     optimal periods T_Y / T_1 / T_P, q in {0,1}, Eq (12) (Sections 3.3-4.3)
+  simulator   discrete-event engine reproducing Section 5
+  predictor   predictor presets (Table 3) and runtime interface
+"""
+
+from .events import (
+    Distribution,
+    EventTrace,
+    FaultEvent,
+    PredictionEvent,
+    exponential,
+    lognormal,
+    make_event_trace,
+    make_fault_trace,
+    mu_e,
+    mu_np,
+    mu_p,
+    uniform,
+    weibull,
+)
+from .periods import (
+    OptimalPolicy,
+    best_policy,
+    nockpt_dominates,
+    optimize_exact,
+    optimize_instant,
+    optimize_migration,
+    optimize_nockpt,
+    optimize_withckpt,
+    t_daly,
+    t_extr,
+    t_one,
+    t_p_extr,
+    t_p_opt,
+    t_young,
+)
+from .predictor import (
+    TABLE3_PREDICTORS,
+    OnlinePredictor,
+    SimulatedPredictor,
+    predictor_preset,
+)
+from .simulator import (
+    SimResult,
+    Strategy,
+    best_period_search,
+    simulate,
+    simulate_many,
+)
+from .waste import (
+    ALPHA,
+    Platform,
+    PredictorModel,
+    waste_checkpoint_only,
+    waste_exact,
+    waste_instant,
+    waste_migration,
+    waste_nockpt,
+    waste_withckpt,
+    waste_young,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

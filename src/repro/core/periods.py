@@ -1,0 +1,320 @@
+"""Optimal checkpointing periods (Sections 3.3, 3.4, 4.3 of the paper).
+
+The central result implemented here is the *unified period formula*
+
+    T_extr^{q} = sqrt( 2 mu C / (1 - r q) )
+
+which extends Young's T = sqrt(2 mu C) (and Daly's variant) to platforms
+with a fault predictor of recall ``r`` trusted with probability ``q``,
+together with the case analyses that clamp the period to its admissible
+domain and the proof-backed fact that the optimal ``q`` is always 0 or 1
+(the waste is affine in ``q``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from . import waste as W
+from .events import mu_e as _mu_e
+
+__all__ = [
+    "t_extr",
+    "t_young",
+    "t_daly",
+    "t_one",
+    "t_p_extr",
+    "t_p_opt",
+    "OptimalPolicy",
+    "optimize_exact",
+    "optimize_migration",
+    "optimize_instant",
+    "optimize_nockpt",
+    "optimize_withckpt",
+    "best_policy",
+    "nockpt_dominates",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Extremal and clamped periods
+# --------------------------------------------------------------------------- #
+def t_extr(mu: float, C: float, r: float = 0.0, q: float = 0.0) -> float:
+    """Unified extremal period T_extr^{q} = sqrt(2 mu C / (1 - r q)).
+
+    For r q -> 1 the period diverges: the predictor catches every fault and
+    is always trusted, so periodic checkpointing is useless (the caller
+    clamps to the admissible domain).
+    """
+    denom = 1.0 - r * q
+    if denom <= 0.0:
+        return math.inf
+    return math.sqrt(2.0 * mu * C / denom)
+
+
+def t_young(mu: float, C: float, alpha: float = W.ALPHA) -> float:
+    """T_Y = min(alpha mu, max(sqrt(2 mu C), C)) (Section 3.3).
+
+    Degenerate platforms where alpha*mu < C have an empty validity domain;
+    C is the least-bad admissible period (waste ~= 1 regardless)."""
+    return max(C, min(alpha * mu, max(math.sqrt(2.0 * mu * C), C)))
+
+
+def t_daly(mu: float, R: float, C: float) -> float:
+    """Daly's first-order refinement T = sqrt(2 (mu + R) C) [Daly 2004]."""
+    return math.sqrt(2.0 * (mu + R) * C)
+
+
+def t_one(
+    mu: float,
+    C: float,
+    r: float,
+    p: float,
+    I: float = 0.0,
+    alpha: float = W.ALPHA,
+) -> float:
+    """T_1 = min(alpha mu_e - I, max(sqrt(2 mu C / (1 - r)), C)).
+
+    The upper clamp uses the mean time between *events* (predictions of any
+    kind + unpredicted faults) minus the window length, per Section 4.3.
+    For I = 0 this is the Section 3.3 domain.
+    """
+    cap = alpha * _mu_e(mu, r, p) - I
+    cap = max(cap, C)  # degenerate platforms: keep the domain non-empty
+    return min(cap, max(t_extr(mu, C, r, 1.0), C))
+
+
+def t_p_extr(C: float, p: float, I: float, E_f: Optional[float] = None) -> float:
+    """Equation (7): T_P^extr = sqrt( ((1-p) I + p E_I^f) / p * C )."""
+    if E_f is None:
+        E_f = I / 2.0
+    K = ((1.0 - p) * I + p * E_f) / p
+    return math.sqrt(K * C)
+
+
+def t_p_opt(
+    C: float, p: float, I: float, E_f: Optional[float] = None
+) -> Optional[Tuple[float, int]]:
+    """Integer-partition proactive period (Section 4.3).
+
+    Returns ``(T_P, k)`` with ``k = I / T_P`` integer and ``T_P >= C``
+    minimizing WASTE_{T_P} = K C / T_P + T_P, or ``None`` when the window
+    cannot hold a checkpoint (I < C).
+    """
+    if E_f is None:
+        E_f = I / 2.0
+    if I < C or I <= 0.0:
+        return None
+    K = ((1.0 - p) * I + p * E_f) / p
+    te = t_p_extr(C, p, I, E_f)
+
+    def cost(tp: float) -> float:
+        return K * C / tp + tp
+
+    k_lo = max(1, math.floor(I / te)) if te > 0 else 1
+    candidates = []
+    for k in {k_lo, k_lo + 1}:
+        tp = I / k
+        if tp >= C:
+            candidates.append((cost(tp), tp, k))
+    if not candidates:
+        # every candidate shorter than C: largest feasible k with I/k >= C
+        k = max(1, math.floor(I / C))
+        tp = I / k
+        candidates.append((cost(tp), tp, k))
+    _, tp, k = min(candidates)
+    return tp, k
+
+
+# --------------------------------------------------------------------------- #
+# Full policy optimization
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class OptimalPolicy:
+    """Result of a waste minimization: the strategy's operating point."""
+
+    strategy: str
+    q: int  # 0 or 1 — affine-in-q argument, Section 3.3
+    T_R: float
+    waste: float
+    T_P: Optional[float] = None  # proactive period (WithCkptI only)
+    k_P: Optional[int] = None  # number of proactive periods in the window
+
+
+def _clamp(T: float, lo: float, hi: float) -> float:
+    hi = max(hi, lo)
+    return min(hi, max(T, lo))
+
+
+def _t0(mu, C, alpha, capped) -> float:
+    return t_young(mu, C, alpha) if capped else max(t_extr(mu, C), C)
+
+
+def _t1(mu, C, r, p, I, alpha, capped) -> float:
+    if capped:
+        return t_one(mu, C, r, p, I, alpha)
+    return max(t_extr(mu, C, r, 1.0), C)
+
+
+def optimize_exact(
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float = W.ALPHA,
+    capped: bool = False,
+) -> OptimalPolicy:
+    """Section 3.3 case analysis: min(WASTE_Y(T_Y), WASTE^{1}(T_1)).
+
+    ``capped=True`` restricts periods to the Section 3.2 validity domain
+    [C, alpha*mu_e].  The paper's own simulations (Section 5) use the
+    *uncapped* extremal periods — the capped model over-penalizes poor
+    precision (mu_e shrinks with false predictions), so uncapped is the
+    default here, matching the policy the paper validates."""
+    mu, C, D, R = platform.mu, platform.C, platform.D, platform.R
+    r, p = pred.recall, pred.precision
+
+    ty = _t0(mu, C, alpha, capped)
+    w0 = W.waste_exact(ty, 0.0, C, D, R, mu, r, p)
+
+    if r <= 0:
+        return OptimalPolicy("exact", 0, ty, min(w0, 1.0))
+
+    t1 = _t1(mu, C, r, p, 0.0, alpha, capped)
+    w1 = W.waste_exact(t1, 1.0, C, D, R, mu, r, p)
+    if w1 < w0:
+        return OptimalPolicy("exact", 1, t1, min(w1, 1.0))
+    return OptimalPolicy("exact", 0, ty, min(w0, 1.0))
+
+
+def optimize_migration(
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float = W.ALPHA,
+    capped: bool = False,
+) -> OptimalPolicy:
+    """Section 3.4: same case analysis with Equation (3)."""
+    mu, C, D, R = platform.mu, platform.C, platform.D, platform.R
+    M = platform.M if platform.M is not None else C
+    r, p = pred.recall, pred.precision
+
+    ty = _t0(mu, C, alpha, capped)
+    w0 = W.waste_migration(ty, 0.0, C, D, R, M, mu, r, p)
+    if r <= 0:
+        return OptimalPolicy("migration", 0, ty, min(w0, 1.0))
+    t1 = _t1(mu, C, r, p, 0.0, alpha, capped)
+    w1 = W.waste_migration(t1, 1.0, C, D, R, M, mu, r, p)
+    if w1 < w0:
+        return OptimalPolicy("migration", 1, t1, min(w1, 1.0))
+    return OptimalPolicy("migration", 0, ty, min(w0, 1.0))
+
+
+def _optimize_window(
+    strategy: str,
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float,
+    capped: bool = False,
+) -> OptimalPolicy:
+    mu, C, D, R = platform.mu, platform.C, platform.D, platform.R
+    r, p, I = pred.recall, pred.precision, pred.window
+    E_f = pred.e_f
+
+    # q = 0 branch is Young's waste with the window-reduced cap (Section 4.3).
+    if capped:
+        cap0 = max(alpha * _mu_e(mu, r, p) - I, C) if r > 0 else alpha * mu
+        t_r0 = _clamp(t_extr(mu, C), C, cap0)
+    else:
+        t_r0 = max(t_extr(mu, C), C)
+    w0 = W.waste_young(t_r0, C, D, R, mu)
+    best = OptimalPolicy(strategy, 0, t_r0, min(w0, 1.0))
+    if r <= 0:
+        return best
+
+    t_r1 = _t1(mu, C, r, p, I, alpha, capped)
+    if strategy == "instant":
+        w1 = W.waste_instant(t_r1, 1.0, C, D, R, mu, r, p, I, E_f)
+        cand = OptimalPolicy(strategy, 1, t_r1, min(w1, 1.0))
+    elif strategy == "nockpt":
+        w1 = W.waste_nockpt(t_r1, 1.0, C, D, R, mu, r, p, I, E_f)
+        cand = OptimalPolicy(strategy, 1, t_r1, min(w1, 1.0))
+    elif strategy == "withckpt":
+        tp = t_p_opt(C, p, I, E_f)
+        if tp is None:
+            return best  # window cannot hold a checkpoint
+        T_P, k = tp
+        w1 = W.waste_withckpt(t_r1, T_P, 1.0, C, D, R, mu, r, p, I, E_f)
+        cand = OptimalPolicy(strategy, 1, t_r1, min(w1, 1.0), T_P=T_P, k_P=k)
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(strategy)
+
+    return cand if cand.waste < best.waste else best
+
+
+def optimize_instant(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+    return _optimize_window("instant", platform, pred, alpha, capped)
+
+
+def optimize_nockpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+    return _optimize_window("nockpt", platform, pred, alpha, capped)
+
+
+def optimize_withckpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+    return _optimize_window("withckpt", platform, pred, alpha, capped)
+
+
+def two_level_periods(
+    mu: float,
+    C_m: float,
+    C_d: float,
+    f: float,
+    r: float = 0.0,
+    q: float = 0.0,
+) -> Tuple[float, float]:
+    """Optimal periods of the two-level model (see waste.waste_two_level).
+
+    Each tier's term is Young-shaped in its own period, so
+      T_m* = sqrt(2 mu C_m / ((1-rq) f))
+      T_d* = sqrt(2 mu C_d / ((1-rq)(1-f)))
+    (clamped so T_d >= T_m >= C_m — a disk checkpoint subsumes a memory
+    one)."""
+    denom = max(1.0 - r * q, 1e-12)
+    t_m = math.sqrt(2.0 * mu * C_m / (denom * max(f, 1e-12)))
+    t_d = math.sqrt(2.0 * mu * C_d / (denom * max(1.0 - f, 1e-12)))
+    t_m = max(t_m, C_m)
+    t_d = max(t_d, t_m)
+    return t_m, t_d
+
+
+def nockpt_dominates(
+    C: float, p: float, I: float, E_f: Optional[float] = None
+) -> bool:
+    """Equation (12): sufficient condition for NoCkptI <= WithCkptI.
+
+    2 sqrt( ((1-p) I + p E_f) / p * C ) >= E_f.
+    Under the uniform assumption (E_f = I/2) this reduces to
+    I <= 16 (1 - p/2) C / p.
+    """
+    if E_f is None:
+        E_f = I / 2.0
+    return 2.0 * t_p_extr(C, p, I, E_f) >= E_f
+
+
+def best_policy(
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float = W.ALPHA,
+    capped: bool = False,
+) -> OptimalPolicy:
+    """The paper's final recipe (Section 4.3 Summary): evaluate every
+    strategy at its own optimum and keep the best; when Equation (12)
+    holds, WithCkptI cannot beat NoCkptI and is pruned."""
+    if pred.window <= 0.0:
+        return optimize_exact(platform, pred, alpha, capped)
+    cands = [
+        optimize_instant(platform, pred, alpha, capped),
+        optimize_nockpt(platform, pred, alpha, capped),
+    ]
+    if not nockpt_dominates(platform.C, pred.precision, pred.window, pred.e_f):
+        cands.append(optimize_withckpt(platform, pred, alpha, capped))
+    return min(cands, key=lambda pol: pol.waste)

@@ -1,0 +1,446 @@
+"""Discrete-event simulator for checkpointing strategies under fault traces.
+
+Faithful re-implementation of the paper's Section 5 simulation engine:
+
+* a job of ``work`` seconds of useful compute executes on a platform with
+  checkpoint cost C, downtime D, recovery R;
+* faults and (true/false) predictions arrive from an :class:`EventTrace`;
+* a strategy decides the regular period T_R, whether to trust predictions
+  (probability q), and what to do inside a prediction window (Instant /
+  NoCkptI / WithCkptI), or to migrate (Section 3.4);
+* the simulator reports the makespan and the empirical waste
+  ``1 - work / makespan``.
+
+The engine mirrors Algorithm 1 of the paper, including the W_reg bookkeeping
+(work credited toward the interrupted regular period is preserved across
+proactive episodes, and the "no time for an extra checkpoint" path credits
+only ``max(0, t0 - C - ckpt_end)``, per line 12).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .events import Distribution, EventTrace, exponential, make_event_trace
+from .waste import Platform, PredictorModel
+from . import periods as P
+
+#: absolute time tolerance (seconds) — periods are O(10^3) s, so 1 us is
+#: far below any modelled quantity yet far above float64 residuals.
+_EPS = 1e-6
+
+__all__ = [
+    "Strategy",
+    "young",
+    "daly",
+    "exact_prediction",
+    "instant",
+    "nockpt",
+    "withckpt",
+    "migration",
+    "SimResult",
+    "simulate",
+    "simulate_many",
+    "best_period_search",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Strategy descriptions
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Strategy:
+    """An operating point of the scheduling algorithm.
+
+    mode:
+      "none"      ignore all predictions (Young / Daly / BestPeriod baselines)
+      "exact"     Section 3 — proactive checkpoint right before the predicted
+                  date (for window traces: act on t0, return to regular; this
+                  is also the Instant strategy of Section 4)
+      "nockpt"    Section 4 — no checkpoints inside the window
+      "withckpt"  Section 4 — proactive period T_P inside the window
+      "migration" Section 3.4 — migrate (cost M) instead of checkpointing
+    """
+
+    name: str
+    T_R: float
+    q: float = 0.0
+    mode: str = "none"
+    T_P: Optional[float] = None
+
+
+def young(platform: Platform) -> Strategy:
+    """Uncapped Young period sqrt(2 mu C) (the simulation baseline)."""
+    return Strategy("Young", P.t_extr(platform.mu, platform.C), q=0.0, mode="none")
+
+
+def daly(platform: Platform) -> Strategy:
+    return Strategy(
+        "Daly", P.t_daly(platform.mu, platform.R, platform.C), q=0.0, mode="none"
+    )
+
+
+def _t1(platform: Platform, pred: PredictorModel) -> float:
+    """Uncapped T_extr^{1} = sqrt(2 mu C / (1 - r)) — Section 5 uses the
+    uncapped value to mimic a real execution."""
+    return P.t_extr(platform.mu, platform.C, pred.recall, 1.0)
+
+
+def exact_prediction(platform: Platform, pred: PredictorModel) -> Strategy:
+    return Strategy("ExactPrediction", _t1(platform, pred), q=1.0, mode="exact")
+
+
+def instant(platform: Platform, pred: PredictorModel) -> Strategy:
+    return Strategy("Instant", _t1(platform, pred), q=1.0, mode="exact")
+
+
+def nockpt(platform: Platform, pred: PredictorModel) -> Strategy:
+    return Strategy("NoCkptI", _t1(platform, pred), q=1.0, mode="nockpt")
+
+
+def withckpt(platform: Platform, pred: PredictorModel) -> Strategy:
+    tp = P.t_p_opt(platform.C, pred.precision, pred.window, pred.e_f)
+    if tp is None:  # window cannot hold a checkpoint: degenerate to NoCkptI
+        return Strategy("WithCkptI", _t1(platform, pred), q=1.0, mode="nockpt")
+    return Strategy(
+        "WithCkptI", _t1(platform, pred), q=1.0, mode="withckpt", T_P=tp[0]
+    )
+
+
+def migration(platform: Platform, pred: PredictorModel) -> Strategy:
+    return Strategy("Migration", _t1(platform, pred), q=1.0, mode="migration")
+
+
+# --------------------------------------------------------------------------- #
+# Simulation engine
+# --------------------------------------------------------------------------- #
+@dataclass
+class SimResult:
+    makespan: float
+    work: float
+    n_faults: int
+    n_proactive_ckpts: int
+    n_regular_ckpts: int
+    n_migrations: int
+    trace_exhausted: bool = False
+
+    @property
+    def waste(self) -> float:
+        return 1.0 - self.work / self.makespan
+
+
+class _Engine:
+    def __init__(
+        self,
+        work: float,
+        platform: Platform,
+        strategy: Strategy,
+        trace: EventTrace,
+        rng: np.random.Generator,
+    ):
+        self.W = work
+        self.C = platform.C
+        self.D = platform.D
+        self.R = platform.R
+        self.M = platform.M if platform.M is not None else platform.C
+        self.strat = strategy
+        self.t = 0.0
+        self.saved = 0.0
+        self.unsaved = 0.0
+        self.period_work = 0.0
+        self.done = False
+        self.n_faults = 0
+        self.n_pro = 0
+        self.n_reg = 0
+        self.n_mig = 0
+
+        self.fault_times: List[float] = [f.time for f in trace.faults]
+        self.fi = 0
+        # Trust decisions are drawn per prediction (probability q).
+        preds = trace.predictions
+        if strategy.mode == "none" or strategy.q <= 0.0:
+            self.preds = []
+        elif strategy.q >= 1.0:
+            self.preds = list(preds)
+        else:
+            self.preds = [pr for pr in preds if rng.random() < strategy.q]
+        self.pi = 0
+        self.horizon = trace.horizon
+        self.exhausted = False
+
+    # -- event peeking ------------------------------------------------------ #
+    def _next_fault(self) -> float:
+        while self.fi < len(self.fault_times) and self.fault_times[self.fi] < self.t:
+            # fault during downtime/recovery: recovery restarts
+            f = self.fault_times[self.fi]
+            if f >= self.t - (self.D + self.R):
+                self.n_faults += 1
+                self.t = f + self.D + self.R
+            self.fi += 1
+        return (
+            self.fault_times[self.fi] if self.fi < len(self.fault_times) else math.inf
+        )
+
+    def _next_action(self) -> float:
+        """Time at which the next trusted prediction requires action."""
+        lead = self.M if self.strat.mode == "migration" else self.C
+        while self.pi < len(self.preds) and self.preds[self.pi].t0 - lead < self.t:
+            self.pi += 1  # too late to act on this prediction
+        if self.pi >= len(self.preds):
+            return math.inf
+        return self.preds[self.pi].t0 - lead
+
+    # -- primitive timeline operations -------------------------------------- #
+    def _handle_fault(self, t_fault: float) -> None:
+        self.n_faults += 1
+        self.unsaved = 0.0
+        self.period_work = 0.0
+        self.t = t_fault + self.D + self.R
+
+    def _work_until(self, t_target: float, credit_period: bool = True) -> bool:
+        """Perform useful work from self.t to t_target.
+
+        Caps at job completion.  Returns True if a fault interrupted."""
+        remaining = self.W - self.saved - self.unsaved
+        t_target = min(t_target, self.t + remaining)
+        nf = self._next_fault()
+        if nf <= t_target:
+            self.fi += 1
+            self._handle_fault(nf)
+            return True
+        dt = t_target - self.t
+        self.unsaved += dt
+        if credit_period:
+            self.period_work += dt
+        self.t = t_target
+        if self.saved + self.unsaved >= self.W - _EPS:
+            self.done = True
+        return False
+
+    def _idle_until(self, t_target: float) -> bool:
+        """Idle (no useful work) until t_target.  True if faulted."""
+        nf = self._next_fault()
+        if nf <= t_target:
+            self.fi += 1
+            self._handle_fault(nf)
+            return True
+        self.t = t_target
+        return False
+
+    def _checkpoint(self, proactive: bool) -> bool:
+        """Take a checkpoint; returns True if a fault aborted it.
+
+        A fault at the exact completion instant does *not* abort the
+        checkpoint (this realizes the exact-date prediction semantics where
+        the checkpoint completes right when the fault strikes)."""
+        end = self.t + self.C
+        nf = self._next_fault()
+        if nf < end:
+            self.fi += 1
+            self._handle_fault(nf)
+            return True
+        self.t = end
+        self.saved += self.unsaved
+        self.unsaved = 0.0
+        if proactive:
+            self.n_pro += 1
+        else:
+            self.n_reg += 1
+            self.period_work = 0.0
+        return False
+
+    # -- proactive episodes (Section 4 strategies) --------------------------- #
+    def _episode(self, pred) -> None:
+        """Handle one trusted prediction, starting at t = t0 - C (or later if
+        a regular checkpoint was running at the action point)."""
+        t0, I = pred.t0, pred.window
+        mode = self.strat.mode
+
+        if mode == "migration":
+            # Migrate during [t0 - M, t0]; the predicted fault (if real)
+            # hits the *vacated* node, so it is cancelled up front — the
+            # migration completes right when the fault was due (Section
+            # 3.4); other faults can still interrupt the migration.
+            if pred.fault_time is not None and pred.fault_time >= self.t:
+                try:
+                    idx = self.fault_times.index(pred.fault_time, self.fi)
+                    self.fault_times.pop(idx)
+                except ValueError:
+                    pass
+            if self._idle_until(t0):
+                return
+            self.n_mig += 1
+            return
+
+        # Pre-window checkpoint, as late as possible (Figure 1(a)).
+        if self.t <= t0 - self.C:
+            if self.t < t0 - self.C:
+                if self._work_until(t0 - self.C):
+                    return
+                if self.done:
+                    return
+            if self._checkpoint(proactive=True):
+                return
+        else:
+            # no time for the extra checkpoint (Figure 1(b)): work until t0,
+            # crediting only max(0, t0 - C - now) to the period (Alg. 1 l.12)
+            credit_until = max(self.t, t0 - self.C)
+            if self._work_until(credit_until, credit_period=True):
+                return
+            if not self.done and self._work_until(t0, credit_period=False):
+                return
+            if self.done:
+                return
+
+        if mode == "exact":
+            return  # Instant: straight back to regular mode at t0
+
+        if mode == "nockpt":
+            self._work_until(t0 + I, credit_period=False)
+            return
+
+        if mode == "withckpt":
+            T_P = self.strat.T_P or max(self.C, I)
+            end = t0 + I
+            while self.t < end - _EPS and not self.done:
+                seg = min(self.t + (T_P - self.C), end - self.C)
+                if seg > self.t:
+                    if self._work_until(seg, credit_period=False):
+                        return
+                    if self.done:
+                        return
+                if self._checkpoint(proactive=True):
+                    return
+            return
+
+        raise ValueError(f"unknown mode {mode!r}")  # pragma: no cover
+
+    # -- main loop ----------------------------------------------------------- #
+    def run(self) -> SimResult:
+        T_R, C = self.strat.T_R, self.C
+        work_per_period = max(T_R - C, 1e-9)
+        guard = 0
+        while not self.done:
+            guard += 1
+            if guard > 50_000_000:  # pragma: no cover
+                raise RuntimeError("simulator did not converge")
+            if self.t > self.horizon:
+                self.exhausted = True
+            na = self._next_action()
+            remaining_to_ckpt = work_per_period - self.period_work
+
+            if remaining_to_ckpt <= _EPS:
+                # Regular checkpoint due.  If the action point falls inside
+                # the checkpoint, Algorithm 1's "no time" path applies: the
+                # episode starts right after this checkpoint completes.
+                if self._checkpoint(proactive=False):
+                    continue
+                if na <= self.t and self.pi < len(self.preds):
+                    pred = self.preds[self.pi]
+                    self.pi += 1
+                    if pred.t0 >= self.t - 1e-9:
+                        self._episode(pred)
+                continue
+
+            # Work segment until the next regular checkpoint.
+            seg_end = self.t + remaining_to_ckpt
+            if na < seg_end:
+                if self._work_until(na):
+                    continue
+                if self.done:
+                    break
+                pred = self.preds[self.pi]
+                self.pi += 1
+                self._episode(pred)
+                continue
+            if self._work_until(seg_end):
+                continue
+
+        return SimResult(
+            makespan=self.t,
+            work=self.W,
+            n_faults=self.n_faults,
+            n_proactive_ckpts=self.n_pro,
+            n_regular_ckpts=self.n_reg,
+            n_migrations=self.n_mig,
+            trace_exhausted=self.exhausted,
+        )
+
+
+def simulate(
+    work: float,
+    platform: Platform,
+    strategy: Strategy,
+    trace: EventTrace,
+    rng: Optional[np.random.Generator] = None,
+) -> SimResult:
+    rng = rng or np.random.default_rng(0)
+    return _Engine(work, platform, strategy, trace, rng).run()
+
+
+def simulate_many(
+    work: float,
+    platform: Platform,
+    strategy: Strategy,
+    pred: PredictorModel,
+    n_runs: int = 100,
+    seed: int = 0,
+    fault_dist: Optional[Distribution] = None,
+    false_pred_dist: Optional[Distribution] = None,
+    horizon_factor: float = 12.0,
+    n_components: Optional[int] = None,
+    stationary: bool = False,
+) -> List[SimResult]:
+    """Average behaviour over ``n_runs`` random traces (paper: 100 runs).
+
+    ``n_components`` switches the fault trace from a single renewal stream
+    to the superposition of per-component renewals (see events.py)."""
+    results = []
+    for i in range(n_runs):
+        rng = np.random.default_rng(seed + 1000 * i + 17)
+        trace = make_event_trace(
+            rng,
+            horizon=horizon_factor * work,
+            mtbf=platform.mu,
+            recall=pred.recall if strategy.mode != "none" else 0.0,
+            precision=pred.precision,
+            window=pred.window,
+            lead=pred.lead,
+            fault_dist=fault_dist or exponential(),
+            false_pred_dist=false_pred_dist,
+            n_components=n_components,
+            stationary=stationary,
+        )
+        results.append(simulate(work, platform, strategy, trace, rng))
+    return results
+
+
+def best_period_search(
+    work: float,
+    platform: Platform,
+    base: Strategy,
+    pred: PredictorModel,
+    n_runs: int = 20,
+    seed: int = 0,
+    fault_dist: Optional[Distribution] = None,
+    grid: Sequence[float] = (0.25, 0.4, 0.6, 0.8, 1.0, 1.25, 1.6, 2.0, 3.0, 4.0),
+) -> tuple[float, float]:
+    """BestPeriod counterpart (Section 5): brute-force the regular period.
+
+    Returns ``(best_T_R, best_mean_waste)``."""
+    best_t, best_w = base.T_R, math.inf
+    for m in grid:
+        t_r = max(platform.C * 1.01, base.T_R * m)
+        strat = Strategy(base.name, t_r, base.q, base.mode, base.T_P)
+        res = simulate_many(
+            work, platform, strat, pred, n_runs=n_runs, seed=seed,
+            fault_dist=fault_dist,
+        )
+        w = float(np.mean([r.waste for r in res]))
+        if w < best_w:
+            best_t, best_w = t_r, w
+    return best_t, best_w

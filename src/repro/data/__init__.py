@@ -1,0 +1,5 @@
+"""Data substrate: deterministic synthetic LM pipeline with host prefetch."""
+
+from .pipeline import SyntheticLMDataset, PrefetchIterator
+
+__all__ = ["SyntheticLMDataset", "PrefetchIterator"]

@@ -1,0 +1,19 @@
+"""Fault-tolerance runtime: the paper's prediction-aware checkpointing
+policy driving a real training loop, plus fault injection, elastic
+migration and straggler mitigation."""
+
+from .executor import FaultTolerantExecutor, RunReport, SimClock, WallClock, WasteLedger
+from .injection import FaultInjector, SimulatedFault
+from .elastic import ElasticManager, StragglerDetector
+
+__all__ = [
+    "FaultTolerantExecutor",
+    "RunReport",
+    "SimClock",
+    "WallClock",
+    "WasteLedger",
+    "FaultInjector",
+    "SimulatedFault",
+    "ElasticManager",
+    "StragglerDetector",
+]

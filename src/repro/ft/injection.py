@@ -1,0 +1,54 @@
+"""Fault injection for the executor.
+
+Real fleet faults land as SIGTERMs / slice-health events between or during
+steps; here they surface as :class:`SimulatedFault` raised at step
+boundaries when the (simulated or wall) clock crosses a fault time from an
+:class:`EventTrace` — the same trace generator the paper's simulator uses,
+so executor behaviour is directly comparable to the analytic model.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..core.events import EventTrace
+
+__all__ = ["SimulatedFault", "FaultInjector"]
+
+
+class SimulatedFault(RuntimeError):
+    def __init__(self, time: float, predicted: bool):
+        super().__init__(f"injected fault at t={time:.1f}s (predicted={predicted})")
+        self.time = time
+        self.predicted = predicted
+
+
+class FaultInjector:
+    """Raises when execution crosses the next fault time."""
+
+    def __init__(self, trace: EventTrace, cancelled: Optional[set] = None):
+        self.fault_times: List[float] = [f.time for f in trace.faults]
+        self.predicted = [f.predicted for f in trace.faults]
+        self._i = 0
+        self.cancelled = cancelled if cancelled is not None else set()
+
+    def cancel(self, fault_time: float) -> None:
+        """Migration vacated the node: this fault no longer hits us."""
+        self.cancelled.add(fault_time)
+
+    def peek(self) -> Optional[float]:
+        while self._i < len(self.fault_times) and (
+            self.fault_times[self._i] in self.cancelled
+        ):
+            self._i += 1
+        if self._i >= len(self.fault_times):
+            return None
+        return self.fault_times[self._i]
+
+    def check(self, now: float) -> None:
+        """Raise if a fault occurred at or before ``now``."""
+        nxt = self.peek()
+        if nxt is not None and nxt <= now:
+            predicted = self.predicted[self._i]
+            self._i += 1
+            raise SimulatedFault(nxt, predicted)

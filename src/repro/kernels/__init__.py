@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+<name>.py   pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+ops.py      jit'd wrappers (layout + GQA handling + interpret fallback)
+ref.py      pure-jnp oracles the kernels are validated against
+"""

@@ -1,0 +1,100 @@
+"""Flash-decode kernel: one query token against a long KV cache (Pallas, TPU).
+
+Decode is bandwidth-bound: the cost is reading the KV cache once.  The
+kernel streams (blk_k x hd) cache tiles HBM->VMEM on a sequential grid and
+maintains the online-softmax state for the single query row in VMEM
+scratch.  Cache positions beyond ``pos`` (the current length) are masked —
+``pos`` arrives via scalar prefetch (SMEM), so the same compiled kernel
+serves every decode step.
+
+Layout: (BH, hd) query, (BH, S_max, hd) cache, GQA pre-broadcast in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["decode_attention_bhd"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, blk_k):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    # skip tiles entirely beyond the live cache
+    @pl.when(ki * blk_k <= pos)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)  # (1, hd)
+        k = k_ref[0].astype(jnp.float32)  # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (1, blk_k)
+        cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention_bhd(
+    q: jax.Array,  # (BH, hd)
+    k: jax.Array,  # (BH, S_max, hd)
+    v: jax.Array,
+    pos: jax.Array,  # scalar int32: index of the newest valid cache entry
+    *,
+    blk_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, hd = k.shape
+    blk_k = min(blk_k, S)
+    assert S % blk_k == 0
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, S // blk_k)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_decode_kernel, scale=scale, blk_k=blk_k)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, hd), lambda b, ki, pos_ref: (b, 0)),
+                pl.BlockSpec((1, blk_k, hd), lambda b, ki, pos_ref: (b, ki, 0)),
+                pl.BlockSpec((1, blk_k, hd), lambda b, ki, pos_ref: (b, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, hd), lambda b, ki, pos_ref: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, hd), q.dtype),
+        interpret=interpret,
+    )(pos.reshape(1).astype(jnp.int32), q, k, v)

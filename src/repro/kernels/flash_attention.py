@@ -1,0 +1,126 @@
+"""Causal flash-attention forward kernel (Pallas, TPU).
+
+Design (TPU-native, not a CUDA port):
+* inputs are pre-flattened to (BH, S, head_dim) — GQA is resolved in the
+  ops wrapper by broadcasting KV heads, so the kernel sees plain MHA;
+* 3D grid (BH, q_blocks, kv_blocks); the kv dimension is innermost and
+  TPU grids execute sequentially, so the online-softmax running state
+  (m, l, acc) lives in VMEM scratch carried across kv steps;
+* BlockSpecs stream (blk_q x hd) Q tiles and (blk_k x hd) KV tiles
+  HBM->VMEM; with blk_q = blk_k = 512 and hd = 128 the working set is
+  ~0.8 MB << 16 MB VMEM, and all matmul dims are multiples of the 128-wide
+  MXU;
+* fully-masked causal blocks are skipped via pl.when on the block index
+  (upper-triangle blocks cost nothing but the grid step).
+
+Validated against ref.flash_attention_ref in interpret mode over
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_bhsd"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, blk_q, blk_k
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # block (qi, ki) is fully masked iff ki*blk_k > qi*blk_q + blk_q - 1
+        run = ki * blk_k <= qi * blk_q + blk_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (blk_q, hd)
+        k = k_ref[0].astype(jnp.float32)  # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))
+        ) * scale  # (blk_q, blk_k)
+        if causal:
+            rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ()))
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (BH, S, hd)
+    k: jax.Array,  # (BH, T, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    blk_q: int = 512,
+    blk_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    assert S % blk_q == 0 and T % blk_k == 0, (S, T, blk_q, blk_k)
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, S // blk_q, T // blk_k)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, blk_q=blk_q, blk_k=blk_k
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pl.MemorySpace.ANY if False else _vmem((blk_q, 1), jnp.float32),
+            _vmem((blk_q, 1), jnp.float32),
+            _vmem((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

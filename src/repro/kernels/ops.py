@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model-facing layouts in, kernel layouts out:
+* GQA broadcast (KV heads -> query heads) happens here, so the kernels see
+  plain MHA (BH, S, hd);
+* on non-TPU backends the kernels run in interpret mode (exact semantics,
+  Python-speed — used by the test suite); the TPU runtime compiles the
+  real Mosaic kernels.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as ref_mod
+from .ckpt_codec import dequantize_blocks, quantize_blocks
+from .decode_attention import decode_attention_bhd
+from .flash_attention import flash_attention_bhsd
+from .rwkv6 import wkv6_bhsd
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "wkv6",
+    "quantize_checkpoint",
+    "dequantize_checkpoint",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 512, blk_k: int = 512):
+    """q,k,v: (B, S, H, hd) with identical head counts (GQA pre-broadcast
+    by the caller — models/layers.py does this)."""
+    B, S, H, hd = q.shape
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, k.shape[1], hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, v.shape[1], hd)
+    of = flash_attention_bhsd(
+        qf, kf, vf, causal=causal, blk_q=blk_q, blk_k=blk_k, interpret=_interpret()
+    )
+    return jnp.moveaxis(of.reshape(B, H, S, hd), 1, 2)
+
+
+def decode_attention(q, k, v, pos, *, blk_k: int = 512):
+    """q: (B, 1, H, hd); k,v caches: (B, S_max, H, hd) (GQA pre-broadcast)."""
+    B, _, H, hd = q.shape
+    S = k.shape[1]
+    qf = q[:, 0].reshape(B * H, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+    of = decode_attention_bhd(qf, kf, vf, pos, blk_k=blk_k, interpret=_interpret())
+    return of.reshape(B, 1, H, hd)
+
+
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd); s0: (B, H, hd, hd)."""
+    B, S, H, hd = r.shape
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, S, hd)
+
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    s0f = s0.reshape(B * H, hd, hd)
+    yf, sTf = wkv6_bhsd(
+        flat(r), flat(k), flat(v), flat(w), uf, s0f, chunk=chunk,
+        interpret=_interpret(),
+    )
+    y = jnp.moveaxis(yf.reshape(B, H, S, hd), 1, 2)
+    return y, sTf.reshape(B, H, hd, hd)
+
+
+def quantize_checkpoint(x, prev=None, *, tile: int = 512):
+    """Flat f32 array -> (int8 blocks, scales, original size)."""
+    n = x.size
+    pad = (-n) % 256
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad)).reshape(-1, 256)
+    p = None
+    if prev is not None:
+        p = jnp.pad(prev.reshape(-1).astype(jnp.float32), (0, pad)).reshape(-1, 256)
+    nb = flat.shape[0]
+    t = tile
+    while nb % t:
+        t //= 2
+    q, s = quantize_blocks(flat, p, tile=max(t, 1), interpret=_interpret())
+    return q, s, n
+
+
+def dequantize_checkpoint(q, s, n, shape, prev=None, *, tile: int = 512):
+    p = None
+    if prev is not None:
+        pad = (-prev.size) % 256
+        p = jnp.pad(prev.reshape(-1).astype(jnp.float32), (0, pad)).reshape(-1, 256)
+    nb = q.shape[0]
+    t = tile
+    while nb % t:
+        t //= 2
+    x = dequantize_blocks(q, s, p, tile=max(t, 1), interpret=_interpret())
+    return x.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "wkv6_ref",
+    "quantize_ref",
+    "dequantize_ref",
+]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (BH, S, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    if causal:
+        S, T = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q: (BH, hd); k,v: (BH, S, hd); pos: scalar newest valid index."""
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bd,bkd->bk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    valid = jnp.arange(k.shape[1])[None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Exact per-token WKV6.  r,k,v,w: (BH,S,hd); u: (BH,hd); s0: (BH,hd,hd)."""
+    rt = jnp.moveaxis(r.astype(jnp.float32), 1, 0)
+    kt = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vt = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    wt = jnp.moveaxis(w.astype(jnp.float32), 1, 0)
+    u = u.astype(jnp.float32)
+
+    def step(s, inp):
+        ri, ki, vi, wi = inp
+        kv = ki[:, :, None] * vi[:, None, :]
+        y = jnp.einsum("bi,bij->bj", ri, s + u[:, :, None] * kv)
+        s = wi[:, :, None] * s + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rt, kt, vt, wt))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), sT
+
+
+def quantize_ref(x, prev=None):
+    """x: (n_blocks, 256) f32 -> (int8, scales (n_blocks,1))."""
+    base = x.astype(jnp.float32)
+    if prev is not None:
+        base = base - prev.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(base), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(base / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, s, prev=None):
+    x = q.astype(jnp.float32) * s
+    if prev is not None:
+        x = x + prev.astype(jnp.float32)
+    return x

@@ -1,0 +1,109 @@
+"""WKV6 recurrence kernel (RWKV-6 "Finch" time mix) — Pallas, TPU.
+
+The recurrence per head (state S in R^{hd_k x hd_v}):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Data-dependent per-channel decays ``w_t`` make the textbook chunked-matmul
+factorization numerically unsafe (exp(-sum log w) overflows for
+fast-decay channels), so the TPU design keeps the *state resident in VMEM
+scratch* across a sequential chunk grid and streams (chunk x hd) r/k/v/w
+tiles HBM->VMEM per step; inside a chunk an exact fori loop performs the
+per-token rank-1 updates on VREGs.  This is bandwidth-optimal (each input
+element is read once; the O(hd^2) state never leaves VMEM) — the right
+target for a memory-bound linear-recurrence layer — while remaining exact.
+
+Layout: (BH, S, hd) inputs; state (BH, hd, hd); grid (BH, S / chunk).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wkv6_bhsd"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scr, *, chunk):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # (chunk, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)  # (1, hd) — keep 2-D so u.T is (hd, 1)
+
+    def step(t, carry):
+        s, y = carry
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)  # (1, hd)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = kt.T @ vt  # (hd_k, hd_v) rank-1
+        yt = rt @ (s + u.T * kv)  # (1, hd_v)
+        s = wt.T * s + kv
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt, t, 0)
+        return s, y
+
+    s, y = jax.lax.fori_loop(
+        0, chunk, step, (s_scr[...], jnp.zeros_like(r))
+    )
+    s_scr[...] = s
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _out():
+        sT_ref[0] = s_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6_bhsd(
+    r: jax.Array,  # (BH, S, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decays in (0, 1)
+    u: jax.Array,  # (BH, hd) bonus
+    s0: jax.Array,  # (BH, hd, hd) initial state
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y (BH,S,hd), final state (BH,hd,hd))."""
+    BH, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    grid = (BH, S // chunk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_wkv_kernel, chunk=chunk)
+    y, sT = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, hd), lambda b, ci: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sT

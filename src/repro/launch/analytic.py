@@ -1,0 +1,60 @@
+"""Analytic FLOP/byte models per (arch x shape) — the roofline cross-check.
+
+MODEL_FLOPS follows the assignment: 6*N*D for training (N = params, D =
+tokens), 6*N_active*D for MoE; serve steps use 2*N(_active)*tokens.
+Attention's quadratic term (not part of 6ND) is reported separately so the
+HLO-vs-model ratio isolates remat/redundancy waste rather than attention
+bookkeeping.
+
+The byte model estimates per-step HBM traffic per device (weights, moments,
+activations at the remat policy's granularity, KV/state caches) — used as
+a sanity band around the HLO-derived bytes, not as the primary number.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+__all__ = ["model_flops", "attention_flops", "analytic_summary"]
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Assignment MODEL_FLOPS (global, per step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def attention_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Quadratic attention term (global, per step), excluded from 6ND."""
+    n_attn = sum(1 for s in cfg.pattern if s.mixer == "attn") * cfg.n_repeats
+    if n_attn == 0:
+        return 0.0
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # fwd QK^T + AV = 4*B*S^2*H*hd; backward ~2x fwd
+        return 3.0 * 4.0 * B * S * S * H * hd * n_attn
+    if shape.kind == "prefill":
+        return 4.0 * B * S * S * H * hd * n_attn
+    # decode: one query against S cache entries
+    return 4.0 * B * S * H * hd * n_attn
+
+
+def analytic_summary(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return {
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "model_flops": model_flops(cfg, shape),
+        "attention_flops": attention_flops(cfg, shape),
+    }

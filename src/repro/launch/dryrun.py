@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable (e)).
+
+For every (architecture x input shape x mesh) cell:
+``jax.jit(step, in_shardings, out_shardings).lower(*input_specs).compile()``
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+The compiled artifact yields:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits);
+* ``cost_analysis()``    — XLA's own FLOP/byte counts (while-body-once,
+  kept for reference);
+* the while-aware HLO parse (hlo_analysis.py) — scan-corrected FLOPs,
+  bytes and collective wire bytes, from which the three roofline terms
+  are derived (hardware constants in hardware.py).
+
+Results are cached as JSON under results/dryrun/ so EXPERIMENTS.md and the
+benchmarks read from the cache instead of recompiling.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+"""
+
+import argparse
+import json
+from typing import Optional
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from ..configs.base import SHAPES, shape_applicable
+from ..models.layers import RuntimeFlags
+from . import hardware as hw
+from .analytic import analytic_summary
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .steps import (
+    build_decode_step,
+    build_model,
+    build_prefill_step,
+    build_train_step,
+    decode_arg_structs,
+    prefill_arg_structs,
+    train_arg_structs,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _flags_for(shape, overrides=None) -> RuntimeFlags:
+    kw = dict(
+        attn_impl="auto",
+        # training uses the chunked (flash-style) path from 4k up: dense
+        # scores at (B/dp, H/tp, S, S) f32 blow VMEM/HBM budgets
+        dense_attn_max=2048 if shape.kind == "train" else 8192,
+        kv_chunk=1024,
+        remat_policy="full" if shape.kind == "train" else "none",
+    )
+    if overrides:
+        kw.update(overrides)
+    return RuntimeFlags(**kw)
+
+
+def _pick_micro_batches(cfg, shape, mesh, budget_bytes: float = 4e9) -> int:
+    """Smallest microbatch count keeping the per-device saved-residual
+    stack (L x B_local/m x S x D x 2B) under ~4 GB."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_local = max(shape.global_batch // data, 1)
+    need = cfg.num_layers * b_local * shape.seq_len * cfg.d_model * 2
+    m = 1
+    while m < b_local and need / m > budget_bytes:
+        m *= 2
+    return min(m, b_local)
+
+
+def run_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    flag_overrides=None,
+    tag: str = "baseline",
+    save: bool = True,
+    micro_batches: Optional[int] = None,
+    rules_mode: str = "baseline",
+) -> dict:
+    cfg = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    flags = _flags_for(shape, flag_overrides)
+    model, rules = build_model(cfg, mesh, flags, rules_mode=rules_mode)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        if micro_batches is None:
+            micro_batches = _pick_micro_batches(cfg, shape, mesh)
+        step = build_train_step(model, micro_batches=micro_batches)
+        args, in_sh, out_sh = train_arg_structs(model, shape, rules)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(model, shape.seq_len)
+        args, in_sh, out_sh = prefill_arg_structs(model, shape, rules)
+        donate = ()
+    else:
+        step = build_decode_step(model)
+        args, in_sh, out_sh = decode_arg_structs(model, shape, rules)
+        donate = (1,)
+
+    with mesh:
+        lowered = jax.jit(
+            step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = analyze_hlo(compiled.as_text())
+
+    # ---- roofline terms (per assignment; chips x peak) -------------------- #
+    # parser numbers are per-device (the HLO is the per-device program)
+    t_comp = hlo.flops / hw.PEAK_FLOPS_BF16
+    t_mem = hlo.bytes / hw.HBM_BW
+    t_coll = hlo.collective_bytes / hw.ICI_BW
+    dominant = max(
+        [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    ana = analytic_summary(cfg, shape)
+    useful_frac = ana["model_flops"] / max(hlo.flops * n_chips, 1.0)
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "tag": tag,
+        "kind": shape.kind,
+        "micro_batches": micro_batches,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+            "fits_hbm": (
+                mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes
+            )
+            <= hw.HBM_BYTES,
+        },
+        "xla_cost_analysis": {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+        },
+        "hlo": hlo.as_dict(),
+        "analytic": ana,
+        "roofline": {
+            "t_compute_s": t_comp,
+            "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "step_lower_bound_s": max(t_comp, t_mem, t_coll),
+            "useful_flops_fraction": useful_frac,
+            "roofline_fraction": min(
+                1.0,
+                (ana["model_flops"] + ana["attention_flops"])
+                / (max(t_comp, t_mem, t_coll) * n_chips * hw.PEAK_FLOPS_BF16 + 1e-9),
+            ),
+        },
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fname = f"{arch_name}__{shape_name}__{result['mesh']}__{tag}.json"
+        with open(os.path.join(RESULTS_DIR, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def _fmt(result: dict) -> str:
+    if "skipped" in result:
+        return f"SKIP {result['arch']:24s} {result['shape']:12s} {result['skipped']}"
+    r = result["roofline"]
+    m = result["memory"]
+    return (
+        f"OK   {result['arch']:24s} {result['shape']:12s} {result['mesh']:8s} "
+        f"compile={result['t_compile_s']:6.1f}s "
+        f"mem/dev={m['peak_est_bytes']/2**30:6.2f}GiB fits={m['fits_hbm']} "
+        f"t_comp={r['t_compute_s']*1e3:8.2f}ms t_mem={r['t_memory_s']*1e3:8.2f}ms "
+        f"t_coll={r['t_collective_s']*1e3:8.2f}ms dom={r['dominant']:10s} "
+        f"useful={r['useful_flops_fraction']:.2f}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"])
+    ap.add_argument("--rules", default="baseline",
+                    choices=["baseline", "moe_stationary", "serve2d"])
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--attn", default=None, choices=["auto", "dense", "chunked"])
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.remat:
+        overrides["remat_policy"] = args.remat
+    if args.attn:
+        overrides["attn_impl"] = args.attn
+
+    archs = configs.ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    res = run_cell(arch, shape, mp, overrides or None, tag=args.tag,
+                                   rules_mode=args.rules, micro_batches=args.micro)
+                    print(_fmt(res), flush=True)
+                    if "skipped" not in res:
+                        print(
+                            "     memory_analysis:",
+                            {k: v for k, v in res["memory"].items()},
+                            flush=True,
+                        )
+                        print(
+                            "     cost_analysis:",
+                            res["xla_cost_analysis"],
+                            "| hlo(flops=%.3e bytes=%.3e coll=%.3e)"
+                            % (
+                                res["hlo"]["flops"],
+                                res["hlo"]["bytes"],
+                                res["hlo"]["collective_bytes"],
+                            ),
+                            flush=True,
+                        )
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {arch} {shape} multipod={mp}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""TPU v5e-class hardware constants for the roofline model (assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+VMEM_BYTES = 16 * 2**20  # ~16 MiB usable VMEM per core
+HBM_BYTES = 16 * 2**30  # 16 GiB HBM per chip
+
+CHIPS_PER_POD = 256  # 16 x 16

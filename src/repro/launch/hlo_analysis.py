@@ -1,0 +1,478 @@
+"""While-aware cost extraction from compiled HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts a ``while`` body **once**,
+which silently drops L-1 of L scanned layers (and every token of an SSM
+scan) from FLOP/byte totals.  This parser walks the HLO text instead:
+
+1. split the module into computations; build a per-computation symbol
+   table (op name -> output shape/dtype);
+2. build the call graph: ``while`` ops carry ``known_trip_count`` in their
+   backend_config (fallback: the loop-bound constant in the condition);
+   fusion/call/reduce bodies multiply by 1;
+3. propagate execution weights from ENTRY through the DAG;
+4. accumulate, per weighted computation:
+   * **flops** from ``dot`` ops (2 x prod(out) x prod(contracting dims)),
+     including dots inside fusion interiors;
+   * **bytes** from top-level op operands+outputs (fusion interiors
+     excluded — a fusion's HBM traffic is its operands/results), with
+     dynamic-slice/update fusions charged at slice size, matching real
+     per-iteration traffic of scanned stacked weights;
+   * **collective wire bytes** per op kind with ring-cost factors
+     (all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+     collective-permute 1), split by replica-group size so the roofline
+     can attribute traffic to mesh axes.
+
+This is the "profile" used for §Roofline and the §Perf hillclimb —
+structural, from the compiled artifact, as the assignment prescribes.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HLOCost", "analyze_hlo", "collective_summary"]
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE kind(rest' robustly.
+
+    TYPE is either a single shape token or a parenthesized tuple type that
+    may contain '/*index=N*/' comments — we match the tuple's parens by
+    depth instead of regexing through them."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        out_type = rest[:end]
+        rest = rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        out_type = rest[:sp]
+        rest = rest[sp:]
+    km = _KIND_RE.match(rest)
+    if not km:
+        return None
+    kind = km.group(1)
+    return name, out_type, kind, rest[km.end():]
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+)\s*:\s*(\w+\[[\d,]*\])")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# ring wire-cost factor per element byte, as a function of group size g
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    out_type: str
+    rest: str  # text after the opening paren of operands
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool = False
+    params: Dict[str, str] = field(default_factory=dict)
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0  # wire bytes per device
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_by_group: Dict[int, float] = field(default_factory=dict)
+    n_collectives: float = 0.0
+    warnings: List[str] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": self.collective_by_kind,
+            "collective_by_group": {str(k): v for k, v in self.collective_by_group.items()},
+            "n_collectives": self.n_collectives,
+            "warnings": self.warnings,
+        }
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    current: Optional[_Comp] = None
+    for raw in text.splitlines():
+        if raw and not raw.startswith(" ") and ("->" in raw):
+            m = _COMP_HDR_RE.match(raw.strip())
+            if m:
+                is_entry = bool(m.group(1))
+                name = m.group(2)
+                current = _Comp(name=name, is_entry=is_entry)
+                for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                    current.params[pname] = ptype
+                    current.symbols[pname] = ptype
+                comps[name] = current
+                if is_entry:
+                    entry = name
+                continue
+        line = raw.strip()
+        if current is None or not line or line.startswith("//"):
+            continue
+        if line == "}":
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, out_type, kind, rest = parsed
+            current.ops.append(_Op(name, kind, out_type, rest))
+            current.symbols[name] = out_type
+    return comps, entry
+
+
+def _while_refs(op: _Op) -> Tuple[Optional[str], Optional[str], Optional[int]]:
+    cond = body = None
+    mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+    mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+    if mc:
+        cond = mc.group(1)
+    if mb:
+        body = mb.group(1)
+    trip = None
+    mt = _TRIP_RE.search(op.rest)
+    if mt:
+        trip = int(mt.group(1))
+    return cond, body, trip
+
+
+def _calls_refs(op: _Op) -> List[str]:
+    out = []
+    for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.rest):
+        out.append(m.group(1))
+    return out
+
+
+def _cond_trip_count(comp: _Comp) -> Optional[int]:
+    """Fallback: max integer constant in the loop condition computation."""
+    best = None
+    for op in comp.ops:
+        m = re.match(r"constant\((\d+)\)", op.rest)
+        if op.kind == "constant" and m:
+            v = int(m.group(1))
+            if best is None or v > best:
+                best = v
+    return best
+
+
+def analyze_hlo(text: str) -> HLOCost:
+    comps, entry = _parse_computations(text)
+    cost = HLOCost(collective_by_kind=defaultdict(float), collective_by_group=defaultdict(float))
+    if entry is None:
+        cost.warnings.append("no ENTRY computation found")
+        cost.collective_by_kind = dict(cost.collective_by_kind)
+        cost.collective_by_group = dict(cost.collective_by_group)
+        return cost
+
+    # ---- build call graph with multipliers --------------------------------- #
+    # control computations get byte accounting; fused/applied ones only flops
+    weights: Dict[str, float] = defaultdict(float)
+    control: Dict[str, bool] = defaultdict(bool)
+    loop_body: Dict[str, bool] = defaultdict(bool)
+    weights[entry] = 1.0
+    control[entry] = True
+
+    # topological propagation via worklist (HLO call graphs are DAGs)
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if op.kind == "while":
+                cond, body, trip = _while_refs(op)
+                if trip is None and cond in comps:
+                    trip = _cond_trip_count(comps[cond])
+                if trip is None:
+                    trip = 1
+                    cost.warnings.append(f"unknown trip count for {op.name}")
+                for ref, mult in ((body, trip), (cond, trip + 1)):
+                    if ref:
+                        weights[ref] += weights[cname] * mult
+                        control[ref] = True
+                        loop_body[ref] = True
+                        if ref not in seen:
+                            seen.add(ref)
+                            order.append(ref)
+            elif op.kind in ("call", "conditional"):
+                for ref in _calls_refs(op) or _OPERAND_RE.findall(op.rest)[:0]:
+                    weights[ref] += weights[cname]
+                    control[ref] = True
+                    if ref not in seen:
+                        seen.add(ref)
+                        order.append(ref)
+            else:
+                for ref in _calls_refs(op):
+                    weights[ref] += weights[cname]
+                    # fusion interiors: flops only
+                    if ref not in seen:
+                        seen.add(ref)
+                        order.append(ref)
+
+    # ---- accumulate --------------------------------------------------------- #
+    VMEM = 16 * 2**20  # v5e-class usable VMEM per core
+
+    def _interior_slice_bytes(op: _Op) -> Optional[int]:
+        """If a fusion's interior slices/gathers from its (possibly huge)
+        operands, the fusion's real traffic is its output + the interior
+        slice sizes, not the full operand buffers."""
+        if op.kind != "fusion":
+            return None
+        refs = _calls_refs(op)
+        interior = comps.get(refs[0]) if refs else None
+        if interior is None:
+            return None
+        total = 0
+        found = False
+        for o in interior.ops:
+            if o.kind in ("dynamic-slice", "gather"):
+                found = True
+                total += _shape_bytes(o.out_type)
+        return total if found else None
+
+    def _op_footprint(comp: _Comp, op: _Op) -> int:
+        operands = _OPERAND_RE.findall(
+            op.rest.split(", calls=")[0].split(", metadata=")[0]
+        )
+        out_b = _shape_bytes(op.out_type)
+        in_b = sum(_shape_bytes(comp.symbols.get(o, "")) for o in operands)
+        isl = _interior_slice_bytes(op)
+        if isl is not None:
+            in_b = min(in_b, isl + out_b)
+        return out_b + in_b
+
+    for cname, comp in comps.items():
+        w = weights.get(cname, 0.0)
+        if w <= 0.0:
+            continue
+        is_control = control.get(cname, False)
+        # Fine-grained loop bodies (per-token SSM scans etc.) whose working
+        # set fits VMEM are fused on-chip on the TPU target: only their
+        # streamed slices (dynamic-slice/update) and collectives touch HBM,
+        # not every intermediate.
+        vmem_resident = False
+        if loop_body.get(cname) and is_control:
+            big = max(
+                (
+                    _op_footprint(comp, op)
+                    for op in comp.ops
+                    if op.kind
+                    not in ("tuple", "get-tuple-element", "parameter", "while",
+                            "copy", "bitcast")
+                    # slice streams (xs/ys of the scan) touch HBM at slice
+                    # granularity and don't disqualify VMEM residency of
+                    # the compute intermediates
+                    and "dynamic" not in op.name
+                    and op.kind
+                    not in ("dynamic-slice", "dynamic-update-slice", "gather",
+                            "scatter")
+                ),
+                default=0,
+            )
+            vmem_resident = big <= VMEM
+        for op in comp.ops:
+            if op.kind == "dot":
+                operands = _OPERAND_RE.findall(op.rest)
+                lhs_type = comp.symbols.get(operands[0], "") if operands else ""
+                _, out_dims = _shape_dims(op.out_type)
+                _, lhs_dims = _shape_dims(lhs_type)
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                contract = 1
+                if mcd and lhs_dims:
+                    for d in mcd.group(1).split(","):
+                        if d:
+                            contract *= lhs_dims[int(d)]
+                flops = 2.0 * math.prod(out_dims or [1]) * contract
+                cost.flops += w * flops
+                if is_control:
+                    in_bytes = sum(
+                        _shape_bytes(comp.symbols.get(o, "")) for o in operands
+                    )
+                    cost.bytes += w * (in_bytes + _shape_bytes(op.out_type))
+                continue
+            if op.kind == "convolution":
+                cost.warnings.append("convolution flops not modelled")
+            if op.kind in COLLECTIVES and is_control:
+                out_b = _shape_bytes(op.out_type)
+                g = None
+                mg = _GROUPS_RE.search(op.rest)
+                if mg:
+                    g = int(mg.group(2))
+                else:
+                    mo = _GROUPS_OLD_RE.search(op.rest)
+                    if mo:
+                        first = mo.group(1).split("},")[0].strip("{}")
+                        g = len([t for t in first.split(",") if t.strip() != ""])
+                if g is None:
+                    g = 2
+                    cost.warnings.append(f"no replica_groups on {op.name}")
+                wire = out_b * _wire_factor(op.kind, g)
+                cost.collective_bytes += w * wire
+                cost.collective_by_kind[op.kind] += w * wire
+                cost.collective_by_group[g] += w * wire
+                cost.n_collectives += w
+                cost.bytes += w * 2 * out_b
+                continue
+            if not is_control:
+                continue
+            if op.kind in (
+                "tuple",
+                "get-tuple-element",
+                "bitcast",
+                "parameter",
+                "constant",
+                "after-all",
+                "while",
+                "iota",
+                "broadcast",
+                # XLA:CPU materializes loop-carry aliasing as `copy` ops —
+                # full stacked-residual buffers copied per iteration.  TPU
+                # buffer assignment aliases these away; counting them would
+                # dominate the byte total with traffic that does not exist
+                # on the target.
+                "copy",
+            ):
+                continue
+            # generic top-level op: operands + output bytes
+            out_b = _shape_bytes(op.out_type)
+            operands = _OPERAND_RE.findall(
+                op.rest.split(", calls=")[0].split(", metadata=")[0]
+            )
+            in_b = sum(_shape_bytes(comp.symbols.get(o, "")) for o in operands)
+            # dynamic-slice/update (incl. fusions named after them) touch
+            # only the slice, not the whole buffer they index into.  For
+            # dynamic-update-slice the *output* type is the full buffer, so
+            # the slice size is the smallest real operand (the update).
+            sliceish = "dynamic" in op.name or (
+                op.kind
+                in ("dynamic-slice", "dynamic-update-slice", "scatter", "gather")
+            )
+            if sliceish:
+                slice_b = min(
+                    [out_b]
+                    + [
+                        b
+                        for b in (
+                            _shape_bytes(comp.symbols.get(o, ""))
+                            for o in operands
+                        )
+                        if b > 0
+                    ]
+                )
+                cost.bytes += w * 2 * slice_b
+                continue
+            isl = _interior_slice_bytes(op)
+            if isl is not None:  # fusion slicing big buffers internally
+                cost.bytes += w * (min(in_b, isl + out_b) + out_b)
+                continue
+            if vmem_resident:
+                continue
+            cost.bytes += w * (in_b + out_b)
+
+    cost.collective_by_kind = dict(cost.collective_by_kind)
+    cost.collective_by_group = dict(cost.collective_by_group)
+    return cost
+
+
+def collective_summary(cost: HLOCost) -> str:
+    parts = [f"{k}: {v/1e6:.1f}MB" for k, v in sorted(cost.collective_by_kind.items())]
+    return ", ".join(parts) if parts else "none"

@@ -1,0 +1,317 @@
+"""Step builders + abstract input specs shared by dryrun/train/serve.
+
+``input_specs(arch, shape)`` provides ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+pattern the assignment prescribes for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.layers import RuntimeFlags
+from ..models.transformer import LanguageModel
+from ..optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from ..parallel.sharding import ShardingRules, make_rules
+
+__all__ = [
+    "build_model",
+    "build_train_step",
+    "build_prefill_step",
+    "build_decode_step",
+    "input_specs",
+    "train_arg_structs",
+    "decode_arg_structs",
+    "prefill_arg_structs",
+    "fitted_sharding",
+    "tree_shardings",
+    "zero1_moment_specs",
+]
+
+
+# --------------------------------------------------------------------------- #
+# sharding helpers
+# --------------------------------------------------------------------------- #
+def _axes_size(mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    if isinstance(assignment, str):
+        return mesh.shape[assignment]
+    return math.prod(mesh.shape[a] for a in assignment)
+
+
+def fitted_sharding(
+    struct: jax.ShapeDtypeStruct, logical, rules: ShardingRules
+) -> NamedSharding:
+    """NamedSharding from logical axes, dropping any axis that does not
+    divide the dimension (e.g. batch=1 long_500k on a 16-wide data axis)."""
+    mesh = rules.mesh
+    assert mesh is not None
+    spec = []
+    for dim, logical_name in zip(struct.shape, tuple(logical) + (None,) * 10):
+        a = rules.assignment(logical_name)
+        if a is not None and dim % _axes_size(mesh, a) != 0:
+            a = None
+        spec.append(a)
+    return NamedSharding(mesh, PartitionSpec(*spec[: len(struct.shape)]))
+
+
+def tree_shardings(structs, logical_tree, rules: ShardingRules):
+    """Map a pytree of structs + matching pytree of logical tuples to
+    NamedShardings."""
+    return jax.tree.map(
+        lambda s, l: fitted_sharding(s, l, rules),
+        structs,
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def zero1_moment_specs(param_structs, param_logical, rules, quantized: bool):
+    """Moment shardings: parameter sharding + ZeRO-1 over the data axis on
+    the first divisible unsharded dim (fp32 moments).  Quantized moments are
+    flat (n,)/(n/256,) arrays sharded over data when divisible."""
+    mesh = rules.mesh
+    data_size = mesh.shape.get("data", 1)
+
+    def f32_spec(struct, logical):
+        logical = tuple(logical) + (None,) * 10
+        out = []
+        used: set = set()
+        for i, dim in enumerate(struct.shape):
+            a = rules.assignment(logical[i])
+            if a is not None and dim % _axes_size(mesh, a) == 0:
+                out.append(a)
+                used.update(a if isinstance(a, tuple) else (a,))
+            else:
+                out.append(None)
+        # ZeRO-1 on top: place the data axis on the first free divisible dim
+        # unless the parameter sharding (FSDP) already consumed it
+        dp = rules.assignment("dp_shard")
+        if dp and dp not in used:
+            for i, dim in enumerate(struct.shape):
+                if out[i] is None and dim % data_size == 0:
+                    out[i] = dp
+                    break
+        return NamedSharding(mesh, PartitionSpec(*out))
+
+    def leaf(struct, logical):
+        if quantized:
+            # int8 moments keep the parameter's own shape and sharding
+            # (last-dim blockwise scales are tiny and unsharded on the
+            # block dim) — see optim/adamw.py layout note
+            q_sh = f32_spec(struct, logical)
+            scale_spec = PartitionSpec(*(tuple(q_sh.spec)[:-1] + (None,)))
+            if struct.ndim == 0:
+                q_sh = NamedSharding(mesh, PartitionSpec(None))
+                scale_spec = PartitionSpec(None)
+            return {
+                "m_q": q_sh,
+                "m_s": NamedSharding(mesh, scale_spec),
+                "v_q": q_sh,
+                "v_s": NamedSharding(mesh, scale_spec),
+            }
+        s = f32_spec(struct, logical)
+        return {"m": s, "v": s}
+
+    return jax.tree.map(
+        leaf,
+        param_structs,
+        param_logical,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# model / step builders
+# --------------------------------------------------------------------------- #
+#: named sharding regimes (the §Perf hillclimb levers)
+RULES_MODES = {
+    "baseline": {},
+    # weight-stationary experts + no FSDP on the (small) dense/attn weights:
+    # kills the per-microbatch expert-weight all-gathers (arctic train)
+    "moe_stationary": {"d_model": None, "expert_ff": "data"},
+    # serve-mode 2D weight sharding: weights spread over (data x model),
+    # activations replicated over data (tiny at decode), caches stay
+    # batch-sharded — kills the FSDP weight gathers per decode step (jamba)
+    "serve2d": {
+        "d_model": None,
+        "act_batch": None,
+        "ff": ("data", "model"),
+        "inner": ("data", "model"),
+        "expert_ff": "data",
+    },
+}
+
+
+def build_model(
+    cfg: ArchConfig,
+    mesh: Optional[jax.sharding.Mesh],
+    flags: Optional[RuntimeFlags] = None,
+    rules_mode: str = "baseline",
+) -> Tuple[LanguageModel, Optional[ShardingRules]]:
+    rules = None
+    if mesh is not None:
+        rules = make_rules(
+            mesh,
+            shard_heads=cfg.shard_heads_ok(mesh.shape["model"]),
+            overrides=RULES_MODES[rules_mode],
+        )
+    flags = flags or RuntimeFlags()
+    return LanguageModel(cfg, rules, flags), rules
+
+
+def build_train_step(
+    model: LanguageModel,
+    lr: float = 3e-4,
+    total_steps: int = 10000,
+    micro_batches: int = 1,
+):
+    """fwd+bwd+AdamW.  ``micro_batches`` > 1 scans gradient accumulation
+    over batch slices — the standard activation-memory lever (saved
+    residuals shrink by the microbatch factor at identical math)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+        if micro_batches > 1:
+            mb = jax.tree.map(
+                lambda a: a.reshape(
+                    (micro_batches, a.shape[0] // micro_batches) + a.shape[1:]
+                ),
+                batch,
+            )
+
+            def body(acc, b_i):
+                (l, metrics), g = grad_fn(params, b_i)
+                acc_g, acc_l = acc
+                return (
+                    jax.tree.map(jnp.add, acc_g, g),
+                    acc_l + l,
+                ), metrics
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / micro_batches, grads)
+            loss = loss_sum / micro_batches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        lr_t = cosine_schedule(opt_state.step, lr, warmup=100, total=total_steps)
+        new_params, new_state, om = adamw_update(grads, opt_state, params, lr_t)
+        return new_params, new_state, {
+            "loss": loss,
+            **metrics,
+            "grad_norm": om["grad_norm"],
+        }
+
+    return train_step
+
+
+def build_prefill_step(model: LanguageModel, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(
+            params, batch["tokens"], max_seq, batch.get("frontend")
+        )
+
+    return prefill_step
+
+
+def build_decode_step(model: LanguageModel):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------- #
+# abstract inputs per (arch x shape)
+# --------------------------------------------------------------------------- #
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    prefix = cfg.frontend_prefix if cfg.frontend else 0
+    if shape.kind in ("train", "prefill"):
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S - prefix), jnp.int32),
+        }
+        if prefix:
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, prefix, cfg.d_model), jnp.bfloat16
+            )
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def _batch_logical(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    out = {"tokens": ("batch", None)}
+    if shape.kind in ("train", "prefill") and cfg.frontend:
+        out["frontend"] = ("batch", None, None)
+    return out
+
+
+def train_arg_structs(model: LanguageModel, shape: ShapeConfig, rules: ShardingRules):
+    """(arg structs, in_shardings, out_shardings) for the train step."""
+    cfg = model.cfg
+    params = model.abstract_params()
+    p_logical = model.param_specs()
+    quant = cfg.optimizer == "adamw8bit"
+    opt = jax.eval_shape(lambda p: adamw_init(p, quantize=quant), params)
+    batch = input_specs(cfg, shape)
+
+    p_sh = tree_shardings(params, p_logical, rules)
+    m_sh = zero1_moment_specs(params, p_logical, rules, quant)
+    o_sh = AdamWState(
+        step=NamedSharding(rules.mesh, PartitionSpec()), moments=m_sh
+    )
+    b_sh = tree_shardings(batch, _batch_logical(cfg, shape), rules)
+    metrics_sh = jax.tree.map(
+        lambda _: NamedSharding(rules.mesh, PartitionSpec()),
+        {"loss": 0, "ce": 0, "aux": 0, "grad_norm": 0},
+    )
+    return (
+        (params, opt, batch),
+        (p_sh, o_sh, b_sh),
+        (p_sh, o_sh, metrics_sh),
+    )
+
+
+def prefill_arg_structs(model: LanguageModel, shape: ShapeConfig, rules):
+    cfg = model.cfg
+    params = model.abstract_params()
+    p_sh = tree_shardings(params, model.param_specs(), rules)
+    batch = input_specs(cfg, shape)
+    b_sh = tree_shardings(batch, _batch_logical(cfg, shape), rules)
+    cache = model.cache_struct(shape.global_batch, shape.seq_len)
+    c_sh = tree_shardings(cache, model.cache_specs(), rules)
+    logits = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.vocab_size), jnp.bfloat16
+    )
+    l_sh = fitted_sharding(logits, ("batch", None, "vocab"), rules)
+    return (params, batch), (p_sh, b_sh), (l_sh, c_sh)
+
+
+def decode_arg_structs(model: LanguageModel, shape: ShapeConfig, rules):
+    cfg = model.cfg
+    params = model.abstract_params()
+    p_sh = tree_shardings(params, model.param_specs(), rules)
+    cache = model.cache_struct(shape.global_batch, shape.seq_len)
+    c_sh = tree_shardings(cache, model.cache_specs(), rules)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_sh = fitted_sharding(tokens, ("batch", None), rules)
+    logits = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.vocab_size), jnp.bfloat16
+    )
+    l_sh = fitted_sharding(logits, ("batch", None, "vocab"), rules)
+    return (params, cache, tokens), (p_sh, c_sh, t_sh), (l_sh, c_sh)

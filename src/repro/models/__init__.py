@@ -1,0 +1,5 @@
+"""Model substrate: transformer / MoE / SSM stacks for the assigned archs."""
+
+from .transformer import LanguageModel
+
+__all__ = ["LanguageModel"]

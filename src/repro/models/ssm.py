@@ -1,0 +1,331 @@
+"""State-space / linear-recurrence mixers: Mamba (Jamba) and RWKV6 (Finch).
+
+Both use an exact per-token ``lax.scan`` as the reference/model path (the
+chunked Pallas kernel in ``kernels/rwkv6.py`` is the TPU-optimized twin,
+validated against this path).  Decode steps carry O(1)-per-token state:
+
+  mamba: conv window (B, d_conv-1, d_inner) + SSM state (B, d_inner, d_state)
+  rwkv6: WKV state (B, H, head_dim, head_dim) + previous token (B, D)
+
+RWKV6 note: we implement the Finch core — data-dependent per-channel decay
+``w_t = exp(-exp(w0 + LoRA(x_t)))``, bonus ``u``, per-head state — with a
+static token-shift lerp (the paper's extra ddlerp LoRAs are omitted; noted
+in DESIGN.md, parameter-count impact < 1%).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ShardingRules, shard
+
+__all__ = [
+    "init_mamba",
+    "mamba_apply",
+    "mamba_decode",
+    "MAMBA_SPECS",
+    "init_rwkv",
+    "rwkv_apply",
+    "rwkv_decode",
+    "RWKV_SPECS",
+    "init_rwkv_channel_mix",
+    "rwkv_channel_mix",
+    "rwkv_channel_mix_decode",
+    "RWKV_CM_SPECS",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Mamba
+# --------------------------------------------------------------------------- #
+def init_mamba(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    dtr = cfg.ssm.dt_rank or math.ceil(D / 16)
+    ks = jax.random.split(key, 6)
+    s_in = 1.0 / math.sqrt(D)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (D, 2 * din)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (din, dc)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": (
+            jax.random.normal(ks[2], (din, dtr + 2 * ds)) / math.sqrt(din)
+        ).astype(dtype),
+        "dt_w": (jax.random.normal(ks[3], (dtr, din)) / math.sqrt(dtr)).astype(dtype),
+        "dt_b": jnp.full((din,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (din, 1))
+        ),
+        "D_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": (
+            jax.random.normal(ks[4], (din, D)) / math.sqrt(din)
+        ).astype(dtype),
+    }
+
+
+MAMBA_SPECS = {
+    "in_proj": ("d_model", "inner"),
+    "conv_w": ("inner", None),
+    "conv_b": ("inner",),
+    "x_proj": ("inner", None),
+    "dt_w": (None, "inner"),
+    "dt_b": ("inner",),
+    "A_log": ("inner", "state"),
+    "D_skip": ("inner",),
+    "out_proj": ("inner", "d_model"),
+}
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over seq.  x: (B, S, din); w: (din, K)."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, din)
+    y = sum(xp[:, j : j + x.shape[1]] * w[:, j] for j in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else pad
+    return y + b, new_state
+
+
+def _ssm_scan(dt, A, Bc, Cc, x, h0):
+    """Selective scan.  dt,x: (B,S,din); Bc,Cc: (B,S,ds); A: (din,ds);
+    h0: (B,din,ds).  Returns y (B,S,din), h_final."""
+    dt_t = jnp.moveaxis(dt, 1, 0)  # (S,B,din)
+    x_t = jnp.moveaxis(x, 1, 0)
+    B_t = jnp.moveaxis(Bc, 1, 0)  # (S,B,ds)
+    C_t = jnp.moveaxis(Cc, 1, 0)
+
+    def step(h, inp):
+        dti, xi, bi, ci = inp
+        da = jnp.exp(dti[..., None] * A)  # (B,din,ds)
+        h = da * h + (dti * xi)[..., None] * bi[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ci)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, (dt_t, x_t, B_t, C_t))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    rules: Optional[ShardingRules],
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, dict]:
+    """Full-sequence Mamba mixer.  Returns (y, new_cache)."""
+    B, S, D = x.shape
+    ds = cfg.ssm.d_state
+    dtr = cfg.ssm.dt_rank or math.ceil(D / 16)
+    din = cfg.d_inner
+
+    xz = x @ p["in_proj"]
+    xz = shard(xz, rules, "act_batch", "seq", "inner")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_proj"]
+    dt_raw = dbc[..., :dtr]
+    Bc = dbc[..., dtr : dtr + ds].astype(jnp.float32)
+    Cc = dbc[..., dtr + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw @ p["dt_w"] + p["dt_b"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+
+    h0 = (
+        cache["ssm"]
+        if cache
+        else jnp.zeros((B, din, ds), jnp.float32)
+    )
+    y, h = _ssm_scan(dt, A, Bc, Cc, xc.astype(jnp.float32), h0)
+    y = (y + p["D_skip"] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard(y, rules, "act_batch", "seq", "inner")
+    out = y @ p["out_proj"]
+    return shard(out, rules, "act_batch", "seq", None), {"conv": new_conv, "ssm": h}
+
+
+def mamba_decode(p, x, cfg, cache, rules):
+    """Single-token Mamba step.  x: (B, 1, D)."""
+    y, new_cache = mamba_apply(p, x, cfg, rules, cache=cache)
+    return y, new_cache
+
+
+def mamba_cache_spec(cfg, batch: int):
+    din, ds, dc = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+    return {
+        "conv": ((batch, dc - 1, din), jnp.bfloat16),
+        "ssm": ((batch, din, ds), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 time mix
+# --------------------------------------------------------------------------- #
+def init_rwkv(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    hd = cfg.ssm.rwkv_head_dim
+    H = cfg.rwkv_heads
+    lora = cfg.ssm.decay_lora
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "mu": jnp.ones((5, D), jnp.float32) * 0.5,  # r,k,v,w,g shift lerps
+        "w0": jnp.zeros((H, hd), jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[0], (D, lora)) * s).astype(dtype),
+        "w_lora_b": (jax.random.normal(ks[1], (lora, H, hd)) * 0.1).astype(dtype),
+        "u": jnp.zeros((H, hd), jnp.float32),
+        "wr": (jax.random.normal(ks[2], (D, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (D, H, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (D, H, hd)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (D, H, hd)) * s).astype(dtype),
+        "wo": (
+            jax.random.normal(ks[6], (H, hd, D)) / math.sqrt(H * hd)
+        ).astype(dtype),
+        "ln": jnp.ones((H, hd), jnp.float32),
+    }
+
+
+RWKV_SPECS = {
+    "mu": (None, "d_model"),
+    "w0": ("heads", None),
+    "w_lora_a": ("d_model", None),
+    "w_lora_b": (None, "heads", None),
+    "u": ("heads", None),
+    "wr": ("d_model", "heads", None),
+    "wk": ("d_model", "heads", None),
+    "wv": ("d_model", "heads", None),
+    "wg": ("d_model", "heads", None),
+    "wo": ("heads", None, "d_model"),
+    "ln": ("heads", None),
+}
+
+
+def _token_shift(x, last):
+    """xs[t] = x[t-1]; xs[0] = last (zeros at sequence start)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Exact WKV6 recurrence.
+    r,k,v,w: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd) -> y (B,S,H,hd), sT."""
+    rt = jnp.moveaxis(r, 1, 0)
+    kt = jnp.moveaxis(k, 1, 0)
+    vt = jnp.moveaxis(v, 1, 0)
+    wt = jnp.moveaxis(w, 1, 0)
+
+    def step(s, inp):
+        ri, ki, vi, wi = inp
+        kv = ki[..., :, None] * vi[..., None, :]  # (B,H,hd_k,hd_v)
+        y = jnp.einsum("bhi,bhij->bhj", ri, s + u[..., None] * kv)
+        s = wi[..., None] * s + kv
+        return s, y
+
+    s, ys = jax.lax.scan(step, s0, (rt, kt, vt, wt))
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def _rwkv_projections(p, x, last, cfg):
+    B, S, D = x.shape
+    H, hd = cfg.rwkv_heads, cfg.ssm.rwkv_head_dim
+    xs = _token_shift(x, last)
+    mu = p["mu"]
+    xi = [(x + mu[i] * (xs - x)).astype(x.dtype) for i in range(5)]  # r,k,v,w,g
+    r = jnp.einsum("bsd,dhk->bshk", xi[0], p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xi[1], p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xi[2], p["wv"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,dhk->bshk", xi[4], p["wg"])
+    dd = jnp.einsum("bsd,dl,lhk->bshk", xi[3], p["w_lora_a"], p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(p["w0"] + dd.astype(jnp.float32)))  # (0,1) decays
+    return r, k, v, w, g
+
+
+def rwkv_apply(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    rules: Optional[ShardingRules],
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    H, hd = cfg.rwkv_heads, cfg.ssm.rwkv_head_dim
+    last = cache["last"].astype(x.dtype) if cache else jnp.zeros((B, D), x.dtype)
+    s0 = cache["state"] if cache else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    r, k, v, w, g = _rwkv_projections(p, x, last, cfg)
+    r = shard(r, rules, "act_batch", "seq", "heads", None)
+    k = shard(k, rules, "act_batch", "seq", "heads", None)
+    v = shard(v, rules, "act_batch", "seq", "heads", None)
+    w = shard(w, rules, "act_batch", "seq", "heads", None)
+
+    y, sT = _wkv_scan(r, k, v, w, p["u"], s0)
+    # per-head group norm
+    mean = y.mean(axis=-1, keepdims=True)
+    var = y.var(axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5) * p["ln"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(g)
+    y = shard(y, rules, "act_batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    out = shard(out, rules, "act_batch", "seq", None)
+    return out, {"state": sT, "last": x[:, -1, :]}
+
+
+def rwkv_decode(p, x, cfg, cache, rules):
+    return rwkv_apply(p, x, cfg, rules, cache=cache)
+
+
+def rwkv_cache_spec(cfg, batch: int):
+    H, hd = cfg.rwkv_heads, cfg.ssm.rwkv_head_dim
+    return {
+        "state": ((batch, H, hd, hd), jnp.float32),
+        "last": ((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# RWKV channel mix
+# --------------------------------------------------------------------------- #
+def init_rwkv_channel_mix(key, cfg, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jnp.ones((2, D), jnp.float32) * 0.5,
+        "wk": (jax.random.normal(k1, (D, F)) / math.sqrt(D)).astype(dtype),
+        "wv": (jax.random.normal(k2, (F, D)) / math.sqrt(F)).astype(dtype),
+        "wr": (jax.random.normal(k3, (D, D)) / math.sqrt(D)).astype(dtype),
+    }
+
+
+RWKV_CM_SPECS = {
+    "mu": (None, "d_model"),
+    "wk": ("d_model", "ff"),
+    "wv": ("ff", "d_model"),
+    "wr": ("d_model", None),
+}
+
+
+def rwkv_channel_mix(p, x, rules, last=None):
+    B, S, D = x.shape
+    if last is None:
+        last = jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, last)
+    xk = (x + p["mu"][0] * (xs - x)).astype(x.dtype)
+    xr = (x + p["mu"][1] * (xs - x)).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = shard(k, rules, "act_batch", "seq", "ff")
+    kv = k @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    return shard(out, rules, "act_batch", "seq", None), x[:, -1, :]
+
+
+def rwkv_channel_mix_decode(p, x, rules, last):
+    return rwkv_channel_mix(p, x, rules, last=last)

@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW (+8-bit moments) and gradient compression."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from .compress import compress_gradients, decompress_gradients
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "compress_gradients",
+    "decompress_gradients",
+]

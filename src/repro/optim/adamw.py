@@ -1,0 +1,183 @@
+"""AdamW with optional 8-bit (blockwise-quantized) moments.
+
+The 8-bit variant stores m/v as int8 with per-block float32 absmax scales
+(block = 256 elements along the flattened tensor), the standard
+memory-for-precision trade that brings the 400B-class archs (arctic,
+jamba-1.5-large) under the 16 GB/chip HBM budget at 256 chips — see
+DESIGN.md and the roofline memory terms.
+
+State layout (a pytree mirroring params):
+    fp32:  {"m": f32[shape], "v": f32[shape]}
+    int8:  {"m_q": i8[shape], "m_s": f32[nblocks], "v_q": ..., "v_s": ...}
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+]
+
+_BLOCK = 256
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    moments: Any  # pytree of per-param moment dicts
+
+
+# --------------------------------------------------------------------------- #
+# blockwise int8 quantization — along each tensor's LAST dim, keeping the
+# parameter layout.  A flat (n,)-layout would require sharded<->flat
+# reshapes that GSPMD resolves by replicating the f32 moments (measured:
+# 3.5 TB/device on arctic-480b).  Here q has the param's own shape (and
+# sharding); scales are tiny (1/256) and effectively replicated.  The
+# per-block max uses reduce_window so no reshape ever touches the sharded
+# tensor.
+# --------------------------------------------------------------------------- #
+def _n_blocks(last: int) -> int:
+    return (last + _BLOCK - 1) // _BLOCK
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: f32[..., L] -> (int8[..., L], f32[..., ceil(L/256)])."""
+    if x.ndim == 0:
+        x = x[None]
+    L = x.shape[-1]
+    pad = _n_blocks(L) * _BLOCK - L
+    window = (1,) * (x.ndim - 1) + (_BLOCK,)
+    scale = jax.lax.reduce_window(
+        jnp.abs(x),
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=window,
+        window_strides=window,
+        padding=[(0, 0)] * (x.ndim - 1) + [(0, pad)],
+    ) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scale_exp = jnp.repeat(scale, _BLOCK, axis=-1)[..., :L]
+    q = jnp.clip(jnp.round(x / scale_exp), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape=None) -> jax.Array:
+    L = q.shape[-1]
+    scale_exp = jnp.repeat(scale, _BLOCK, axis=-1)[..., :L]
+    out = q.astype(jnp.float32) * scale_exp
+    if shape is not None:
+        out = out.reshape(shape)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# init / update
+# --------------------------------------------------------------------------- #
+def adamw_init(params, quantize: bool = False) -> AdamWState:
+    def leaf(p):
+        if quantize:
+            shape = p.shape if p.ndim else (1,)
+            s_shape = shape[:-1] + (_n_blocks(shape[-1]),)
+            return {
+                "m_q": jnp.zeros(shape, jnp.int8),
+                "m_s": jnp.zeros(s_shape, jnp.float32),
+                "v_q": jnp.zeros(shape, jnp.int8),
+                "v_s": jnp.zeros(s_shape, jnp.float32),
+            }
+        return {
+            "m": jnp.zeros(p.shape, jnp.float32),
+            "v": jnp.zeros(p.shape, jnp.float32),
+        }
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32), moments=jax.tree.map(leaf, params)
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mom):
+        g = g.astype(jnp.float32)
+        if "m" in mom:
+            m = b1 * mom["m"] + (1 - b1) * g
+            v = b2 * mom["v"] + (1 - b2) * jnp.square(g)
+            new_mom = {"m": m, "v": v}
+        else:
+            gq = g if g.ndim else g[None]
+            m_prev = _dequantize(mom["m_q"], mom["m_s"])
+            v_prev = _dequantize(mom["v_q"], mom["v_s"])
+            m = b1 * m_prev + (1 - b1) * gq
+            v = b2 * v_prev + (1 - b2) * jnp.square(gq)
+            mq, ms = _quantize(m)
+            vq, vs = _quantize(v)
+            new_mom = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+            m = m.reshape(p.shape)
+            v = v.reshape(p.shape)
+        m_hat = m / c1
+        v_hat = v / c2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (delta + weight_decay * p32)
+        return new_p.astype(p.dtype), new_mom
+
+    def upd_leaf(p, g, mom):
+        # giant stacked-layer leaves (hundreds of GB global) update via a
+        # scan over the layer dim so the transient f32 m/v copies are one
+        # layer slice, not the whole stack
+        if p.ndim >= 2 and p.size >= (1 << 29):
+            return jax.lax.map(lambda a: upd(*a), (p, g, mom))
+        return upd(p, g, mom)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.moments)
+    out = [upd_leaf(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_moments = tdef.unflatten([o[1] for o in out])
+    return new_params, AdamWState(step, new_moments), {"grad_norm": gnorm}
+
+
+def cosine_schedule(
+    step, base_lr: float, warmup: int = 100, total: int = 10000, floor: float = 0.1
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor * base_lr + (1 - floor) * base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

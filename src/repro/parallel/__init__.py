@@ -1,0 +1,5 @@
+"""Distribution substrate: logical-axis sharding rules and pipeline utils."""
+
+from .sharding import ShardingRules, logical_spec, make_rules, shard
+
+__all__ = ["ShardingRules", "logical_spec", "make_rules", "shard"]

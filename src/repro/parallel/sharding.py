@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules (GSPMD) for the model stack.
+
+Tensors in ``repro.models`` are annotated with *logical* axis names; a
+:class:`ShardingRules` table maps those to mesh axes.  This keeps model code
+mesh-agnostic: the same model runs on a single CPU device (``rules=None``,
+all constraints become no-ops), the 16x16 single-pod mesh, or the
+2x16x16 multi-pod mesh.
+
+Default mapping (TPU v5e-class pod, axes ``(pod?, data, model)``):
+
+    batch        -> (pod, data)     data parallelism
+    vocab        -> model           embedding / LM-head tensor parallelism
+    heads        -> model           attention-head TP (only when the arch's
+                                    head count divides the axis; otherwise
+                                    attention is replicated across `model`
+                                    and the MLP soaks the parallelism)
+    ff / inner   -> model           MLP / Mamba / RWKV feature TP
+    experts      -> model           expert parallelism (MoE)
+    cache_seq    -> model           sequence-sharded KV cache for decode
+                                    (flash-decode style partial softmax,
+                                    GSPMD inserts the combine collectives)
+    dp_shard     -> data            ZeRO-1 optimizer-moment sharding
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+AxisAssignment = Union[None, str, Tuple[str, ...]]
+
+__all__ = ["ShardingRules", "make_rules", "logical_spec", "shard"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to mesh axis names."""
+
+    table: Mapping[str, AxisAssignment] = field(default_factory=dict)
+    mesh: Optional[jax.sharding.Mesh] = None
+
+    def assignment(self, logical: Optional[str]) -> AxisAssignment:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def spec(self, *logical: Optional[str]) -> PartitionSpec:
+        return PartitionSpec(*[self.assignment(l) for l in logical])
+
+    def named(self, *logical: Optional[str]) -> NamedSharding:
+        assert self.mesh is not None, "rules have no mesh bound"
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def with_overrides(self, **kw: AxisAssignment) -> "ShardingRules":
+        t = dict(self.table)
+        t.update(kw)
+        return replace(self, table=t)
+
+
+def make_rules(
+    mesh: jax.sharding.Mesh,
+    *,
+    shard_heads: bool = True,
+    shard_experts: bool = True,
+    zero1: bool = True,
+    seq_shard_cache: bool = True,
+    overrides: Optional[Mapping[str, AxisAssignment]] = None,
+) -> ShardingRules:
+    axes = mesh.axis_names
+    data_axes: Tuple[str, ...] = tuple(a for a in axes if a in ("pod", "data"))
+    model = "model" if "model" in axes else None
+    table: dict[str, AxisAssignment] = {
+        "batch": data_axes if data_axes else None,
+        # activations may shard differently from inputs/caches: serve-mode
+        # 2D weight sharding replicates activations over `data`
+        # (act_batch=None) while the KV cache stays batch-sharded
+        "act_batch": data_axes if data_axes else None,
+        "cache_batch": data_axes if data_axes else None,
+        "seq": None,
+        # FSDP/ZeRO-3: weight matrices shard their d_model (input) dim over
+        # `data`, giving 2-D (data x model) weight sharding — without it the
+        # 400B-class archs replicate ~1 TB of parameters per data rank.
+        # GSPMD inserts the per-layer weight all-gathers this implies.
+        "d_model": "data" if "data" in axes else None,
+        "vocab": model,
+        "heads": model if shard_heads else None,
+        "kv_heads": None,  # GQA KV is small; replicated across model
+        "head_dim": None,
+        # context parallelism: archs whose head count does not divide the
+        # model axis (arctic 56H, qwen2-0.5b 14H, smollm 9H) shard the
+        # attention *query sequence* over `model` instead — otherwise the
+        # quadratic attention work replicates 16x across the axis.
+        "attn_seq": None if shard_heads else model,
+        "ff": model,
+        "inner": model,  # mamba d_inner / rwkv feature dim
+        "cache_inner": model,  # SSM cache feature dim (never widened)
+        "state": None,
+        "experts": model if shard_experts else None,
+        "expert_ff": None,
+        "layers": None,
+        "cache_seq": model if seq_shard_cache else None,
+        "dp_shard": "data" if (zero1 and "data" in axes) else None,
+        "frontend": None,
+    }
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(table=table, mesh=mesh)
+
+
+def logical_spec(rules: Optional[ShardingRules], *logical) -> PartitionSpec:
+    if rules is None:
+        return PartitionSpec()
+    return rules.spec(*logical)
+
+
+def shard(x, rules: Optional[ShardingRules], *logical):
+    """Apply a with_sharding_constraint from logical axis names (no-op when
+    rules is None, e.g. single-device tests)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.spec(*logical))

@@ -1,0 +1,188 @@
+"""FaultTolerantExecutor: policy behaviour, recovery correctness, waste
+ledger vs the analytic model, elastic/straggler logic."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointStore, latest_step
+from repro.core.events import make_event_trace
+from repro.core.predictor import SimulatedPredictor
+from repro.core.waste import Platform, PredictorModel
+from repro.ft import (
+    ElasticManager,
+    FaultInjector,
+    FaultTolerantExecutor,
+    SimClock,
+    StragglerDetector,
+    WallClock,
+)
+
+MN = 60.0
+
+
+def _sim_executor(strategy="auto", recall=0.85, precision=0.82, seed=0,
+                  steps_days=15.0, window=300.0, mu_mn=1000):
+    plat = Platform(mu=mu_mn * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+    pm = PredictorModel(recall, precision, window=window, lead=3600.0)
+    rng = np.random.default_rng(seed)
+    trace = make_event_trace(
+        rng, horizon=steps_days * 86400 * 4, mtbf=plat.mu,
+        recall=recall, precision=precision, window=window, lead=3600.0,
+    )
+    step_time = 30.0
+    ex = FaultTolerantExecutor(
+        step_fn=lambda s, k: s,
+        state=0,
+        platform=plat,
+        pred_model=pm,
+        predictor=SimulatedPredictor(trace, pm) if recall > 0 else None,
+        injector=FaultInjector(trace),
+        clock=SimClock(),
+        step_time=step_time,
+        strategy=strategy,
+    )
+    n_steps = int(steps_days * 86400 / step_time)
+    return ex, ex.run(n_steps)
+
+
+class TestSimulatedPolicy:
+    def test_waste_below_analytic_bound(self):
+        ex, rep = _sim_executor()
+        assert rep.ledger.waste() <= rep.analytic_waste * 1.1
+
+    def test_prediction_reduces_waste(self):
+        _, rep_pred = _sim_executor(strategy="auto", seed=1)
+        _, rep_young = _sim_executor(strategy="young", recall=0.0, seed=1)
+        assert rep_pred.ledger.waste() < rep_young.ledger.waste()
+
+    def test_proactive_checkpoints_taken(self):
+        _, rep = _sim_executor(seed=2)
+        assert rep.n_proactive > 0
+        assert rep.q == 1
+
+    def test_young_mode_has_no_proactive(self):
+        _, rep = _sim_executor(strategy="young", recall=0.0, seed=3)
+        assert rep.n_proactive == 0 and rep.n_migrations == 0
+
+    def test_migration_cancels_predicted_faults(self):
+        ex, rep = _sim_executor(strategy="migration", seed=4)
+        assert rep.n_migrations > 0
+        # most predicted faults are dodged: fault count well below Young's
+        _, rep_y = _sim_executor(strategy="young", recall=0.0, seed=4)
+        assert rep.n_faults < rep_y.n_faults
+
+    def test_period_matches_unified_formula(self):
+        ex, rep = _sim_executor(seed=5, window=0.0)
+        # uncapped unified period (Section 5 practice; see periods.py); the
+        # executor blends the configured recall with the *observed* recall,
+        # so allow the estimator's drift around r=0.85
+        t_pred = math.sqrt(2 * ex.platform.mu * ex.c_est / (1 - 0.85))
+        assert rep.period_T == pytest.approx(t_pred, rel=0.25)
+        # and it is strictly longer than Young's period (rq > 0)
+        assert rep.period_T > math.sqrt(2 * ex.platform.mu * ex.c_est) * 1.5
+
+
+class TestRealTrainingRecovery:
+    """Real CPU model + real checkpoints: the loss trajectory after an
+    injected fault + restore matches a fault-free run (deterministic
+    resume of the data pipeline)."""
+
+    def _run(self, tmp_path, inject: bool, n_steps=12):
+        from repro import configs
+        from repro.data.pipeline import SyntheticLMDataset
+        from repro.launch.steps import build_model, build_train_step
+        from repro.models.layers import RuntimeFlags
+        from repro.optim.adamw import adamw_init
+
+        cfg = configs.get("smollm-135m").reduced()
+        model, _ = build_model(cfg, mesh=None, flags=RuntimeFlags(dense_attn_max=256))
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        state = {"params": params, "opt": opt}
+        inner = jax.jit(build_train_step(model, lr=1e-3))
+        data = SyntheticLMDataset(cfg.vocab_size, 32, 4, seed=5)
+        losses = {}
+
+        def step_fn(st, k):
+            batch = {kk: jnp.asarray(v) for kk, v in data.batch(k).items()}
+            p, o, m = inner(st["params"], st["opt"], batch)
+            losses[k] = float(m["loss"])
+            return {"params": p, "opt": o}
+
+        store = CheckpointStore(str(tmp_path / ("inj" if inject else "ref")))
+        ckpt = AsyncCheckpointer(store)
+        injector = None
+        if inject:
+            # one fault mid-run (simulated times: 1s per step)
+            from repro.core.events import EventTrace, FaultEvent
+
+            trace = EventTrace(
+                horizon=1e9, faults=[FaultEvent(6.5)], predictions=[]
+            )
+            injector = FaultInjector(trace)
+
+        def restore_fn(step_k):
+            s = latest_step(store.root)
+            if s is None:  # fault before the first checkpoint: re-init
+                p0 = model.init(jax.random.PRNGKey(0))
+                return {"params": p0, "opt": adamw_init(p0)}
+            return store.restore(s, target=jax.eval_shape(lambda: state))
+
+        plat = Platform(mu=1e9 if not inject else 50.0, C=2.0, D=0.1, R=0.1)
+        ex = FaultTolerantExecutor(
+            step_fn=step_fn,
+            state=state,
+            platform=plat,
+            checkpointer=ckpt,
+            restore_fn=restore_fn,
+            load_state=lambda st, tree, k: tree,
+            injector=injector,
+            clock=SimClock(),
+            step_time=1.0,
+            strategy="young",
+        )
+        rep = ex.run(n_steps)
+        return losses, rep
+
+    def test_recovery_replays_identically(self, tmp_path):
+        ref_losses, _ = self._run(tmp_path, inject=False)
+        inj_losses, rep = self._run(tmp_path, inject=True)
+        assert rep.n_restores >= 1
+        # the final losses agree: the injected run replayed the same stream
+        last = max(ref_losses)
+        assert inj_losses[last] == pytest.approx(ref_losses[last], rel=1e-5)
+
+
+class TestElastic:
+    def test_spare_pool_swap(self):
+        em = ElasticManager(n_nodes=8, n_spares=2)
+        ev = em.migrate(node=3, reason="prediction")
+        assert not ev["shrunk"] and em.world_size == 8
+        em.migrate(node=5)
+        ev3 = em.migrate(node=7)  # spares exhausted -> shrink
+        assert ev3["shrunk"] and em.world_size == 7
+
+    def test_straggler_detector(self):
+        det = StragglerDetector(n_ranks=4, window=8, threshold=1.5, patience=2)
+        rng = np.random.default_rng(0)
+        flagged = []
+        for t in range(40):
+            for r in range(4):
+                dt = 1.0 + rng.normal(0, 0.02)
+                if r == 2 and t > 10:
+                    dt *= 2.5  # rank 2 degrades
+                det.record(r, dt)
+            flagged = det.check()
+        assert flagged == [2]
+
+    def test_no_false_positives_when_uniform(self):
+        det = StragglerDetector(n_ranks=4, window=8)
+        rng = np.random.default_rng(1)
+        for t in range(40):
+            for r in range(4):
+                det.record(r, 1.0 + rng.normal(0, 0.05))
+        assert det.check() == []

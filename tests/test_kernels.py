@@ -1,0 +1,148 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU, per the assignment)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ckpt_codec import dequantize_blocks, quantize_blocks
+from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rwkv6 import wkv6_bhsd
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+ATTN_SHAPES = [
+    # (BH, S, hd, blk_q, blk_k)
+    (2, 64, 32, 32, 32),
+    (4, 128, 64, 64, 32),
+    (1, 256, 16, 64, 64),
+    (3, 128, 128, 128, 128),
+]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,s,hd,bq,bk", ATTN_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_vs_oracle(self, bh, s, hd, bq, bk, dtype, causal):
+        rng = np.random.default_rng(hash((bh, s, hd, str(dtype), causal)) % 2**31)
+        q = _rand(rng, (bh, s, hd), dtype)
+        k = _rand(rng, (bh, s, hd), dtype)
+        v = _rand(rng, (bh, s, hd), dtype)
+        got = flash_attention_bhsd(
+            q, k, v, causal=causal, blk_q=bq, blk_k=bk, interpret=True
+        )
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        tol = 2e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+    def test_model_layout_wrapper(self):
+        rng = np.random.default_rng(0)
+        B, S, H, hd = 2, 64, 4, 32
+        q = _rand(rng, (B, S, H, hd), jnp.float32)
+        k = _rand(rng, (B, S, H, hd), jnp.float32)
+        v = _rand(rng, (B, S, H, hd), jnp.float32)
+        got = ops.flash_attention(q, k, v, blk_q=32, blk_k=32)
+        qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+        kf = jnp.moveaxis(k, 2, 1).reshape(B * H, S, hd)
+        vf = jnp.moveaxis(v, 2, 1).reshape(B * H, S, hd)
+        want = jnp.moveaxis(
+            ref.flash_attention_ref(qf, kf, vf).reshape(B, H, S, hd), 1, 2
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("bh,s,hd", [(2, 128, 32), (4, 256, 64), (1, 64, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("pos_frac", [0.0, 0.3, 0.99])
+    def test_vs_oracle(self, bh, s, hd, dtype, pos_frac):
+        rng = np.random.default_rng(hash((bh, s, hd, pos_frac)) % 2**31)
+        q = _rand(rng, (bh, hd), dtype)
+        k = _rand(rng, (bh, s, hd), dtype)
+        v = _rand(rng, (bh, s, hd), dtype)
+        pos = jnp.asarray(int(pos_frac * (s - 1)), jnp.int32)
+        got = decode_attention_bhd(q, k, v, pos, blk_k=32, interpret=True)
+        want = ref.decode_attention_ref(q, k, v, pos)
+        tol = 2e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("bh,s,hd,chunk", [
+        (2, 64, 16, 16), (1, 128, 32, 64), (3, 32, 64, 32), (2, 96, 16, 96),
+    ])
+    def test_vs_oracle(self, bh, s, hd, chunk):
+        rng = np.random.default_rng(hash((bh, s, hd, chunk)) % 2**31)
+        r = _rand(rng, (bh, s, hd), jnp.float32) * 0.3
+        k = _rand(rng, (bh, s, hd), jnp.float32) * 0.3
+        v = _rand(rng, (bh, s, hd), jnp.float32) * 0.3
+        w = jnp.asarray(rng.uniform(0.001, 0.9999, (bh, s, hd)), jnp.float32)
+        u = _rand(rng, (bh, hd), jnp.float32) * 0.1
+        s0 = _rand(rng, (bh, hd, hd), jnp.float32) * 0.05
+        y, sT = wkv6_bhsd(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+        y_ref, sT_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref), atol=1e-5)
+
+    def test_matches_model_ssm_path(self):
+        """Kernel == models.ssm._wkv_scan (the model's exact scan)."""
+        from repro.models.ssm import _wkv_scan
+
+        rng = np.random.default_rng(5)
+        B, S, H, hd = 2, 32, 2, 16
+        r = _rand(rng, (B, S, H, hd), jnp.float32) * 0.3
+        k = _rand(rng, (B, S, H, hd), jnp.float32) * 0.3
+        v = _rand(rng, (B, S, H, hd), jnp.float32) * 0.3
+        w = jnp.asarray(rng.uniform(0.01, 0.999, (B, S, H, hd)), jnp.float32)
+        u = _rand(rng, (H, hd), jnp.float32) * 0.1
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        y_model, s_model = _wkv_scan(r, k, v, w, u, s0)
+        y_kern, s_kern = ops.wkv6(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(
+            np.asarray(y_kern), np.asarray(y_model), atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_kern), np.asarray(s_model), atol=1e-5
+        )
+
+
+class TestCkptCodecKernel:
+    @pytest.mark.parametrize("nblocks,tile", [(4, 2), (16, 16), (8, 4)])
+    @pytest.mark.parametrize("delta", [False, True])
+    def test_vs_oracle(self, nblocks, tile, delta):
+        rng = np.random.default_rng(nblocks * 100 + tile + delta)
+        x = jnp.asarray(rng.standard_normal((nblocks, 256)), jnp.float32)
+        prev = (
+            x + jnp.asarray(rng.standard_normal((nblocks, 256)) * 1e-3, jnp.float32)
+            if delta
+            else None
+        )
+        q, s = quantize_blocks(x, prev, tile=tile, interpret=True)
+        q_ref, s_ref = ref.quantize_ref(x, prev)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+        back = dequantize_blocks(q, s, prev, tile=tile, interpret=True)
+        want = ref.dequantize_ref(q_ref, s_ref, prev)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(want), rtol=1e-6)
+
+    def test_host_codec_interop(self):
+        """Kernel output decodes with the host (checkpoint/codec.py) layout."""
+        rng = np.random.default_rng(9)
+        x = rng.standard_normal(1000).astype(np.float32)
+        q, s, n = ops.quantize_checkpoint(jnp.asarray(x))
+        back = ops.dequantize_checkpoint(q, s, n, (1000,))
+        assert np.abs(np.asarray(back) - x).max() < np.abs(x).max() / 127.0 + 1e-6

@@ -1,0 +1,174 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALPHA,
+    Platform,
+    PredictorModel,
+    best_policy,
+    optimize_exact,
+    t_extr,
+    t_p_opt,
+    waste_exact,
+    waste_nockpt,
+    waste_withckpt,
+    waste_young,
+)
+from repro.checkpoint.codec import decode_array, encode_array
+from repro.optim.adamw import _dequantize, _quantize
+from repro.optim.compress import ef_compress_step
+
+# parameter spaces: mu in [2h, 100d], C in [10s, 30mn] with C << mu
+mus = st.floats(min_value=7200.0, max_value=8.64e6)
+cs = st.floats(min_value=10.0, max_value=1800.0)
+rs = st.floats(min_value=0.0, max_value=0.99)
+ps = st.floats(min_value=0.05, max_value=1.0)
+qs = st.floats(min_value=0.0, max_value=1.0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(mu=mus, C=cs, r=rs, p=ps, q=qs)
+def test_unified_formula_structure(mu, C, r, p, q):
+    t = t_extr(mu, C, r, q)
+    assert t >= t_extr(mu, C)  # prediction never shortens the period
+    if r * q < 1:
+        assert t == pytest.approx(math.sqrt(2 * mu * C / (1 - r * q)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(mu=mus, C=cs, r=rs, p=ps, q=qs)
+def test_waste_affine_in_q(mu, C, r, p, q):
+    D, R = 60.0, 600.0
+    T = max(C * 1.5, math.sqrt(2 * mu * C))
+    w0 = waste_exact(T, 0.0, C, D, R, mu, r, p)
+    w1 = waste_exact(T, 1.0, C, D, R, mu, r, p)
+    wq = waste_exact(T, q, C, D, R, mu, r, p)
+    assert wq == pytest.approx(w0 + q * (w1 - w0), rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(mu=mus, C=cs, r=rs, p=ps)
+def test_optimal_policy_at_least_young(mu, C, r, p):
+    """Taking the predictor into account never hurts: the chosen policy's
+    waste <= Young's waste at its own optimum."""
+    plat = Platform(mu=mu, C=C, D=60.0, R=600.0)
+    pol = optimize_exact(plat, PredictorModel(r, p))
+    wy = optimize_exact(plat, PredictorModel(0.0, 1.0)).waste
+    assert pol.waste <= wy + 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(mu=mus, C=cs, r=st.floats(0.05, 0.99), p=ps)
+def test_waste_monotone_in_recall(mu, C, r, p):
+    plat = Platform(mu=mu, C=C, D=60.0, R=600.0)
+    w_low = optimize_exact(plat, PredictorModel(r * 0.5, p)).waste
+    w_high = optimize_exact(plat, PredictorModel(r, p)).waste
+    assert w_high <= w_low + 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(C=cs, p=ps, I=st.floats(10.0, 50000.0))
+def test_tp_opt_divides_window(C, p, I):
+    got = t_p_opt(C, p, I)
+    if got is None:
+        assert I < C
+    else:
+        tp, k = got
+        assert k >= 1
+        assert tp * k == pytest.approx(I, rel=1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(mu=mus, C=cs, r=rs, p=ps, I=st.floats(0.0, 20000.0))
+def test_window_wastes_positive_and_floor(mu, C, r, p, I):
+    """Window wastes carry at least the regular-mode checkpointing floor
+    (1 - I'/mu_P) * C/T (time spent in proactive mode is excused from it),
+    and are strictly positive."""
+    from repro.core.events import mu_p as _mu_p
+    from repro.core.waste import i_prime
+
+    D, R = 60.0, 600.0
+    T = max(C * 1.5, math.sqrt(2 * mu * C))
+    reg_frac = 1.0
+    if r > 0:
+        reg_frac = max(0.0, 1.0 - i_prime(1.0, p, I, I / 2) / _mu_p(mu, r, p))
+    for w in (
+        waste_nockpt(T, 1.0, C, D, R, mu, r, p, I, I / 2),
+        waste_withckpt(T, max(C, I or C), 1.0, C, D, R, mu, r, p, I, I / 2),
+    ):
+        assert w > 0
+        assert w >= reg_frac * C / T * (1 - 1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.lists(
+        st.floats(-1e3, 1e3, allow_nan=False, width=32), min_size=1, max_size=2000
+    )
+)
+def test_codec_roundtrip_bounded_error(data):
+    x = np.asarray(data, np.float32)
+    payload, meta = encode_array(x)
+    back = decode_array(payload, meta)
+    # blockwise absmax int8: error bounded by scale/2 = absmax/254 per block
+    flat = np.pad(x.reshape(-1), (0, (-x.size) % 256)).reshape(-1, 256)
+    bound = np.abs(flat).max(axis=1) / 127.0
+    err = np.abs(back - x).reshape(-1)
+    err = np.pad(err, (0, (-x.size) % 256)).reshape(-1, 256)
+    assert np.all(err <= bound[:, None] * 0.5 + 1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.lists(st.floats(-10, 10, width=32), min_size=1, max_size=1000),
+    scale=st.floats(1e-4, 1e-2),
+)
+def test_delta_codec_beats_plain(data, scale):
+    rng = np.random.default_rng(0)
+    prev = np.asarray(data, np.float32)
+    cur = prev + rng.standard_normal(prev.shape).astype(np.float32) * scale
+    pay_d, meta_d = encode_array(cur, prev)
+    pay_p, meta_p = encode_array(cur)
+    err_d = np.abs(decode_array(pay_d, meta_d, prev) - cur).max(initial=0.0)
+    err_p = np.abs(decode_array(pay_p, meta_p) - cur).max(initial=0.0)
+    assert err_d <= err_p + 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(10, 4000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moment_quantization_roundtrip(n, seed):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    q, s = _quantize(x)
+    back = _dequantize(q, s, (n,))
+    assert np.abs(np.asarray(back) - np.asarray(x)).max() <= float(
+        np.abs(np.asarray(x)).max()
+    ) / 127.0 * 0.51 + 1e-7
+
+
+def test_error_feedback_compensates():
+    """With error feedback, the accumulated applied gradient converges to
+    the true accumulated gradient (bounded residual)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    residual = {"g": jnp.zeros(512, jnp.float32)}
+    applied = jnp.zeros(512, jnp.float32)
+    for i in range(20):
+        out, residual = ef_compress_step({"g": g_true}, residual)
+        applied = applied + out["g"]
+    total_err = np.abs(np.asarray(applied - 20 * g_true)).max()
+    # residual is bounded (single-step quantization error), not accumulating
+    single = np.abs(np.asarray(g_true)).max() / 127.0
+    assert total_err <= 2 * single + 1e-6

@@ -1,0 +1,24 @@
+"""Distribution correctness on a small forced-host-device mesh.
+
+Runs in a subprocess because the device count must be fixed before jax
+initializes (the main test process keeps the default single device, per
+the assignment's instruction not to set XLA_FLAGS globally)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_sharded_numerics_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_sharded_check.py")
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True,
+        text=True,
+        timeout=1500,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SHARDED_CHECK_OK" in proc.stdout

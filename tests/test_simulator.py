@@ -1,0 +1,180 @@
+"""Discrete-event simulator vs the analytic model (paper Section 5)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Platform,
+    PredictorModel,
+    Strategy,
+    best_period_search,
+    simulate,
+    simulate_many,
+    t_extr,
+    waste_exact,
+    waste_young,
+)
+from repro.core import events as E
+from repro.core import simulator as S
+
+MN = 60.0
+PLAT = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+WORK = 20 * 86400.0
+PRED0 = PredictorModel(recall=0.0, precision=1.0)
+
+
+def _mean_waste(results):
+    return float(np.mean([r.waste for r in results]))
+
+
+class TestAgainstAnalytic:
+    def test_young_exponential(self):
+        """Simulated Young waste within the analytic upper bound and close."""
+        strat = S.young(PLAT)
+        res = simulate_many(WORK, PLAT, strat, PRED0, n_runs=30, seed=11)
+        w_sim = _mean_waste(res)
+        w_an = waste_young(strat.T_R, PLAT.C, PLAT.D, PLAT.R, PLAT.mu)
+        assert w_sim <= w_an * 1.05  # formula is an upper bound
+        assert abs(w_sim - w_an) / w_an < 0.25
+
+    def test_exact_prediction_exponential(self):
+        pred = PredictorModel(recall=0.85, precision=0.82)
+        strat = S.exact_prediction(PLAT, pred)
+        res = simulate_many(WORK, PLAT, strat, pred, n_runs=30, seed=13)
+        w_sim = _mean_waste(res)
+        w_an = waste_exact(
+            strat.T_R, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82
+        )
+        assert w_sim <= w_an * 1.05
+        assert abs(w_sim - w_an) / w_an < 0.3
+
+    def test_prediction_beats_young(self):
+        pred = PredictorModel(recall=0.85, precision=0.82)
+        wy = _mean_waste(
+            simulate_many(WORK, PLAT, S.young(PLAT), PRED0, n_runs=20, seed=3)
+        )
+        wp = _mean_waste(
+            simulate_many(
+                WORK, PLAT, S.exact_prediction(PLAT, pred), pred, n_runs=20, seed=3
+            )
+        )
+        assert wp < wy
+
+    def test_best_period_close_to_formula(self):
+        """Section 5 claim (ii): brute-force best period ~= T_extr^{1}."""
+        pred = PredictorModel(recall=0.85, precision=0.82)
+        base = S.exact_prediction(PLAT, pred)
+        best_t, best_w = best_period_search(
+            WORK / 4, PLAT, base, pred, n_runs=8, seed=5
+        )
+        w_formula = _mean_waste(
+            simulate_many(WORK / 4, PLAT, base, pred, n_runs=8, seed=5)
+        )
+        # the formula period's waste is within 10% of the brute-force best
+        assert w_formula <= best_w * 1.10
+
+
+class TestWindowStrategies:
+    PREDW = PredictorModel(recall=0.85, precision=0.82, window=3000.0)
+
+    def test_withckpt_uses_proactive_period(self):
+        strat = S.withckpt(PLAT, self.PREDW)
+        assert strat.mode == "withckpt" and strat.T_P is not None
+
+    def test_small_window_degenerates_to_nockpt(self):
+        pred = PredictorModel(recall=0.85, precision=0.82, window=300.0)
+        strat = S.withckpt(PLAT, pred)  # I < C: no checkpoint fits
+        assert strat.mode == "nockpt"
+
+    def test_all_strategies_run_and_beat_young(self):
+        wy = _mean_waste(
+            simulate_many(WORK, PLAT, S.young(PLAT), PRED0, n_runs=10, seed=7)
+        )
+        for mk in (S.instant, S.nockpt, S.withckpt):
+            strat = mk(PLAT, self.PREDW)
+            w = _mean_waste(
+                simulate_many(WORK, PLAT, strat, self.PREDW, n_runs=10, seed=7)
+            )
+            assert w < wy, strat.name
+
+    def test_migration_strategy(self):
+        pred = PredictorModel(recall=0.85, precision=0.82)
+        strat = S.migration(PLAT, pred)
+        res = simulate_many(WORK, PLAT, strat, pred, n_runs=10, seed=9)
+        assert all(r.n_migrations > 0 for r in res)
+        wy = _mean_waste(
+            simulate_many(WORK, PLAT, S.young(PLAT), PRED0, n_runs=10, seed=9)
+        )
+        assert _mean_waste(res) < wy
+
+
+class TestDistributions:
+    def test_trace_mean_scaling(self):
+        rng = np.random.default_rng(0)
+        for dist in [E.exponential(), E.weibull(0.7), E.weibull(0.5), E.lognormal()]:
+            x = dist.sample(rng, 5000.0, 200_000)
+            assert abs(x.mean() - 5000.0) / 5000.0 < 0.05, dist.name
+
+    def test_empirical_recall_precision(self):
+        rng = np.random.default_rng(1)
+        tr = E.make_event_trace(
+            rng, horizon=3e7, mtbf=6e4, recall=0.7, precision=0.4, window=300.0
+        )
+        assert abs(tr.empirical_recall() - 0.7) < 0.06
+        assert abs(tr.empirical_precision() - 0.4) < 0.06
+
+    def test_true_positive_fault_inside_window(self):
+        rng = np.random.default_rng(2)
+        tr = E.make_event_trace(
+            rng, horizon=1e7, mtbf=6e4, recall=1.0, precision=1.0, window=600.0
+        )
+        for p in tr.predictions:
+            assert p.fault_time is not None
+            assert p.t0 <= p.fault_time <= p.t0 + p.window + 1e-9
+
+    def test_superposed_freshstart_burnin(self):
+        """Weibull k<1 components fresh at t=0 => early hazard burst (the
+        mechanism behind the paper's heavy k=0.5 slowdowns)."""
+        rng = np.random.default_rng(3)
+        times = E.superposed_fault_times(
+            rng, horizon=50 * 86400.0, mtbf=6e4, n_components=4096,
+            dist=E.weibull(0.5),
+        )
+        day = 86400.0
+        first = np.searchsorted(times, day)
+        stationary_per_day = day / 6e4
+        assert first > 20 * stationary_per_day
+
+    def test_superposed_stationary_is_poissonish(self):
+        rng = np.random.default_rng(4)
+        times = E.superposed_fault_times(
+            rng, horizon=200 * 86400.0, mtbf=6e4, n_components=4096,
+            dist=E.weibull(0.7), stationary=True,
+        )
+        rate = len(times) / (200 * 86400.0)
+        assert abs(rate - 1 / 6e4) * 6e4 < 0.15
+
+
+class TestWeibullBehaviour:
+    def test_gain_larger_under_weibull_freshstart(self):
+        """Paper Tables 1-2: prediction gains are larger under Weibull
+        (k=0.7) with fresh-start superposed components than exponential."""
+        plat = Platform(mu=250 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        pred = PredictorModel(recall=0.85, precision=0.82)
+        kw = dict(n_runs=8, seed=21, n_components=2**14,
+                  fault_dist=E.weibull(0.7), horizon_factor=20)
+        wy = _mean_waste(simulate_many(WORK / 4, plat, S.young(plat), PRED0, **kw))
+        wp = _mean_waste(
+            simulate_many(WORK / 4, plat, S.exact_prediction(plat, pred), pred, **kw)
+        )
+        gain_wb = (wy - wp) / wy
+        kw2 = dict(n_runs=8, seed=21)
+        wy_e = _mean_waste(simulate_many(WORK / 4, plat, S.young(plat), PRED0, **kw2))
+        wp_e = _mean_waste(
+            simulate_many(WORK / 4, plat, S.exact_prediction(plat, pred), pred, **kw2)
+        )
+        gain_exp = (wy_e - wp_e) / wy_e
+        assert gain_wb > 0
+        assert wy > wy_e  # fresh-start Weibull hurts Young more

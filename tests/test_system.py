@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests: the shipped drivers run, survive injected
+faults, and reproduce the paper's headline result live (prediction-aware
+checkpointing beats Young on the same fault trace)."""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+def _run(args, timeout=1200):
+    proc = subprocess.run(
+        [sys.executable, "-m", *args],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=ENV,
+        cwd=ROOT,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_faultfree(tmp_path):
+    out = _run(
+        [
+            "repro.launch.train",
+            "--arch", "smollm-135m",
+            "--steps", "30",
+            "--batch", "4",
+            "--seq", "64",
+            "--ckpt-dir", str(tmp_path / "ck"),
+        ]
+    )
+    assert "run report" in out
+    losses = [float(m) for m in re.findall(r"loss (\d+\.\d+)", out)]
+    assert len(losses) >= 2 and losses[-1] < losses[0]
+
+
+@pytest.mark.slow
+def test_train_driver_with_faults_and_predictor(tmp_path):
+    out = _run(
+        [
+            "repro.launch.train",
+            "--arch", "qwen2-0.5b",
+            "--steps", "25",
+            "--batch", "4",
+            "--seq", "48",
+            "--inject-faults",
+            "--fault-mtbf", "6",
+            "--predictor", "paper-accurate",
+            "--ckpt-dir", str(tmp_path / "ck2"),
+        ]
+    )
+    assert "run report" in out
+    m = re.search(r"waste=(\d+\.\d+)", out)
+    assert m is not None
+    assert float(m.group(1)) < 1.0
+
+
+@pytest.mark.slow
+def test_serve_driver_with_faults(tmp_path):
+    out = _run(
+        [
+            "repro.launch.serve",
+            "--arch", "smollm-135m",
+            "--requests", "2",
+            "--prompt-len", "16",
+            "--gen", "24",
+            "--snapshot-every", "8",
+            "--inject-faults",
+            "--fault-mtbf", "2",
+        ]
+    )
+    assert "generated" in out
+
+
+def test_paper_headline_live():
+    """The core claim, executed through the real executor machinery:
+    on the same platform, the paper's policy wastes less than Young."""
+    import numpy as np
+
+    from repro.core import Platform, PredictorModel
+    from repro.core.events import make_event_trace
+    from repro.core.predictor import SimulatedPredictor
+    from repro.ft import FaultInjector, FaultTolerantExecutor, SimClock
+
+    MN = 60.0
+    plat = Platform(mu=125 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pm = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+
+    def run(strategy, recall):
+        trace = make_event_trace(
+            np.random.default_rng(42), horizon=40 * 86400, mtbf=plat.mu,
+            recall=recall, precision=pm.precision, window=pm.window,
+            lead=pm.lead,
+        )
+        ex = FaultTolerantExecutor(
+            step_fn=lambda s, k: s, state=0, platform=plat, pred_model=pm,
+            predictor=SimulatedPredictor(trace, pm) if recall else None,
+            injector=FaultInjector(trace), clock=SimClock(), step_time=30.0,
+            strategy=strategy,
+        )
+        return ex.run(int(8 * 86400 / 30.0))
+
+    rep_pred = run("auto", pm.recall)
+    rep_young = run("young", 0.0)
+    assert rep_pred.ledger.waste() < rep_young.ledger.waste()
+    # the gain at this scale is substantial (paper: tens of percent)
+    gain = 1 - rep_pred.ledger.waste() / rep_young.ledger.waste()
+    assert gain > 0.15

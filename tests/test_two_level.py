@@ -1,0 +1,61 @@
+"""Beyond-paper: two-level (memory buddy + disk) checkpointing model."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.periods import t_extr, two_level_periods
+from repro.core.waste import waste_two_level, waste_young
+
+MN = 60.0
+MU = 1000 * MN
+C_M, C_D = 30.0, 600.0  # RAM snapshot vs durable store
+D_, R_M, R_D = 60.0, 60.0, 600.0
+
+
+class TestTwoLevel:
+    def test_periods_are_stationary_points(self):
+        f = 0.9  # 90% of failures are single-node -> buddy-recoverable
+        t_m, t_d = two_level_periods(MU, C_M, C_D, f)
+        eps = 1e-3
+
+        def w(tm, td):
+            return waste_two_level(tm, td, C_M, C_D, D_, R_M, R_D, MU, f)
+
+        for dt, fixed in ((eps, "m"), (eps, "d")):
+            if fixed == "m":
+                d = (w(t_m + eps, t_d) - w(t_m - eps, t_d)) / (2 * eps)
+            else:
+                d = (w(t_m, t_d + eps) - w(t_m, t_d - eps)) / (2 * eps)
+            assert abs(d) < 1e-9
+
+    def test_beats_single_level(self):
+        """With a fast buddy tier covering most failures, two-level waste
+        beats the best single-level (disk-only) Young policy."""
+        f = 0.9
+        t_m, t_d = two_level_periods(MU, C_M, C_D, f)
+        w2 = waste_two_level(t_m, t_d, C_M, C_D, D_, R_M, R_D, MU, f)
+        t1 = max(t_extr(MU, C_D), C_D)
+        w1 = waste_young(t1, C_D, D_, R_D, MU)
+        assert w2 < w1
+        assert (w1 - w2) / w1 > 0.3  # the fast tier is a big win
+
+    def test_reduces_to_young_when_no_memory_tier(self):
+        """f -> 0: every failure needs disk; the disk term is Young's."""
+        t_m, t_d = two_level_periods(MU, 1e-9, C_D, f=1e-9)
+        assert t_d == pytest.approx(math.sqrt(2 * MU * C_D), rel=1e-3)
+
+    def test_prediction_composes(self):
+        """rq > 0 lengthens both periods by 1/sqrt(1-rq), as in Eq (1)."""
+        f, r, q = 0.9, 0.85, 1.0
+        t_m0, t_d0 = two_level_periods(MU, C_M, C_D, f)
+        t_m1, t_d1 = two_level_periods(MU, C_M, C_D, f, r, q)
+        k = 1 / math.sqrt(1 - r * q)
+        assert t_m1 / t_m0 == pytest.approx(k, rel=1e-6)
+        assert t_d1 / t_d0 == pytest.approx(k, rel=1e-6)
+
+    def test_disk_period_not_shorter_than_memory(self):
+        for f in (0.05, 0.5, 0.99):
+            t_m, t_d = two_level_periods(MU, C_M, C_D, f)
+            assert t_d >= t_m >= C_M

@@ -1,0 +1,212 @@
+"""Closed-form waste-model tests (paper Sections 3-4)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALPHA,
+    Platform,
+    PredictorModel,
+    best_policy,
+    mu_e,
+    mu_np,
+    mu_p,
+    nockpt_dominates,
+    optimize_exact,
+    optimize_migration,
+    optimize_nockpt,
+    optimize_withckpt,
+    t_extr,
+    t_one,
+    t_p_extr,
+    t_p_opt,
+    t_young,
+    waste_exact,
+    waste_instant,
+    waste_migration,
+    waste_nockpt,
+    waste_withckpt,
+    waste_young,
+)
+
+MN = 60.0
+PLAT = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+PRED = PredictorModel(recall=0.85, precision=0.82, window=300.0)
+
+
+class TestRateIdentities:
+    def test_section_2_3(self):
+        mu, r, p = 3.6e5, 0.7, 0.4
+        assert mu_np(mu, r) == pytest.approx(mu / (1 - r))
+        assert mu_p(mu, r, p) == pytest.approx(p * mu / r)
+        assert 1 / mu_e(mu, r, p) == pytest.approx(
+            1 / mu_np(mu, r) + 1 / mu_p(mu, r, p)
+        )
+
+    def test_degenerate(self):
+        assert math.isinf(mu_np(1000.0, 1.0))
+        assert math.isinf(mu_p(1000.0, 0.0, 0.5))
+
+
+class TestUnifiedFormula:
+    def test_reduces_to_young(self):
+        # r q = 0 -> sqrt(2 mu C) (Young [11])
+        assert t_extr(PLAT.mu, PLAT.C) == pytest.approx(
+            math.sqrt(2 * PLAT.mu * PLAT.C)
+        )
+        assert t_extr(PLAT.mu, PLAT.C, 0.9, 0.0) == t_extr(PLAT.mu, PLAT.C)
+
+    def test_prediction_lengthens_period(self):
+        t0 = t_extr(PLAT.mu, PLAT.C)
+        t1 = t_extr(PLAT.mu, PLAT.C, 0.85, 1.0)
+        assert t1 == pytest.approx(t0 / math.sqrt(1 - 0.85))
+        assert t1 > t0
+
+    def test_rq_one_diverges(self):
+        assert math.isinf(t_extr(PLAT.mu, PLAT.C, 1.0, 1.0))
+
+    def test_extremum_is_zero_of_derivative(self):
+        r, q = 0.7, 1.0
+        t = t_extr(PLAT.mu, PLAT.C, r, q)
+        eps = 1e-3
+        w = lambda T: waste_exact(T, q, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, r, 0.4)
+        deriv = (w(t + eps) - w(t - eps)) / (2 * eps)
+        assert abs(deriv) < 1e-10
+
+
+class TestWasteEquation1:
+    def test_matches_young_at_q0(self):
+        for T in [3000.0, 8485.0, 20000.0]:
+            assert waste_exact(
+                T, 0.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82
+            ) == pytest.approx(waste_young(T, PLAT.C, PLAT.D, PLAT.R, PLAT.mu))
+
+    def test_convex_in_T(self):
+        ts = np.linspace(PLAT.C, ALPHA * PLAT.mu, 200)
+        w = np.array(
+            [waste_exact(t, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82) for t in ts]
+        )
+        d2 = np.diff(w, 2)
+        assert np.all(d2 > -1e-12)
+
+    def test_affine_in_q(self):
+        # Section 3.3: waste is affine in q => optimum at q in {0,1}
+        T = 9000.0
+        w = lambda q: waste_exact(T, q, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82)
+        mid = w(0.5)
+        assert mid == pytest.approx(0.5 * (w(0.0) + w(1.0)))
+
+
+class TestOptimalPolicies:
+    def test_exact_prefers_prediction_for_good_predictor(self):
+        pol = optimize_exact(PLAT, PredictorModel(0.85, 0.82))
+        assert pol.q == 1
+        assert pol.waste < waste_young(
+            t_young(PLAT.mu, PLAT.C), PLAT.C, PLAT.D, PLAT.R, PLAT.mu
+        )
+
+    def test_exact_rejects_useless_predictor(self):
+        # terrible precision + tiny recall: not worth the extra checkpoints
+        pol = optimize_exact(PLAT, PredictorModel(recall=0.05, precision=0.02))
+        assert pol.q == 0
+
+    def test_clamping_to_domain(self):
+        # enormous C: T_extr < C -> clamp to C
+        plat = Platform(mu=5000.0, C=4000.0, D=60.0, R=600.0)
+        pol = optimize_exact(plat, PredictorModel(0.0, 1.0))
+        assert pol.T_R >= plat.C
+
+    def test_migration_beats_checkpoint_when_M_small(self):
+        pm = PredictorModel(0.85, 0.82)
+        plat = Platform(mu=PLAT.mu, C=PLAT.C, D=PLAT.D, R=PLAT.R, M=30.0)
+        wm = optimize_migration(plat, pm).waste
+        wc = optimize_exact(plat, pm).waste
+        assert wm < wc
+
+
+class TestWindowStrategies:
+    def test_tp_extr_equation7(self):
+        C, p, I = 600.0, 0.82, 3000.0
+        E = I / 2
+        K = ((1 - p) * I + p * E) / p
+        assert t_p_extr(C, p, I, E) == pytest.approx(math.sqrt(K * C))
+
+    def test_tp_opt_integer_partition(self):
+        got = t_p_opt(600.0, 0.82, 3000.0)
+        assert got is not None
+        tp, k = got
+        assert k == pytest.approx(3000.0 / tp)
+        assert tp >= 600.0
+
+    def test_tp_opt_infeasible_window(self):
+        assert t_p_opt(600.0, 0.82, 300.0) is None  # I < C
+
+    def test_equation12_uniform_reduction(self):
+        # uniform faults: NoCkptI dominates iff I <= 16 (1 - p/2) C / p
+        C, p = 600.0, 0.82
+        bound = 16 * (1 - p / 2) * C / p
+        assert nockpt_dominates(C, p, bound * 0.99)
+        assert not nockpt_dominates(C, p, bound * 1.01)
+
+    def test_instant_equals_exact_when_window_zero(self):
+        T = 9000.0
+        wi = waste_instant(T, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82, 0.0, 0.0)
+        we = waste_exact(T, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82)
+        assert wi == pytest.approx(we)
+
+    def test_nockpt_equals_instant_when_window_zero(self):
+        T = 9000.0
+        wn = waste_nockpt(T, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82, 0.0, 0.0)
+        wi = waste_instant(T, 1.0, PLAT.C, PLAT.D, PLAT.R, PLAT.mu, 0.85, 0.82, 0.0, 0.0)
+        assert wn == pytest.approx(wi)
+
+    def test_best_policy_prunes_withckpt_under_eq12(self):
+        pred = PredictorModel(0.85, 0.82, window=300.0)  # I < C: NoCkptI wins
+        pol = best_policy(PLAT, pred)
+        assert pol.strategy in ("instant", "nockpt")
+
+    def test_withckpt_viable_for_large_window(self):
+        pred = PredictorModel(0.85, 0.82, window=20000.0)
+        pol = optimize_withckpt(PLAT, pred)
+        if pol.q == 1:
+            assert pol.T_P is not None and pol.T_P >= PLAT.C
+
+
+class TestPaperHeadlines:
+    """Quantitative checks against the paper's own claims."""
+
+    def test_prediction_gain_grows_with_scale(self):
+        """Tables 1-2 trend: the *execution-time* gain from prediction
+        (time = W / (1 - waste)) increases with the number of processors."""
+        pred = PredictorModel(0.85, 0.82)
+        gains = []
+        for mu_mn in [4000, 1000, 250, 125]:
+            plat = Platform(mu=mu_mn * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+            wy = optimize_exact(plat, PredictorModel(0.0, 1.0)).waste
+            wp = optimize_exact(plat, pred).waste
+            gains.append(1.0 - (1.0 - wy) / (1.0 - wp))
+        assert all(g2 >= g1 - 1e-9 for g1, g2 in zip(gains, gains[1:]))
+        assert gains[-1] > 0.2  # paper: tens of percent at 2^19
+
+    def test_recall_matters_more_than_precision(self):
+        """Section 5.2: improving recall helps more than precision."""
+        base = PredictorModel(recall=0.4, precision=0.4)
+        up_r = PredictorModel(recall=0.8, precision=0.4)
+        up_p = PredictorModel(recall=0.4, precision=0.8)
+        plat = Platform(mu=125 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        w0 = optimize_exact(plat, base).waste
+        wr = optimize_exact(plat, up_r).waste
+        wp = optimize_exact(plat, up_p).waste
+        assert (w0 - wr) > (w0 - wp)
+
+    def test_even_poor_predictor_helps(self):
+        """Section 5: p=0.4, r=0.7 still yields a real execution-time gain
+        (the paper's 32% at 2^19 includes the Weibull penalty on Young;
+        the exponential-analytic share is smaller but clearly positive)."""
+        plat = Platform(mu=125 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        wy = optimize_exact(plat, PredictorModel(0.0, 1.0)).waste
+        wp = optimize_exact(plat, PredictorModel(0.7, 0.4)).waste
+        time_gain = 1.0 - (1.0 - wy) / (1.0 - wp)
+        assert time_gain > 0.05
