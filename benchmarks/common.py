@@ -1,16 +1,42 @@
-"""Shared helpers for the benchmark harness (CSV: name,us_per_call,derived)."""
+"""Shared helpers for the benchmark harness (CSV: name,us_per_call,derived).
+
+Every :func:`emit` line is also recorded in :data:`RECORDS` so the runner
+can dump a machine-readable ``BENCH_sim.json`` for cross-PR perf tracking.
+"""
 
 from __future__ import annotations
 
 import json
 import time
-from typing import Callable
+from typing import Callable, Dict, List
+
+#: records of the current harness run: {"name", "us_per_call", "derived"}
+RECORDS: List[Dict] = []
+
+
+def reset_records() -> None:
+    RECORDS.clear()
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
+    RECORDS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
     if not isinstance(derived, str):
         derived = json.dumps(derived, separators=(",", ":"))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_records_json(path: str, meta: Dict | None = None) -> None:
+    """Dump everything emitted so far as one JSON document."""
+    payload = {
+        "schema": "bench-sim/v1",
+        "generated_unix": time.time(),
+        **(meta or {}),
+        "benchmarks": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 def timed(fn: Callable, *args, n: int = 1, **kw):

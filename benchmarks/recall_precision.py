@@ -1,54 +1,65 @@
 """Figures 8-11 analog: impact of recall vs precision on the waste.
 
 Fix one of (r, p), sweep the other; report analytic optimal waste and a
-spot-check simulation.  The paper's conclusion — recall matters much more
-than precision — shows as the slope difference."""
+spot-check simulation (one batched grid over all sweep points).  The
+paper's conclusion — recall matters much more than precision — shows as
+the slope difference."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.configs.paper import C, D, MU_IND, R
-from repro.core import Platform, PredictorModel, optimize_exact, simulate_many
+from repro.core import Platform, PredictorModel, optimize_exact
 from repro.core import simulator as S
+from repro.experiments import ExperimentCell, run_cells
 
-from .common import emit, timed
+from .common import emit
 
 
 def run(quick: bool = True) -> None:
     n_runs = 4 if quick else 20
     work = 6 * 86400.0
-    sweep = [0.3, 0.5, 0.7, 0.9, 0.99]
+    sweep_vals = [0.3, 0.5, 0.7, 0.9, 0.99]
+
+    cells = []
+    for n in [2**16, 2**19]:
+        plat = Platform(mu=MU_IND / n, C=C, D=D, R=R)
+        for fixed_p in [0.4, 0.8]:
+            for r in sweep_vals:
+                pred = PredictorModel(r, fixed_p)
+                cells.append(
+                    ExperimentCell(
+                        label=f"fig10/N{n}/p{fixed_p}/r{r}",
+                        work=work,
+                        platform=plat,
+                        predictor=pred,
+                        strategy=S.exact_prediction(plat, pred),
+                    )
+                )
+    sweep = run_cells(cells, n_runs=n_runs, seed=3)
+    us_per_run = sweep.wall_time_s * 1e6 / sweep.grid.n_lanes
+
     for n in [2**16, 2**19]:
         plat = Platform(mu=MU_IND / n, C=C, D=D, R=R)
         for fixed_r in [0.4, 0.8]:
-            for p in sweep:
-                pred = PredictorModel(fixed_r, p)
-                pol = optimize_exact(plat, pred)
+            for p in sweep_vals:
+                pol = optimize_exact(plat, PredictorModel(fixed_r, p))
                 emit(
                     f"fig8/N{n}/r{fixed_r}/p{p}", 0.0,
                     {"waste_analytic": round(pol.waste, 4), "q": pol.q},
                 )
-        for fixed_p in [0.4, 0.8]:
-            for r in sweep:
-                pred = PredictorModel(r, fixed_p)
-                pol = optimize_exact(plat, pred)
-                res, us = timed(
-                    simulate_many, work, plat,
-                    S.exact_prediction(plat, pred), pred,
-                    n_runs=n_runs, seed=3,
-                )
-                emit(
-                    f"fig10/N{n}/p{fixed_p}/r{r}",
-                    us / n_runs,
-                    {
-                        "waste_analytic": round(pol.waste, 4),
-                        "waste_sim": round(
-                            float(np.mean([x.waste for x in res])), 4
-                        ),
-                        "q": pol.q,
-                    },
-                )
+    for cr in sweep.cells:
+        pol = optimize_exact(cr.cell.platform, cr.cell.predictor)
+        emit(
+            cr.cell.label,
+            us_per_run,
+            {
+                "waste_analytic": round(pol.waste, 4),
+                "waste_sim": round(cr.mean_waste, 4),
+                "q": pol.q,
+            },
+        )
 
 
 if __name__ == "__main__":

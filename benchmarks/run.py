@@ -1,9 +1,12 @@
 """Benchmark harness — one module per paper table/figure plus the
 system-level checkpoint/step/roofline benches.
 
-Prints ``name,us_per_call,derived`` CSV (assignment format).
+Prints ``name,us_per_call,derived`` CSV (assignment format) and writes the
+same records as machine-readable JSON (default ``BENCH_sim.json``) so the
+perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only sim_tables]
+                                            [--json BENCH_sim.json]
 """
 
 from __future__ import annotations
@@ -12,12 +15,24 @@ import argparse
 import sys
 import time
 
+from . import common
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale run counts")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json", default=None,
+        help="machine-readable output path ('' disables; default "
+        "BENCH_sim.json, or BENCH_sim.<module>.json under --only so "
+        "partial runs never clobber the full tracking file)",
+    )
     args = ap.parse_args()
+    if args.json is None:
+        args.json = (
+            f"BENCH_sim.{args.only}.json" if args.only else "BENCH_sim.json"
+        )
 
     from . import ckpt_bench, recall_precision, roofline_report, sim_tables, step_bench, waste_curves
 
@@ -29,14 +44,28 @@ def main() -> None:
         "step_bench": step_bench,        # real CPU step timings
         "roofline_report": roofline_report,  # Roofline table from cache
     }
+    common.reset_records()
     print("name,us_per_call,derived")
     t0 = time.monotonic()
+    ran = []
     for name, mod in modules.items():
         if args.only and name != args.only:
             continue
         print(f"# == {name} ==", file=sys.stderr, flush=True)
         mod.run(quick=not args.full)
-    print(f"# total {time.monotonic() - t0:.1f}s", file=sys.stderr)
+        ran.append(name)
+    total = time.monotonic() - t0
+    print(f"# total {total:.1f}s", file=sys.stderr)
+    if args.json:
+        common.write_records_json(
+            args.json,
+            meta={
+                "mode": "full" if args.full else "quick",
+                "modules": ran,
+                "total_s": round(total, 1),
+            },
+        )
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

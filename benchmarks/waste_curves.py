@@ -1,5 +1,8 @@
 """Figures 4-7 analog: waste vs platform size N, analytic (capped and
-uncapped periods) vs simulation, for both paper predictors."""
+uncapped periods) vs simulation, for both paper predictors.
+
+The simulated column is produced by the experiment-sweep layer: every
+(predictor, N) point is one cell of a single batched grid."""
 
 from __future__ import annotations
 
@@ -10,47 +13,57 @@ from repro.core import (
     Platform,
     PredictorModel,
     optimize_exact,
-    simulate_many,
     t_extr,
     waste_exact,
     waste_young,
 )
 from repro.core import simulator as S
+from repro.experiments import ExperimentCell, run_cells
 
-from .common import emit, timed
+from .common import emit
 
 
 def run(quick: bool = True) -> None:
     n_runs = 5 if quick else 25
     work = 8 * 86400.0
+    cells = []
     for p, r in [(0.82, 0.85), (0.4, 0.7)]:
         pred = PredictorModel(r, p)
         for n in N_RANGE if not quick else N_RANGE[::2]:
             plat = Platform(mu=MU_IND / n, C=C, D=D, R=R)
-            # analytic: capped (Section 3.3 domain) and uncapped (Section 5)
-            pol = optimize_exact(plat, pred)
-            t1 = t_extr(plat.mu, C, r, 1.0)
-            w_uncapped = waste_exact(t1, 1.0, C, D, R, plat.mu, r, p)
-            ty = t_extr(plat.mu, C)
-            w_young = waste_young(ty, C, D, R, plat.mu)
-            # simulated
-            res, us = timed(
-                simulate_many, work, plat,
-                S.exact_prediction(plat, pred), pred,
-                n_runs=n_runs, seed=7,
+            cells.append(
+                ExperimentCell(
+                    label=f"fig4/p{p}_r{r}/N{n}",
+                    work=work,
+                    platform=plat,
+                    predictor=pred,
+                    strategy=S.exact_prediction(plat, pred),
+                )
             )
-            w_sim = float(np.mean([x.waste for x in res]))
-            emit(
-                f"fig4/p{p}_r{r}/N{n}",
-                us / n_runs,
-                {
-                    "waste_young_analytic": round(w_young, 4),
-                    "waste_pred_capped": round(pol.waste, 4),
-                    "waste_pred_uncapped": round(min(w_uncapped, 1.0), 4),
-                    "waste_pred_sim": round(w_sim, 4),
-                    "q": pol.q,
-                },
-            )
+    sweep = run_cells(cells, n_runs=n_runs, seed=7)
+    us_per_run = sweep.wall_time_s * 1e6 / sweep.grid.n_lanes
+
+    for cr in sweep.cells:
+        plat, pred = cr.cell.platform, cr.cell.predictor
+        r, p = pred.recall, pred.precision
+        # analytic: capped (Section 3.3 domain) and uncapped (Section 5)
+        pol = optimize_exact(plat, pred)
+        t1 = t_extr(plat.mu, C, r, 1.0)
+        w_uncapped = waste_exact(t1, 1.0, C, D, R, plat.mu, r, p)
+        ty = t_extr(plat.mu, C)
+        w_young = waste_young(ty, C, D, R, plat.mu)
+        emit(
+            cr.cell.label,
+            us_per_run,
+            {
+                "waste_young_analytic": round(w_young, 4),
+                "waste_pred_capped": round(pol.waste, 4),
+                "waste_pred_uncapped": round(min(w_uncapped, 1.0), 4),
+                "waste_pred_sim": round(cr.mean_waste, 4),
+                "ci95": round(cr.ci95_waste, 4),
+                "q": pol.q,
+            },
+        )
 
 
 if __name__ == "__main__":

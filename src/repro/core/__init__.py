@@ -7,11 +7,17 @@ Modules:
   events      fault/prediction traces, rate identities (Section 2)
   waste       closed-form waste models, Eqs (1)(3)(4)(5)(6) (Sections 3-4)
   periods     optimal periods T_Y / T_1 / T_P, q in {0,1}, Eq (12) (Sections 3.3-4.3)
-  simulator   discrete-event engine reproducing Section 5
+  simulator   discrete-event engine reproducing Section 5 (scalar oracle)
+  batch_sim   lane-per-trace vectorized engine (NumPy, one lane per trace)
   predictor   predictor presets (Table 3) and runtime interface
 """
 
+from .batch_sim import (
+    BatchResult,
+    simulate_batch,
+)
 from .events import (
+    BatchTraces,
     Distribution,
     EventTrace,
     FaultEvent,
@@ -19,6 +25,7 @@ from .events import (
     exponential,
     lognormal,
     make_event_trace,
+    make_event_traces_batch,
     make_fault_trace,
     mu_e,
     mu_np,

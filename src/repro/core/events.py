@@ -35,6 +35,7 @@ __all__ = [
     "FaultEvent",
     "PredictionEvent",
     "EventTrace",
+    "BatchTraces",
     "Distribution",
     "exponential",
     "weibull",
@@ -42,7 +43,9 @@ __all__ = [
     "uniform",
     "make_fault_trace",
     "make_event_trace",
+    "make_event_traces_batch",
     "superposed_fault_times",
+    "superposed_fault_times_batch",
     "mu_np",
     "mu_p",
     "mu_e",
@@ -353,3 +356,338 @@ def make_event_trace(
     faults.sort()
     predictions.sort()
     return EventTrace(horizon=horizon, faults=faults, predictions=predictions)
+
+
+# --------------------------------------------------------------------------- #
+# Batched trace generation (lane-per-trace arrays)
+# --------------------------------------------------------------------------- #
+@dataclass
+class BatchTraces:
+    """``n_traces`` merged event traces as padded 2-D arrays (one lane per
+    trace, one column per event).
+
+    Rows are sorted in time; columns beyond a lane's event count are padded
+    with ``+inf`` (``NaN`` for ``pred_fault``).  Generated batches carry at
+    least one all-padding trailing column, which the vectorized engine uses
+    as its cursor sentinel (adopting the arrays without copying).
+    ``lane(i)`` materializes the scalar :class:`EventTrace` view of lane
+    ``i`` — the exact trace the reference engine consumes in
+    batched-vs-scalar equivalence checks.
+    """
+
+    horizon: np.ndarray  # (L,) per-lane horizon
+    fault_times: np.ndarray  # (L, F) sorted fault dates, +inf padded
+    fault_predicted: np.ndarray  # (L, F) bool, true-positive marks
+    n_faults: np.ndarray  # (L,) valid fault count per lane
+    pred_t0: np.ndarray  # (L, P) sorted window starts, +inf padded
+    pred_fault: np.ndarray  # (L, P) matched fault date, NaN for false positives
+    n_preds: np.ndarray  # (L,) valid prediction count per lane
+    window: np.ndarray  # (L,) prediction-window length
+    lead: np.ndarray  # (L,) announce lead
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.fault_times.shape[0])
+
+    def lane(self, i: int) -> EventTrace:
+        """Scalar :class:`EventTrace` view of lane ``i``."""
+        nf = int(self.n_faults[i])
+        npred = int(self.n_preds[i])
+        faults = [
+            FaultEvent(float(t), predicted=bool(p))
+            for t, p in zip(self.fault_times[i, :nf], self.fault_predicted[i, :nf])
+        ]
+        w, ld = float(self.window[i]), float(self.lead[i])
+        preds = []
+        for j in range(npred):
+            ft = float(self.pred_fault[i, j])
+            preds.append(
+                PredictionEvent(
+                    t0=float(self.pred_t0[i, j]),
+                    window=w,
+                    fault_time=None if math.isnan(ft) else ft,
+                    lead=ld,
+                )
+            )
+        return EventTrace(horizon=float(self.horizon[i]), faults=faults, predictions=preds)
+
+    def tile(self, reps: int) -> "BatchTraces":
+        """Repeat the whole batch ``reps`` times (lane block order preserved:
+        lanes [0..L) then [0..L) again, ...) — used to evaluate several
+        strategies on identical traces in a single engine call."""
+        return BatchTraces(
+            horizon=np.tile(self.horizon, reps),
+            fault_times=np.tile(self.fault_times, (reps, 1)),
+            fault_predicted=np.tile(self.fault_predicted, (reps, 1)),
+            n_faults=np.tile(self.n_faults, reps),
+            pred_t0=np.tile(self.pred_t0, (reps, 1)),
+            pred_fault=np.tile(self.pred_fault, (reps, 1)),
+            n_preds=np.tile(self.n_preds, reps),
+            window=np.tile(self.window, reps),
+            lead=np.tile(self.lead, reps),
+        )
+
+    def take(self, rows) -> "BatchTraces":
+        """New batch whose lane ``i`` is lane ``rows[i]`` of this batch
+        (rows may repeat — several strategies sharing identical traces)."""
+        rows = np.asarray(rows)
+        return BatchTraces(
+            horizon=self.horizon[rows],
+            fault_times=self.fault_times[rows],
+            fault_predicted=self.fault_predicted[rows],
+            n_faults=self.n_faults[rows],
+            pred_t0=self.pred_t0[rows],
+            pred_fault=self.pred_fault[rows],
+            n_preds=self.n_preds[rows],
+            window=self.window[rows],
+            lead=self.lead[rows],
+        )
+
+    @staticmethod
+    def concat(parts: Sequence["BatchTraces"]) -> "BatchTraces":
+        """Stack several batches into one (event columns padded to the
+        widest part) so heterogeneous groups share a single engine call."""
+
+        def cat2(arrs: List[np.ndarray], fill) -> np.ndarray:
+            width = max(a.shape[1] for a in arrs)
+            padded = [
+                a
+                if a.shape[1] == width
+                else np.concatenate(
+                    [a, np.full((a.shape[0], width - a.shape[1]), fill, a.dtype)],
+                    axis=1,
+                )
+                for a in arrs
+            ]
+            return np.concatenate(padded, axis=0)
+
+        return BatchTraces(
+            horizon=np.concatenate([p.horizon for p in parts]),
+            fault_times=cat2([p.fault_times for p in parts], np.inf),
+            fault_predicted=cat2([p.fault_predicted for p in parts], False),
+            n_faults=np.concatenate([p.n_faults for p in parts]),
+            pred_t0=cat2([p.pred_t0 for p in parts], np.inf),
+            pred_fault=cat2([p.pred_fault for p in parts], np.nan),
+            n_preds=np.concatenate([p.n_preds for p in parts]),
+            window=np.concatenate([p.window for p in parts]),
+            lead=np.concatenate([p.lead for p in parts]),
+        )
+
+
+def _arrival_times_batch(
+    rng: np.random.Generator,
+    dist: Distribution,
+    means: np.ndarray,
+    horizons: np.ndarray,
+    max_block: int = 4_000_000,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched renewal arrivals: one ``(L, m)`` sampling pass per round.
+
+    Relies on every :class:`Distribution` being a scale family — sampling at
+    mean 1 and multiplying by the per-lane mean yields the per-lane law.
+    Returns ``(times (L, W) +inf padded, counts (L,))`` with arrivals in
+    ``(0, horizon_i]`` per lane.
+    """
+    means = np.asarray(means, dtype=np.float64)
+    horizons = np.asarray(horizons, dtype=np.float64)
+    L = means.shape[0]
+    finite = np.isfinite(means) & (means > 0.0)
+    if L == 0 or not finite.any():
+        return np.empty((L, 0)), np.zeros(L, dtype=np.int64)
+    expected = np.where(finite, horizons / means, 0.0)
+
+    # heterogeneous lanes: split fast lanes from slow ones so the block
+    # width tracks each bucket's own expected count instead of the max
+    if L >= 8 and expected.max() > 4.0 * max(np.median(expected), 1.0):
+        cut = np.median(expected)
+        lo = np.flatnonzero(expected <= cut)
+        hi = np.flatnonzero(expected > cut)
+        t_lo, c_lo = _arrival_times_batch(rng, dist, means[lo], horizons[lo], max_block)
+        t_hi, c_hi = _arrival_times_batch(rng, dist, means[hi], horizons[hi], max_block)
+        width = max(t_lo.shape[1], t_hi.shape[1])
+        out = np.full((L, width), np.inf)
+        out[lo, : t_lo.shape[1]] = t_lo
+        out[hi, : t_hi.shape[1]] = t_hi
+        counts = np.zeros(L, dtype=np.int64)
+        counts[lo] = c_lo
+        counts[hi] = c_hi
+        return out, counts
+
+    cap = max(16, max_block // L)
+    m = int(np.clip(expected.max() * 1.25 + 8, 16, cap))
+    blocks: List[np.ndarray] = []
+    totals = np.zeros(L)
+    while True:
+        block = dist.sample(rng, 1.0, (L, m)) * means[:, None]
+        block = np.maximum(block, 1e-9)  # guard zero inter-arrivals
+        block[~finite] = np.inf
+        blocks.append(block)
+        totals = totals + block.sum(axis=1)
+        if np.all(~finite | (totals > horizons)):
+            break
+        m = max(16, m // 3)
+    times = np.cumsum(np.concatenate(blocks, axis=1), axis=1)
+    keep = times <= horizons[:, None]  # monotone rows: kept entries are a prefix
+    counts = keep.sum(axis=1).astype(np.int64)
+    width = int(counts.max())
+    return np.where(keep, times, np.inf)[:, :width], counts
+
+
+def _bc(x, L: int) -> np.ndarray:
+    return np.broadcast_to(np.asarray(x, dtype=np.float64), (L,)).copy()
+
+
+def superposed_fault_times_batch(
+    rng: np.random.Generator,
+    horizons: np.ndarray,
+    mtbfs: np.ndarray,
+    n_components: int,
+    dist: Distribution | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched fresh-start :func:`superposed_fault_times`: every lane's
+    component frontier advances in one flattened sampling pass per round
+    (the frontier shrinks geometrically, so a handful of rounds covers the
+    horizon).  Returns ``(times (L, W) +inf padded sorted, counts)``."""
+    dist = dist or exponential()
+    horizons = np.asarray(horizons, dtype=np.float64)
+    mtbfs = np.asarray(mtbfs, dtype=np.float64)
+    L = horizons.shape[0]
+    mu_ind = mtbfs * n_components
+    first = dist.sample(rng, 1.0, (L, n_components)) * mu_ind[:, None]
+    lane0, comp0 = np.nonzero(first < horizons[:, None])
+    f_lane = lane0
+    f_time = first[lane0, comp0]
+    all_lanes = [f_lane]
+    all_times = [f_time]
+    while f_lane.size:
+        gaps = np.maximum(
+            dist.sample(rng, 1.0, f_lane.size) * mu_ind[f_lane], 1e-9
+        )
+        nxt = f_time + gaps
+        keep = nxt < horizons[f_lane]
+        f_lane = f_lane[keep]
+        f_time = nxt[keep]
+        all_lanes.append(f_lane)
+        all_times.append(f_time)
+    lanes_cat = np.concatenate(all_lanes)
+    times_cat = np.concatenate(all_times)
+    counts = np.bincount(lanes_cat, minlength=L).astype(np.int64)
+    width = int(counts.max()) if lanes_cat.size else 0
+    out = np.full((L, width), np.inf)
+    order = np.lexsort((times_cat, lanes_cat))
+    lanes_s = lanes_cat[order]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(lanes_s.size) - starts[lanes_s]
+    out[lanes_s, pos] = times_cat[order]
+    return out, counts
+
+
+def make_event_traces_batch(
+    rng: np.random.Generator,
+    n_traces: int,
+    horizon,
+    mtbf,
+    recall,
+    precision,
+    window=0.0,
+    lead=math.inf,
+    fault_dist: Distribution | None = None,
+    false_pred_dist: Distribution | None = None,
+    n_components: Optional[int] = None,
+    stationary: bool = False,
+) -> BatchTraces:
+    """Batched :func:`make_event_trace`: one array-of-events generation pass
+    per distribution instead of ``n_traces`` Python loops.
+
+    All trace parameters broadcast to per-lane ``(n_traces,)`` arrays, so a
+    single call can carry a heterogeneous sweep (mixed MTBFs, predictors and
+    windows).  The generated traces are distributionally identical to the
+    scalar path but consume the RNG in a different order, so individual
+    traces differ draw-for-draw from :func:`make_event_trace` at equal seeds.
+    Superposed component traces (``n_components``) fall back to a per-lane
+    loop — the per-component sampling inside each lane is already vectorized.
+    """
+    L = int(n_traces)
+    horizon = _bc(horizon, L)
+    mtbf = _bc(mtbf, L)
+    recall = _bc(recall, L)
+    precision = _bc(precision, L)
+    window = _bc(window, L)
+    lead = _bc(lead, L)
+    fault_dist = fault_dist or exponential()
+    false_pred_dist = false_pred_dist or fault_dist
+
+    if n_components and stationary:
+        # the equilibrium first-arrival draw is pool-based: keep per-lane
+        rows = [
+            superposed_fault_times(
+                rng, float(horizon[i]), float(mtbf[i]), n_components,
+                fault_dist, stationary,
+            )
+            for i in range(L)
+        ]
+        n_faults = np.array([len(r) for r in rows], dtype=np.int64)
+        width = int(n_faults.max()) if L else 0
+        fault_times = np.full((L, width), np.inf)
+        for i, r in enumerate(rows):
+            fault_times[i, : len(r)] = r
+    elif n_components:
+        fault_times, n_faults = superposed_fault_times_batch(
+            rng, horizon, mtbf, n_components, fault_dist
+        )
+    else:
+        fault_times, n_faults = _arrival_times_batch(rng, fault_dist, mtbf, horizon)
+
+    cols = np.arange(fault_times.shape[1])[None, :]
+    valid = cols < n_faults[:, None]
+    predicted = valid & (rng.random(fault_times.shape) < recall[:, None])
+
+    # true-positive windows: fault uniformly distributed inside [t0, t0 + I]
+    offsets = rng.random(fault_times.shape) * window[:, None]
+    tp_t0 = np.where(predicted, np.maximum(0.0, fault_times - offsets), np.inf)
+    tp_ft = np.where(predicted, fault_times, np.nan)
+
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        fp_mean = np.where(
+            (recall > 0.0) & (precision < 1.0),
+            precision * mtbf / np.maximum(recall * (1.0 - precision), 1e-300),
+            np.inf,
+        )
+    fp_t0, n_fp = _arrival_times_batch(rng, false_pred_dist, fp_mean, horizon)
+
+    t0 = np.concatenate([tp_t0, fp_t0], axis=1)
+    ft = np.concatenate([tp_ft, np.full(fp_t0.shape, np.nan)], axis=1)
+    order = np.argsort(t0, axis=1, kind="stable")
+    t0 = np.take_along_axis(t0, order, axis=1)
+    ft = np.take_along_axis(ft, order, axis=1)
+    n_preds = predicted.sum(axis=1).astype(np.int64) + n_fp
+
+    # keep >= 1 trailing padding column: the engine's cursor sentinel
+    pwidth = (int(n_preds.max()) if L else 0) + 1
+    t0 = t0[:, :pwidth] if t0.shape[1] >= pwidth else np.concatenate(
+        [t0, np.full((L, pwidth - t0.shape[1]), np.inf)], axis=1
+    )
+    ft = ft[:, :pwidth] if ft.shape[1] >= pwidth else np.concatenate(
+        [ft, np.full((L, pwidth - ft.shape[1]), np.nan)], axis=1
+    )
+    fwidth = (int(n_faults.max()) if L else 0) + 1
+    if fault_times.shape[1] < fwidth:
+        fault_times = np.concatenate(
+            [fault_times, np.full((L, fwidth - fault_times.shape[1]), np.inf)],
+            axis=1,
+        )
+        predicted = np.concatenate(
+            [predicted, np.zeros((L, fwidth - predicted.shape[1]), bool)], axis=1
+        )
+
+    return BatchTraces(
+        horizon=horizon,
+        fault_times=fault_times,
+        fault_predicted=predicted[:, : fault_times.shape[1]],
+        n_faults=n_faults,
+        pred_t0=t0,
+        pred_fault=ft,
+        n_preds=n_preds,
+        window=window,
+        lead=lead,
+    )

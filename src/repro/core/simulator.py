@@ -25,7 +25,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .events import Distribution, EventTrace, exponential, make_event_trace
+from .events import Distribution, EventTrace, exponential
 from .waste import Platform, PredictorModel
 from . import periods as P
 
@@ -382,6 +382,37 @@ def simulate(
     return _Engine(work, platform, strategy, trace, rng).run()
 
 
+def _traces_for(
+    work: float,
+    platform: Platform,
+    strategy: Strategy,
+    pred: PredictorModel,
+    n_runs: int,
+    rng: np.random.Generator,
+    fault_dist: Optional[Distribution],
+    false_pred_dist: Optional[Distribution],
+    horizon_factor: float,
+    n_components: Optional[int],
+    stationary: bool,
+):
+    from .events import make_event_traces_batch
+
+    return make_event_traces_batch(
+        rng,
+        n_runs,
+        horizon=horizon_factor * work,
+        mtbf=platform.mu,
+        recall=pred.recall if strategy.mode != "none" else 0.0,
+        precision=pred.precision,
+        window=pred.window,
+        lead=pred.lead,
+        fault_dist=fault_dist or exponential(),
+        false_pred_dist=false_pred_dist,
+        n_components=n_components,
+        stationary=stationary,
+    )
+
+
 def simulate_many(
     work: float,
     platform: Platform,
@@ -394,29 +425,37 @@ def simulate_many(
     horizon_factor: float = 12.0,
     n_components: Optional[int] = None,
     stationary: bool = False,
+    engine: str = "batch",
 ) -> List[SimResult]:
     """Average behaviour over ``n_runs`` random traces (paper: 100 runs).
 
+    Traces are generated in one batched pass (see
+    :func:`repro.core.events.make_event_traces_batch`) and, with the default
+    ``engine="batch"``, simulated by the vectorized lane-per-trace engine
+    (:mod:`repro.core.batch_sim`).  ``engine="scalar"`` runs the reference
+    scalar engine over the *same* traces — useful as an oracle and for
+    benchmarking the vectorization itself.
+
     ``n_components`` switches the fault trace from a single renewal stream
     to the superposition of per-component renewals (see events.py)."""
-    results = []
-    for i in range(n_runs):
-        rng = np.random.default_rng(seed + 1000 * i + 17)
-        trace = make_event_trace(
-            rng,
-            horizon=horizon_factor * work,
-            mtbf=platform.mu,
-            recall=pred.recall if strategy.mode != "none" else 0.0,
-            precision=pred.precision,
-            window=pred.window,
-            lead=pred.lead,
-            fault_dist=fault_dist or exponential(),
-            false_pred_dist=false_pred_dist,
-            n_components=n_components,
-            stationary=stationary,
-        )
-        results.append(simulate(work, platform, strategy, trace, rng))
-    return results
+    rng = np.random.default_rng(seed)
+    traces = _traces_for(
+        work, platform, strategy, pred, n_runs, rng, fault_dist,
+        false_pred_dist, horizon_factor, n_components, stationary,
+    )
+    if engine == "batch":
+        from .batch_sim import simulate_batch
+
+        return simulate_batch(work, platform, strategy, traces, rng=rng).to_results()
+    if engine == "scalar":
+        return [
+            simulate(
+                work, platform, strategy, traces.lane(i),
+                np.random.default_rng(seed + 1000 * i + 17),
+            )
+            for i in range(n_runs)
+        ]
+    raise ValueError(f"unknown engine {engine!r} (expected 'batch' or 'scalar')")
 
 
 def best_period_search(
@@ -431,16 +470,24 @@ def best_period_search(
 ) -> tuple[float, float]:
     """BestPeriod counterpart (Section 5): brute-force the regular period.
 
+    All period multipliers are evaluated on identical traces in a single
+    batched engine call (lanes = multipliers x runs).
+
     Returns ``(best_T_R, best_mean_waste)``."""
-    best_t, best_w = base.T_R, math.inf
-    for m in grid:
-        t_r = max(platform.C * 1.01, base.T_R * m)
-        strat = Strategy(base.name, t_r, base.q, base.mode, base.T_P)
-        res = simulate_many(
-            work, platform, strat, pred, n_runs=n_runs, seed=seed,
-            fault_dist=fault_dist,
+    from .batch_sim import simulate_batch
+
+    rng = np.random.default_rng(seed)
+    traces = _traces_for(
+        work, platform, base, pred, n_runs, rng, fault_dist, None, 12.0,
+        None, False,
+    )
+    periods = [max(platform.C * 1.01, base.T_R * m) for m in grid]
+    strats: List[Strategy] = []
+    for t_r in periods:
+        strats.extend(
+            [Strategy(base.name, t_r, base.q, base.mode, base.T_P)] * n_runs
         )
-        w = float(np.mean([r.waste for r in res]))
-        if w < best_w:
-            best_t, best_w = t_r, w
-    return best_t, best_w
+    res = simulate_batch(work, platform, strats, traces.tile(len(grid)), rng=rng)
+    mean_waste = res.waste.reshape(len(grid), n_runs).mean(axis=1)
+    gi = int(np.argmin(mean_waste))
+    return periods[gi], float(mean_waste[gi])

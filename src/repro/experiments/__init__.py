@@ -1,0 +1,31 @@
+"""Unified experiment-sweep layer.
+
+Turns paper-scale Monte-Carlo sweeps — (recall, precision) x platform size x
+window x failure law x strategy — into a declarative grid executed by the
+vectorized lane-per-trace engine (:mod:`repro.core.batch_sim`):
+
+    from repro.experiments import ExperimentCell, run_cells
+
+    cells = [
+        ExperimentCell("young/N65536", work, platform, pred, young(platform)),
+        ExperimentCell("instant/N65536", work, platform, pred, instant(platform, pred)),
+    ]
+    sweep = run_cells(cells, n_runs=100, seed=0)
+    sweep["instant/N65536"].mean_waste
+    sweep.write_csv("sweep.csv"); sweep.write_json("sweep.json")
+
+``run_grid(grid, engine="scalar")`` replays the identical traces through
+the scalar reference engine for equivalence checks and speedup baselines.
+"""
+
+from .grid import CellResult, ExperimentCell, GridSpec, SweepResult
+from .runner import run_cells, run_grid
+
+__all__ = [
+    "CellResult",
+    "ExperimentCell",
+    "GridSpec",
+    "SweepResult",
+    "run_cells",
+    "run_grid",
+]

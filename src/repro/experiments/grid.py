@@ -1,0 +1,200 @@
+"""Experiment grid specification and structured sweep results.
+
+An :class:`ExperimentCell` pins down one Monte-Carlo estimation problem —
+(platform, predictor, strategy, failure law, job) — and a :class:`GridSpec`
+bundles many cells with shared run count and seed.  The runner
+(:mod:`repro.experiments.runner`) flattens every (cell, run) pair into one
+lane of the vectorized engine, so the whole grid advances in a single
+batched simulation call.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.events import Distribution, exponential
+from ..core.simulator import Strategy
+from ..core.waste import Platform, PredictorModel
+
+__all__ = ["ExperimentCell", "GridSpec", "CellResult", "SweepResult"]
+
+
+@dataclass(frozen=True)
+class ExperimentCell:
+    """One grid cell: a (platform, predictor, strategy, failure-law) point."""
+
+    label: str
+    work: float
+    platform: Platform
+    predictor: PredictorModel
+    strategy: Strategy
+    fault_dist: Optional[Distribution] = None  # None -> exponential
+    false_pred_dist: Optional[Distribution] = None
+    n_components: Optional[int] = None
+    stationary: bool = False
+    horizon_factor: float = 12.0
+
+    @property
+    def dist(self) -> Distribution:
+        return self.fault_dist or exponential()
+
+    @property
+    def gen_recall(self) -> float:
+        """Recall the *legacy* pipeline used at trace-generation time:
+        strategies that ignore predictions got a prediction-free trace
+        (mirrors ``simulate_many``).  The batched runner instead generates
+        full traces keyed on the predictor alone — faults are drawn before
+        prediction marking, so a mode-"none" baseline shares its fault
+        stream with the strategies measured against it (paired design),
+        and the engine's trust filter drops the predictions."""
+        return self.predictor.recall if self.strategy.mode != "none" else 0.0
+
+    def group_key(self) -> Tuple:
+        """Cells sharing a key can be generated in one batched pass."""
+        fp = self.false_pred_dist
+        return (
+            self.dist.name,
+            fp.name if fp is not None else None,
+            self.n_components,
+            self.stationary,
+        )
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    """A full sweep: cells x ``n_runs`` Monte-Carlo repetitions."""
+
+    cells: Tuple[ExperimentCell, ...]
+    n_runs: int = 100
+    seed: int = 0
+
+    def __post_init__(self):
+        labels = [c.label for c in self.cells]
+        if len(set(labels)) != len(labels):
+            dupes = sorted({l for l in labels if labels.count(l) > 1})
+            raise ValueError(f"duplicate cell labels: {dupes}")
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.cells) * self.n_runs
+
+
+@dataclass
+class CellResult:
+    """Aggregated Monte-Carlo statistics of one cell (mean +- 95% CI)."""
+
+    cell: ExperimentCell
+    waste: np.ndarray  # (n_runs,) per-run empirical waste
+    makespan: np.ndarray  # (n_runs,)
+    n_faults: np.ndarray
+    n_proactive_ckpts: np.ndarray
+    n_regular_ckpts: np.ndarray
+    n_migrations: np.ndarray
+    n_exhausted: int
+
+    @staticmethod
+    def _ci95(x: np.ndarray) -> float:
+        n = x.shape[0]
+        if n < 2:
+            return math.nan
+        return 1.96 * float(x.std(ddof=1)) / math.sqrt(n)
+
+    @property
+    def mean_waste(self) -> float:
+        return float(self.waste.mean())
+
+    @property
+    def ci95_waste(self) -> float:
+        return self._ci95(self.waste)
+
+    @property
+    def mean_makespan(self) -> float:
+        return float(self.makespan.mean())
+
+    @property
+    def ci95_makespan(self) -> float:
+        return self._ci95(self.makespan)
+
+    def to_row(self) -> Dict:
+        c = self.cell
+        def fin(x: float):  # keep serialized rows strict-JSON/CSV clean
+            return float(x) if math.isfinite(x) else None
+        return {
+            "label": c.label,
+            "strategy": c.strategy.name,
+            "T_R": c.strategy.T_R,
+            "mode": c.strategy.mode,
+            "mu": c.platform.mu,
+            "C": c.platform.C,
+            "recall": c.predictor.recall,
+            "precision": c.predictor.precision,
+            "window": c.predictor.window,
+            "dist": c.dist.name,
+            "work": c.work,
+            "n_runs": int(self.waste.shape[0]),
+            "mean_waste": self.mean_waste,
+            "ci95_waste": fin(self.ci95_waste),
+            "mean_makespan": self.mean_makespan,
+            "ci95_makespan": fin(self.ci95_makespan),
+            "mean_faults": float(self.n_faults.mean()),
+            "mean_proactive_ckpts": float(self.n_proactive_ckpts.mean()),
+            "mean_regular_ckpts": float(self.n_regular_ckpts.mean()),
+            "mean_migrations": float(self.n_migrations.mean()),
+            "n_exhausted": self.n_exhausted,
+        }
+
+
+#: column order of the CSV writer (and of ``to_row``)
+_CSV_FIELDS = [
+    "label", "strategy", "T_R", "mode", "mu", "C", "recall", "precision",
+    "window", "dist", "work", "n_runs", "mean_waste", "ci95_waste",
+    "mean_makespan", "ci95_makespan", "mean_faults", "mean_proactive_ckpts",
+    "mean_regular_ckpts", "mean_migrations", "n_exhausted",
+]
+
+
+@dataclass
+class SweepResult:
+    """Structured result of a grid sweep, with CSV/JSON serialization."""
+
+    grid: GridSpec
+    cells: List[CellResult]
+    engine: str
+    wall_time_s: float
+
+    def __getitem__(self, label: str) -> CellResult:
+        for c in self.cells:
+            if c.cell.label == label:
+                return c
+        raise KeyError(label)
+
+    def labels(self) -> List[str]:
+        return [c.cell.label for c in self.cells]
+
+    def to_rows(self) -> List[Dict]:
+        return [c.to_row() for c in self.cells]
+
+    def write_csv(self, path) -> None:
+        import csv
+
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=_CSV_FIELDS)
+            w.writeheader()
+            for row in self.to_rows():
+                w.writerow(row)
+
+    def write_json(self, path) -> None:
+        payload = {
+            "engine": self.engine,
+            "wall_time_s": self.wall_time_s,
+            "n_runs": self.grid.n_runs,
+            "seed": self.grid.seed,
+            "cells": self.to_rows(),
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, allow_nan=False)

@@ -1,0 +1,191 @@
+"""Batched engine vs scalar oracle: same traces, same results.
+
+The vectorized lane-per-trace engine (core/batch_sim.py) must agree with
+the scalar reference engine on every lane — across all five paper
+strategies and exponential/Weibull failure laws — up to the float drift of
+the clean-period fast-forward fusion (ulp-level on the makespan)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchTraces,
+    Platform,
+    PredictorModel,
+    make_event_traces_batch,
+    simulate_batch,
+)
+from repro.core import events as E
+from repro.core import simulator as S
+from repro.core.simulator import Strategy, simulate
+
+MN = 60.0
+PLAT = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+WORK = 20 * 86400.0
+PREDW = PredictorModel(recall=0.85, precision=0.82, window=3000.0)
+PRED = PredictorModel(recall=0.85, precision=0.82)
+PRED0 = PredictorModel(0.0, 1.0)
+
+#: absolute makespan tolerance: fast-forward fuses k work+checkpoint adds
+#: into one multiply, drifting the clock by ~ulp per fused period
+MK_TOL = 1e-3
+
+
+def _strategies():
+    return [
+        (S.young(PLAT), PRED0),
+        (S.exact_prediction(PLAT, PRED), PRED),
+        (S.instant(PLAT, PREDW), PREDW),
+        (S.nockpt(PLAT, PREDW), PREDW),
+        (S.withckpt(PLAT, PREDW), PREDW),
+        (S.migration(PLAT, PRED), PRED),
+    ]
+
+
+def _traces_for(strat, pred, dist, n=6, seed=42, **kw):
+    rng = np.random.default_rng(seed)
+    return make_event_traces_batch(
+        rng,
+        n,
+        horizon=12 * WORK,
+        mtbf=PLAT.mu,
+        recall=pred.recall if strat.mode != "none" else 0.0,
+        precision=pred.precision,
+        window=pred.window,
+        lead=pred.lead,
+        fault_dist=dist,
+        **kw,
+    )
+
+
+@pytest.mark.parametrize(
+    "dist", [E.exponential(), E.weibull(0.7), E.weibull(0.5)],
+    ids=["exp", "weibull0.7", "weibull0.5"],
+)
+def test_batch_matches_scalar_all_strategies(dist):
+    """Same seeds/traces through both engines: makespan within tolerance and
+    identical event counters, for all five paper strategies + migration."""
+    for strat, pred in _strategies():
+        traces = _traces_for(strat, pred, dist)
+        br = simulate_batch(WORK, PLAT, strat, traces)
+        for i in range(traces.n_lanes):
+            sr = simulate(WORK, PLAT, strat, traces.lane(i))
+            bl = br.lane(i)
+            assert bl.makespan == pytest.approx(sr.makespan, abs=MK_TOL), (
+                strat.name, dist.name, i,
+            )
+            assert bl.n_faults == sr.n_faults, (strat.name, dist.name, i)
+            assert bl.n_regular_ckpts == sr.n_regular_ckpts
+            assert bl.n_proactive_ckpts == sr.n_proactive_ckpts
+            assert bl.n_migrations == sr.n_migrations
+            assert bl.trace_exhausted == sr.trace_exhausted
+
+
+def test_batch_matches_scalar_superposed():
+    """Fresh-start superposed Weibull traces (the paper's heavy-burn-in
+    scenario) agree between engines too."""
+    plat = Platform(mu=250 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    strat = S.exact_prediction(plat, PRED)
+    rng = np.random.default_rng(5)
+    traces = make_event_traces_batch(
+        rng, 4, horizon=8 * WORK / 4, mtbf=plat.mu,
+        recall=PRED.recall, precision=PRED.precision,
+        fault_dist=E.weibull(0.7), n_components=2**12,
+    )
+    br = simulate_batch(WORK / 4, plat, strat, traces)
+    for i in range(traces.n_lanes):
+        sr = simulate(WORK / 4, plat, strat, traces.lane(i))
+        assert br.lane(i).makespan == pytest.approx(sr.makespan, abs=MK_TOL)
+        assert br.lane(i).n_faults == sr.n_faults
+
+
+def test_heterogeneous_lanes():
+    """Per-lane platforms/strategies in one call: each lane agrees with its
+    own scalar run."""
+    plats = [PLAT, Platform(mu=400 * MN, C=5 * MN, D=1 * MN, R=5 * MN)]
+    strats = [S.young(plats[0]), S.exact_prediction(plats[1], PRED)]
+    rng = np.random.default_rng(11)
+    traces = make_event_traces_batch(
+        rng, 2, horizon=12 * WORK,
+        mtbf=[p.mu for p in plats],
+        recall=[0.0, PRED.recall],
+        precision=[1.0, PRED.precision],
+        window=0.0,
+    )
+    br = simulate_batch(WORK, plats, strats, traces)
+    for i in range(2):
+        sr = simulate(WORK, plats[i], strats[i], traces.lane(i))
+        assert br.lane(i).makespan == pytest.approx(sr.makespan, abs=MK_TOL)
+
+
+def test_tile_and_take():
+    traces = _traces_for(S.young(PLAT), PRED0, E.exponential(), n=3)
+    tiled = traces.tile(2)
+    assert tiled.n_lanes == 6
+    taken = traces.take([2, 0, 0])
+    assert taken.n_lanes == 3
+    assert taken.n_faults[1] == taken.n_faults[2] == traces.n_faults[0]
+    br = simulate_batch(WORK, PLAT, S.young(PLAT), taken)
+    assert br.lane(1).makespan == br.lane(2).makespan
+
+
+def test_concat_pads_and_preserves_lanes():
+    a = _traces_for(S.young(PLAT), PRED0, E.exponential(), n=2, seed=1)
+    b = _traces_for(S.instant(PLAT, PREDW), PREDW, E.weibull(0.7), n=3, seed=2)
+    cat = BatchTraces.concat([a, b])
+    assert cat.n_lanes == 5
+    np.testing.assert_array_equal(cat.n_faults[:2], a.n_faults)
+    np.testing.assert_array_equal(cat.n_preds[2:], b.n_preds)
+    # lane views survive the width padding
+    la = a.lane(1)
+    lc = cat.lane(1)
+    assert [f.time for f in lc.faults] == [f.time for f in la.faults]
+    strat = S.instant(PLAT, PREDW)
+    br_cat = simulate_batch(WORK, PLAT, strat, cat)
+    br_b = simulate_batch(WORK, PLAT, strat, b)
+    for i in range(3):
+        assert br_cat.lane(2 + i).makespan == br_b.lane(i).makespan
+
+
+def test_batch_trace_statistics():
+    """Batched generation obeys the Section 2.3 rate identities."""
+    rng = np.random.default_rng(1)
+    traces = make_event_traces_batch(
+        rng, 8, horizon=3e7, mtbf=6e4, recall=0.7, precision=0.4, window=300.0
+    )
+    tr = BatchTraces.concat([traces])  # exercise the single-part path too
+    rec, prec = [], []
+    for i in range(tr.n_lanes):
+        lane = tr.lane(i)
+        rec.append(lane.empirical_recall())
+        prec.append(lane.empirical_precision())
+    assert abs(float(np.mean(rec)) - 0.7) < 0.05
+    assert abs(float(np.mean(prec)) - 0.4) < 0.05
+    # true positives sit inside their windows
+    lane = tr.lane(0)
+    for p in lane.predictions:
+        if p.fault_time is not None:
+            assert p.t0 <= p.fault_time <= p.t0 + p.window + 1e-9
+
+
+def test_fractional_q_trust_filter():
+    """0 < q < 1 keeps a ~q fraction of predictions (statistical check)."""
+    strat = Strategy("Half", S.young(PLAT).T_R, q=0.5, mode="exact")
+    traces = _traces_for(strat, PRED, E.exponential(), n=20, seed=9)
+    res = simulate_batch(WORK, PLAT, strat, traces, rng=np.random.default_rng(0))
+    full = simulate_batch(
+        WORK, PLAT, Strategy("Full", strat.T_R, q=1.0, mode="exact"), traces
+    )
+    # trusting half the predictions -> roughly half the proactive ckpts
+    ratio = res.n_proactive_ckpts.sum() / max(full.n_proactive_ckpts.sum(), 1)
+    assert 0.3 < ratio < 0.7
+
+
+def test_sentinel_columns_present():
+    """Generated batches carry the trailing pad column the engine adopts."""
+    traces = _traces_for(S.instant(PLAT, PREDW), PREDW, E.exponential(), n=4)
+    assert traces.fault_times.shape[1] > int(traces.n_faults.max())
+    assert np.all(np.isinf(traces.fault_times[:, -1]))
+    assert traces.pred_t0.shape[1] > int(traces.n_preds.max())

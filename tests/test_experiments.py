@@ -1,0 +1,167 @@
+"""The experiment-sweep layer: grid execution, batched-vs-scalar cell
+agreement (the CI equivalence gate for the benchmark acceptance), and the
+CSV/JSON writers."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Platform, PredictorModel
+from repro.core import events as E
+from repro.core import simulator as S
+from repro.experiments import ExperimentCell, GridSpec, run_cells, run_grid
+
+MN = 60.0
+WORK = 6 * 86400.0
+
+
+def _small_grid(n_platforms=2):
+    cells = []
+    for k in range(n_platforms):
+        plat = Platform(mu=(500 + 500 * k) * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        pred = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+        dist = E.exponential() if k % 2 == 0 else E.weibull(0.7)
+        for strat in (
+            S.young(plat),
+            S.exact_prediction(plat, PredictorModel(pred.recall, pred.precision)),
+            S.instant(plat, pred),
+            S.nockpt(plat, pred),
+            S.withckpt(plat, pred),
+        ):
+            cells.append(
+                ExperimentCell(
+                    label=f"k{k}/{strat.name}",
+                    work=WORK,
+                    platform=plat,
+                    predictor=pred,
+                    strategy=strat,
+                    fault_dist=dist,
+                )
+            )
+    return GridSpec(tuple(cells), n_runs=5, seed=17)
+
+
+def test_run_grid_shapes_and_labels():
+    grid = _small_grid()
+    sweep = run_grid(grid, engine="batch")
+    assert len(sweep.cells) == len(grid.cells)
+    assert sweep.labels() == [c.label for c in grid.cells]
+    for cr in sweep.cells:
+        assert cr.waste.shape == (grid.n_runs,)
+        assert np.all(cr.makespan >= WORK)
+        assert 0.0 < cr.mean_waste < 1.0
+        assert math.isfinite(cr.ci95_waste)
+
+
+def test_batch_scalar_cell_equivalence():
+    """Acceptance gate: per-cell mean waste of the batched path agrees with
+    the scalar path on the same grid within 2 relative percent (identical
+    traces make the agreement essentially exact)."""
+    grid = _small_grid()
+    batch = run_grid(grid, engine="batch")
+    scalar = run_grid(grid, engine="scalar")
+    for b, s in zip(batch.cells, scalar.cells):
+        rel = abs(b.mean_waste - s.mean_waste) / max(abs(s.mean_waste), 1e-12)
+        assert rel <= 0.02, (b.cell.label, rel)
+        # the agreement is in fact near-exact lane by lane
+        np.testing.assert_allclose(b.makespan, s.makespan, rtol=1e-9)
+
+
+def test_traces_shared_across_strategies():
+    """Cells differing only in strategy face identical traces (the paper's
+    paired design) — including the mode-"none" Young baseline, which shares
+    the fault stream and simply never acts on the predictions."""
+    from repro.experiments.runner import _group_cells, _group_traces
+
+    grid = _small_grid(n_platforms=1)
+    (_, cell_idx), = _group_cells(grid)
+    traces = _group_traces(grid, cell_idx, 0)
+    lanes_of = {grid.cells[ci].strategy.name: k for k, ci in enumerate(cell_idx)}
+    n = grid.n_runs
+    young = lanes_of["Young"] * n
+    inst = lanes_of["Instant"] * n
+    nock = lanes_of["NoCkptI"] * n
+    np.testing.assert_array_equal(
+        traces.fault_times[young : young + n], traces.fault_times[inst : inst + n]
+    )
+    np.testing.assert_array_equal(
+        traces.fault_times[inst : inst + n], traces.fault_times[nock : nock + n]
+    )
+    # ... and the baseline never takes a proactive checkpoint despite the
+    # predictions being present in its trace (trust filter drops them)
+    sweep = run_grid(grid, engine="batch")
+    assert sweep["k0/Young"].n_proactive_ckpts.sum() == 0
+    assert sweep["k0/Instant"].n_proactive_ckpts.sum() > 0
+
+
+def test_grid_rejects_duplicate_labels():
+    plat = Platform(mu=500 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82)
+    cell = ExperimentCell("dup", WORK, plat, pred, S.young(plat))
+    with pytest.raises(ValueError, match="duplicate"):
+        GridSpec((cell, cell), n_runs=2)
+
+
+def test_unknown_engine_rejected():
+    grid = _small_grid(n_platforms=1)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_grid(grid, engine="quantum")
+
+
+def test_csv_json_writers(tmp_path):
+    sweep = run_grid(_small_grid(n_platforms=1), engine="batch")
+    csv_path = tmp_path / "sweep.csv"
+    json_path = tmp_path / "sweep.json"
+    sweep.write_csv(csv_path)
+    sweep.write_json(json_path)
+
+    lines = csv_path.read_text().strip().splitlines()
+    assert len(lines) == 1 + len(sweep.cells)
+    assert lines[0].startswith("label,strategy,T_R,mode,mu")
+
+    payload = json.loads(json_path.read_text())
+    assert payload["engine"] == "batch"
+    assert payload["n_runs"] == sweep.grid.n_runs
+    rows = {r["label"]: r for r in payload["cells"]}
+    for cr in sweep.cells:
+        assert rows[cr.cell.label]["mean_waste"] == pytest.approx(cr.mean_waste)
+
+
+def test_simulate_many_engines_agree():
+    """The rewired simulate_many: batch and scalar engines on the same
+    generated traces return matching per-run results."""
+    plat = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82)
+    strat = S.exact_prediction(plat, pred)
+    rb = S.simulate_many(WORK, plat, strat, pred, n_runs=6, seed=3, engine="batch")
+    rs = S.simulate_many(WORK, plat, strat, pred, n_runs=6, seed=3, engine="scalar")
+    for b, s in zip(rb, rs):
+        assert b.makespan == pytest.approx(s.makespan, abs=1e-3)
+        assert b.n_faults == s.n_faults
+
+
+def test_best_period_search_batched():
+    """Batched best-period brute force: formula period's waste within 10%
+    of the best grid point (paper Section 5 claim (ii))."""
+    plat = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82)
+    base = S.exact_prediction(plat, pred)
+    best_t, best_w = S.best_period_search(WORK, plat, base, pred, n_runs=6, seed=5)
+    assert best_t >= plat.C
+    assert 0.0 < best_w < 1.0
+    res = S.simulate_many(WORK, plat, base, pred, n_runs=6, seed=5)
+    w_formula = float(np.mean([r.waste for r in res]))
+    assert w_formula <= best_w * 1.15
+
+
+def test_legacy_engine_runs():
+    """The legacy (seed-pipeline) engine stays available as the perf
+    baseline and returns the same structure."""
+    grid = _small_grid(n_platforms=1)
+    sweep = run_grid(grid, engine="legacy")
+    assert sweep.engine == "legacy"
+    for cr in sweep.cells:
+        assert cr.waste.shape == (grid.n_runs,)
+        assert 0.0 < cr.mean_waste < 1.0

@@ -19,8 +19,9 @@ SCRIPT = textwrap.dedent(
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.launch.hlo_analysis import analyze_hlo
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
 
     L, D, F, B = 3, 64, 128, 16
     def step(w1, w2, x):
@@ -52,8 +53,11 @@ SCRIPT = textwrap.dedent(
         cost.collective_bytes, expect_coll)
 
     # XLA's own cost_analysis counts the while body once -> our number
-    # must exceed it for L > 1
-    xla_flops = c.cost_analysis()["flops"]
+    # must exceed it for L > 1 (older JAX returns a per-device list)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_flops = ca["flops"]
     assert cost.flops > xla_flops, (cost.flops, xla_flops)
     print("ROOFLINE_PARSER_OK")
     """
