@@ -27,13 +27,15 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def write_records_json(path: str, meta: Dict | None = None) -> None:
-    """Dump everything emitted so far as one JSON document."""
+def write_records_json(
+    path: str, meta: Dict | None = None, records: List[Dict] | None = None
+) -> None:
+    """Dump everything emitted so far (or an explicit subset) as JSON."""
     payload = {
         "schema": "bench-sim/v1",
         "generated_unix": time.time(),
         **(meta or {}),
-        "benchmarks": RECORDS,
+        "benchmarks": RECORDS if records is None else records,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -1,0 +1,94 @@
+"""Lanes-throughput curve: JAX device engine vs the NumPy batch engine.
+
+One representative paper cell (Instant strategy, exponential faults,
+accurate predictor) swept over lane counts; both engines consume the same
+generated ``BatchTraces``, so the per-lane results must agree while the
+wall-clock diverges.  The JAX engine is warmed up first (its jit compile
+is a one-off, amortized across every later call at the same chunk shape)
+and timed in steady state — the number a long Monte-Carlo campaign sees.
+
+Acceptance trajectory: jax lanes/s >= numpy lanes/s at 10k lanes on CPU
+(expected >> on an accelerator, where the Pallas hot step compiles to a
+real Mosaic kernel instead of interpret mode).
+
+    PYTHONPATH=src python -m benchmarks.jax_engine [--full]
+    PYTHONPATH=src python -m benchmarks.run --only jax_engine
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Platform, PredictorModel, make_event_traces_batch, simulate_batch
+from repro.core import simulator as S
+from repro.core.jax_sim import simulate_batch_jax
+
+from .common import emit
+
+MN = 60.0
+WORK = 10 * 86400.0
+LANES_QUICK = [1024, 4096, 10240]
+LANES_FULL = [1024, 4096, 10240, 32768, 102400]
+
+
+def _traces(n: int, plat: Platform, pred: PredictorModel, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return make_event_traces_batch(
+        rng, n, horizon=12 * WORK, mtbf=plat.mu,
+        recall=pred.recall, precision=pred.precision,
+        window=pred.window, lead=pred.lead,
+    )
+
+
+def run(quick: bool = True) -> None:
+    plat = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+    strat = S.instant(plat, pred)
+    reps = 3 if quick else 5
+    for n in LANES_QUICK if quick else LANES_FULL:
+        traces = _traces(n, plat, pred)
+
+        res_np = simulate_batch(WORK, plat, strat, traces)
+        res_jx = simulate_batch_jax(WORK, plat, strat, traces)  # jit warmup
+
+        # interleaved best-of-N: both engines see the same machine noise
+        np_times, jx_times = [], []
+        for _ in range(reps):
+            np_times.append(
+                _timed(lambda: simulate_batch(WORK, plat, strat, traces))
+            )
+            jx_times.append(
+                _timed(lambda: simulate_batch_jax(WORK, plat, strat, traces))
+            )
+        np_s, jx_s = min(np_times), min(jx_times)
+
+        agree = float(np.abs(res_jx.waste - res_np.waste).max())
+        emit(
+            f"jax_engine/lanes{n}",
+            jx_s * 1e6 / n,
+            {
+                "numpy_s": round(np_s, 3),
+                "jax_s": round(jx_s, 3),
+                "numpy_lanes_per_s": round(n / np_s, 1),
+                "jax_lanes_per_s": round(n / jx_s, 1),
+                "speedup_vs_numpy": round(np_s / jx_s, 2),
+                "max_abs_waste_diff": agree,
+            },
+        )
+
+
+def _timed(fn) -> float:
+    t0 = time.monotonic()
+    fn()
+    return time.monotonic() - t0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full)

@@ -34,12 +34,16 @@ def main() -> None:
             f"BENCH_sim.{args.only}.json" if args.only else "BENCH_sim.json"
         )
 
-    from . import ckpt_bench, recall_precision, roofline_report, sim_tables, step_bench, waste_curves
+    from . import (
+        ckpt_bench, jax_engine, recall_precision, roofline_report,
+        sim_tables, step_bench, waste_curves,
+    )
 
     modules = {
         "sim_tables": sim_tables,        # Tables 1-2
         "waste_curves": waste_curves,    # Figures 4-7
         "recall_precision": recall_precision,  # Figures 8-11
+        "jax_engine": jax_engine,        # device-engine throughput curve
         "ckpt_bench": ckpt_bench,        # C measurement + waste impact
         "step_bench": step_bench,        # real CPU step timings
         "roofline_report": roofline_report,  # Roofline table from cache
@@ -57,15 +61,25 @@ def main() -> None:
     total = time.monotonic() - t0
     print(f"# total {total:.1f}s", file=sys.stderr)
     if args.json:
-        common.write_records_json(
-            args.json,
-            meta={
-                "mode": "full" if args.full else "quick",
-                "modules": ran,
-                "total_s": round(total, 1),
-            },
-        )
+        meta = {
+            "mode": "full" if args.full else "quick",
+            "modules": ran,
+            "total_s": round(total, 1),
+        }
+        common.write_records_json(args.json, meta=meta)
         print(f"# wrote {args.json}", file=sys.stderr)
+        if "jax_engine" in ran and not args.only:
+            # the device-engine throughput curve also lands in its own
+            # tracking file, next to the main BENCH_sim.json
+            common.write_records_json(
+                "BENCH_sim.jax_engine.json",
+                meta=meta,
+                records=[
+                    r for r in common.RECORDS
+                    if r["name"].startswith("jax_engine/")
+                ],
+            )
+            print("# wrote BENCH_sim.jax_engine.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ ExactPrediction, Instant, NoCkptI, WithCkptI.
 The whole grid is declared as experiment cells and executed by the
 vectorized sweep layer (one batched engine call per failure-law group).
 
-    PYTHONPATH=src python -m benchmarks.sim_tables [--quick] [--engine batch|scalar]
+    PYTHONPATH=src python -m benchmarks.sim_tables [--quick] [--engine batch|jax|scalar]
     PYTHONPATH=src python -m benchmarks.sim_tables --quick --compare   # speedup + equivalence
 """
 
@@ -143,7 +143,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
-        "--engine", choices=["batch", "scalar", "legacy"], default="batch"
+        "--engine", choices=["batch", "jax", "scalar", "legacy"], default="batch"
     )
     ap.add_argument(
         "--compare", action="store_true",

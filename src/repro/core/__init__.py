@@ -9,6 +9,8 @@ Modules:
   periods     optimal periods T_Y / T_1 / T_P, q in {0,1}, Eq (12) (Sections 3.3-4.3)
   simulator   discrete-event engine reproducing Section 5 (scalar oracle)
   batch_sim   lane-per-trace vectorized engine (NumPy, one lane per trace)
+  jax_sim     device-resident engine (jit + lax.while_loop + Pallas step;
+              imported lazily so NumPy-only paths never pay the JAX import)
   predictor   predictor presets (Table 3) and runtime interface
 """
 
@@ -75,4 +77,15 @@ from .waste import (
     waste_young,
 )
 
+# simulate_batch_jax deliberately stays out of __all__: a star import
+# must remain jax-free; the lazy __getattr__ below still serves
+# `repro.core.simulate_batch_jax` (and from-imports of it) on demand
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+
+def __getattr__(name: str):
+    if name == "simulate_batch_jax":  # lazy: pulls in jax on first use
+        from .jax_sim import simulate_batch_jax
+
+        return simulate_batch_jax
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

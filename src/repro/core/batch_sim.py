@@ -50,7 +50,7 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from .events import BatchTraces
+from .events import BatchTraces, pad_sentinel
 from .simulator import SimResult, Strategy, _EPS
 from .waste import Platform
 
@@ -209,18 +209,11 @@ class _BatchEngine:
         # the cursors need an +inf sentinel column; generated batches carry
         # one already, so the arrays are adopted without copying (the engine
         # never writes them — lane-local mutation goes through Fcancel)
-        F = traces.fault_times
-        nf_max = int(traces.n_faults.max()) if L else 0
-        if F.shape[1] <= nf_max:
-            F = np.concatenate([F, np.full((L, 1), np.inf)], axis=1)
+        F = pad_sentinel(traces.fault_times, traces.n_faults, np.inf)
         self.F = F
         self.Fcancel = np.zeros(F.shape, dtype=bool)
-        np_max = int(traces.n_preds.max()) if L else 0
-        if p_t0.shape[1] <= np_max:
-            p_t0 = np.concatenate([p_t0, np.full((L, 1), np.inf)], axis=1)
-            p_ft = np.concatenate([p_ft, np.full((L, 1), np.nan)], axis=1)
-        self.P0 = p_t0
-        self.Pft = p_ft
+        self.P0 = pad_sentinel(p_t0, traces.n_preds, np.inf)
+        self.Pft = pad_sentinel(p_ft, traces.n_preds, np.nan)
 
         z = lambda dt: np.zeros(L, dtype=dt)
         self.t = z(np.float64)

@@ -36,6 +36,7 @@ __all__ = [
     "PredictionEvent",
     "EventTrace",
     "BatchTraces",
+    "pad_sentinel",
     "Distribution",
     "exponential",
     "weibull",
@@ -361,6 +362,33 @@ def make_event_trace(
 # --------------------------------------------------------------------------- #
 # Batched trace generation (lane-per-trace arrays)
 # --------------------------------------------------------------------------- #
+def pad_sentinel(
+    a: np.ndarray,
+    counts: np.ndarray,
+    fill,
+    round_pow2: bool = False,
+    min_width: int = 1,
+) -> np.ndarray:
+    """Cursor-ready event array: guarantee at least one all-``fill``
+    column past every lane's ``counts[i]`` valid events.
+
+    Both vectorized engines walk event rows with per-lane cursors and rely
+    on a terminating sentinel column instead of bounds checks.  Arrays that
+    are already wide enough are adopted unchanged (zero copy — the engines
+    never write them).  ``round_pow2`` rounds the column count up to a
+    power of two so device engines see bucketed shapes and re-use their
+    compiled executables across batches of slightly different widths.
+    """
+    need = (int(counts.max()) if counts.size else 0) + 1
+    need = max(need, min_width)
+    if round_pow2:
+        need = 1 << (need - 1).bit_length()
+    if a.shape[1] >= need:
+        return a
+    pad = np.full((a.shape[0], need - a.shape[1]), fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=1)
+
+
 @dataclass
 class BatchTraces:
     """``n_traces`` merged event traces as padded 2-D arrays (one lane per

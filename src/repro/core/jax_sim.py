@@ -1,0 +1,575 @@
+"""JAX/Pallas device simulation engine (``engine="jax"``).
+
+Design note — the device lane semantics (mirrors ``batch_sim.py``)
+==================================================================
+
+This module re-expresses the NumPy lane-per-trace engine
+(:mod:`repro.core.batch_sim`) as a *fixed-shape masked computation* that
+jit-compiles to a single XLA while-loop, unlocking Monte-Carlo campaigns
+(10^4-10^5 traces) the interpreter-bound engines cannot reach:
+
+* **Stacked lane-state pytree** — every per-lane quantity of the NumPy
+  engine (clock ``t``, ``saved``/``unsaved`` work, fault/prediction
+  cursors ``fi``/``pi``, phase code, event counters, the mutable
+  fault-cancellation mask) becomes one device array of shape ``(L,)``
+  (``(L, F)`` for the cancellation mask) carried through
+  ``lax.while_loop``.
+* **Masked phase decisions** — the NumPy engine's boolean-index writes
+  (``prim[ck] = ...``) become ``jnp.where`` merges keyed on the phase
+  codes captured at the top of the iteration; every lane advances by
+  exactly one primitive per outer iteration, exactly as in NumPy.
+* **No live-lane repacking** — the NumPy engine compacts finished lanes
+  away; here a finished lane goes *inert* (phase ``DONE`` masks every
+  update) because fixed shapes are what lets XLA fuse each iteration
+  into a handful of kernels.  Host-side ``chunk`` scheduling recovers
+  the lost-work bound (and the memory bound) for very large grids.
+* **Data-dependent inner loops** — skipping predictions whose action
+  point passed, and cascading faults that strike during downtime, are
+  nested ``lax.while_loop``s whose bodies advance *all* affected lanes
+  per pass; they terminate in a few passes since each pass consumes one
+  event per active lane.
+* **Pallas hot step** — the masked primitive execution (fault check +
+  work/idle/checkpoint update) is the dense elementwise block run every
+  iteration; it executes as a Pallas kernel
+  (:mod:`repro.kernels.sim_step`), interpret-mode off-TPU, with a
+  pure-jnp fallback (``use_pallas=False``) that shares the same body.
+
+Because this engine and the NumPy engine execute the same primitive
+sequence in the same order, their makespans agree to float rounding when
+run in float64 (``precision="x64"``, the default off-TPU; TPUs have no
+f64 and fall back to f32).  Trust filtering happens host-side through
+the NumPy engine's own filter, so the deterministic trust settings
+``q in {0, 1}`` used by all paper strategies are trace-identical across
+the scalar, NumPy-batch, and JAX engines.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from . import batch_sim as B
+from .batch_sim import BatchResult
+from .events import BatchTraces, pad_sentinel
+from .simulator import Strategy, _EPS
+from .waste import Platform
+
+__all__ = ["simulate_batch_jax", "LANE_TILE"]
+
+#: lane-count granularity: 8 f32 sublanes x 128 lanes, the Pallas tile
+LANE_TILE = 1024
+
+#: default chunks: bound device-resident lanes so 100k-lane grids don't
+#: OOM (and bound the inert-lane overhead of the no-repacking design).
+#: On CPU a cache-sized chunk beats one giant batch; accelerators want
+#: large chunks to stay utilization-bound.
+_DEFAULT_CHUNK_CPU = 5120
+_DEFAULT_CHUNK_DEV = 16384
+
+
+def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
+             has_migration):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..kernels.sim_step import (
+        FLAG_CKPT_OK, FLAG_FAULTED, FLAG_FIN, FLAG_OK, FLAG_REG,
+        PRIM_WORK_NC, masked_primitive_update, primitive_update,
+    )
+
+    CONT2PH = jnp.asarray(B._CONT2PH, jnp.int32)
+    MODE2PH = jnp.asarray(B._MODE2PH, jnp.int32)
+
+    # event arrays are (events, lanes): cursor gathers a[cursor[l], l]
+    # then touch a handful of contiguous (L,)-rows (lanes advance through
+    # their traces roughly in step), not one element per 2 KB row of the
+    # (lanes, events) layout — the difference between L1 hits and L cache
+    # misses per gather, several times per iteration
+    F, P0, Pft = consts["F"], consts["P0"], consts["Pft"]
+    W, C, DR = consts["W"], consts["C"], consts["DR"]
+    T_R, T_P, mode = consts["T_R"], consts["T_P"], consts["mode"]
+    horizon, window = consts["horizon"], consts["window"]
+    wpp, lead_act = consts["wpp"], consts["lead_act"]
+    tp_eff_default = consts["tp_eff_default"]
+    frows = jnp.arange(F.shape[0], dtype=jnp.int32)[:, None]
+
+    def take(a, idx):
+        return jnp.take_along_axis(a, idx[None, :], axis=0)[0]
+
+    def step(carry):
+        it, st = carry
+        t = st["t"]
+        saved, unsaved = st["saved"], st["unsaved"]
+        period_work, na_saved = st["period_work"], st["na_saved"]
+        ep_t0, ep_end = st["ep_t0"], st["ep_end"]
+        fi, pi = st["fi"], st["pi"]
+        phase = st["phase"]  # PH_DONE marks finished lanes (no done array)
+        # lanes that can migrate carry the fault-cancellation mask; all
+        # other sweeps compile a specialized step without it (it would
+        # cost an (L, F) carry copy + three gathers every iteration)
+        Fcancel = st["Fcancel"] if has_migration else None
+        ep_ft = st["ep_ft"] if has_migration else None
+
+        prim = jnp.zeros_like(phase)  # int32, PRIM_NOOP
+        target = jnp.zeros_like(t)
+        cont = jnp.full_like(phase, -1)
+
+        # ---- regular-mode decisions -------------------------------- #
+        mn = phase == B._PH_MAIN
+
+        def p_cond(pi_):  # skip predictions whose action point passed
+            return jnp.any(mn & (take(P0, pi_) - lead_act < t))
+
+        def p_body(pi_):
+            adv = mn & (take(P0, pi_) - lead_act < t)
+            return pi_ + adv.astype(pi_.dtype)
+
+        pi = lax.while_loop(p_cond, p_body, pi)
+        na = take(P0, pi) - lead_act
+
+        # clean-period fast-forward (same fusion rule as the NumPy engine)
+        curf = take(F, fi)
+        ffm = (
+            mn & (period_work == 0.0) & (unsaved == 0.0) & (curf >= t)
+        )
+        if has_migration:
+            ffm &= ~take(Fcancel, fi)
+        k_fault = jnp.floor((curf - t) / T_R)
+        k_act = jnp.floor((na - t) / T_R)
+        k_act = jnp.where(t + k_act * T_R >= na, k_act - 1.0, k_act)
+        k_done = jnp.floor((W - saved - eps) / wpp)
+        k_done = jnp.where(
+            saved + k_done * wpp >= W - eps, k_done - 1.0, k_done
+        )
+        k = jnp.minimum(
+            jnp.minimum(k_fault, k_act), jnp.minimum(k_done, 4e15)
+        )
+        ff = ffm & (k >= 2.0)
+        t = jnp.where(ff, t + k * T_R, t)
+        saved = jnp.where(ff, saved + k * wpp, saved)
+        n_reg = st["n_reg"] + jnp.where(ff, k, 0.0).astype(st["n_reg"].dtype)
+
+        exhausted = st["exhausted"] | (mn & (t > horizon))
+        remaining = wpp - period_work
+        ck = mn & (remaining <= eps)
+        prim = jnp.where(ck, B._PR_CKPT, prim)
+        cont = jnp.where(ck, B._C_CKPTREG, cont)
+        na_saved = jnp.where(ck, na, na_saved)
+        wk_na = mn & ~ck & (na < t + remaining)
+        wk_seg = mn & ~ck & ~wk_na
+        prim = jnp.where(wk_na | wk_seg, B._PR_WORK, prim)  # credited work
+        target = jnp.where(wk_na, na, jnp.where(wk_seg, t + remaining, target))
+        cont = jnp.where(wk_na, B._C_POP_EP, jnp.where(wk_seg, B._C_MAIN, cont))
+
+        # ---- episode entry ----------------------------------------- #
+        # occupancy-gated (the NumPy engine's bincount gate): episode
+        # phases are empty on the vast majority of iterations.  The big
+        # Fcancel buffer stays OUT of the gating conds — an identity
+        # branch would copy it every iteration.
+        es = phase == B._PH_EP_START
+        emig = es & (mode == B._M_MIGRATION)
+        if has_migration:
+            # the predicted fault hits the vacated node: cancel it.  The
+            # O(L*F) match scan only runs on iterations where some lane
+            # migrates; the (row, mask) delta crosses the cond boundary
+            # (small arrays), never the Fcancel buffer itself (an
+            # identity branch would copy it every iteration), and the
+            # mark lands as one fused elementwise OR.
+            can = emig & ~jnp.isnan(ep_ft) & (ep_ft >= t)
+
+            def _match(_):
+                m = (F == ep_ft[None, :]) & (frows >= fi[None, :]) & ~Fcancel
+                return (
+                    jnp.argmax(m, axis=0).astype(jnp.int32),
+                    can & m.any(axis=0),
+                )
+
+            def _nomatch(_):
+                return jnp.zeros_like(fi), jnp.zeros_like(can)
+
+            cj, setm = lax.cond(jnp.any(can), _match, _nomatch, 0)
+            Fcancel = Fcancel | (setm[None, :] & (frows == cj[None, :]))
+
+        def _ep_start(args):
+            prim, target, cont = args
+            prim = jnp.where(emig, B._PR_IDLE, prim)
+            target = jnp.where(emig, ep_t0, target)
+            cont = jnp.where(emig, B._C_MIG, cont)
+
+            rest = es & ~(mode == B._M_MIGRATION)
+            d = ep_t0 - C
+            b1 = rest & (t < d)  # room for the pre-window checkpoint
+            b2 = rest & ~(t < d) & (t <= d)  # exactly at t0 - C
+            b3 = rest & (t > d)  # no time for the extra checkpoint
+            prim = jnp.where(  # b1/b3: credited work (Alg. 1 line 12)
+                b1 | b3, B._PR_WORK, jnp.where(b2, B._PR_CKPT, prim)
+            )
+            target = jnp.where(b1, d, jnp.where(b3, t, target))
+            cont = jnp.where(
+                b1, B._C_PRECKPT,
+                jnp.where(b2, B._C_MODE, jnp.where(b3, B._C_NT2, cont)),
+            )
+            return prim, target, cont
+
+        prim, target, cont = lax.cond(
+            jnp.any(es), _ep_start, lambda a: a, (prim, target, cont)
+        )
+
+        # ---- pending episode primitives ---------------------------- #
+        pmk = phase == B._PH_EP_PRECKPT
+        prim = jnp.where(pmk, B._PR_CKPT, prim)
+        cont = jnp.where(pmk, B._C_MODE, cont)
+
+        nt2 = phase == B._PH_EP_NT2
+        prim = jnp.where(nt2, PRIM_WORK_NC, prim)
+        target = jnp.where(nt2, ep_t0, target)
+        cont = jnp.where(nt2, B._C_MODE, cont)
+
+        nck = phase == B._PH_EP_NOCKPT
+        prim = jnp.where(nck, PRIM_WORK_NC, prim)
+        target = jnp.where(nck, ep_end, target)
+        cont = jnp.where(nck, B._C_MAIN, cont)
+
+        wc = phase == B._PH_EP_WC
+
+        def _wc(args):
+            prim, target, cont, phase = args
+            over = wc & (t >= ep_end - eps)
+            phase = jnp.where(over, B._PH_MAIN, phase)  # window exhausted
+            g = wc & ~over
+            tp = jnp.where(jnp.isnan(T_P), tp_eff_default, T_P)
+            seg = jnp.minimum(t + (tp - C), ep_end - C)
+            wsel = g & (seg > t)
+            gk = g & ~wsel
+            prim = jnp.where(wsel, PRIM_WORK_NC, jnp.where(gk, B._PR_CKPT, prim))
+            target = jnp.where(wsel, seg, target)
+            cont = jnp.where(wsel, B._C_WC_CKPT, jnp.where(gk, B._C_WC, cont))
+            return prim, target, cont, phase
+
+        prim, target, cont, phase = lax.cond(
+            jnp.any(wc), _wc, lambda a: a, (prim, target, cont, phase)
+        )
+
+        wck = phase == B._PH_EP_WC_CKPT
+        prim = jnp.where(wck, B._PR_CKPT, prim)
+        cont = jnp.where(wck, B._C_WC, cont)
+
+        # ---- execute one primitive per lane ------------------------ #
+        workm = (prim == B._PR_WORK) | (prim == PRIM_WORK_NC)
+        ckm = prim == B._PR_CKPT
+        res = prim != B._PR_NOOP
+        # cap at job completion, pre-resolution clock (scalar order of ops)
+        remw = W - saved - unsaved
+        target = jnp.where(workm, jnp.minimum(target, t + remw), target)
+        ckend = t + C  # only consulted under ckm
+
+        # resolve stale faults (fault during downtime: recovery restarts)
+        def s_cond(c):
+            t_, fi_, _ = c
+            cf = take(F, fi_)
+            stale = cf < t_
+            if has_migration:
+                stale |= take(Fcancel, fi_)
+            return jnp.any(res & stale)
+
+        def s_body(c):
+            t_, fi_, nflt_ = c
+            cf = take(F, fi_)
+            if has_migration:
+                cc = take(Fcancel, fi_)
+                stepm = res & (cc | (cf < t_))
+                hit = stepm & ~cc & (cf >= t_ - DR)
+            else:
+                stepm = res & (cf < t_)
+                hit = stepm & (cf >= t_ - DR)
+            t_ = jnp.where(hit, cf + DR, t_)
+            nflt_ = nflt_ + hit.astype(nflt_.dtype)
+            fi_ = fi_ + stepm.astype(fi_.dtype)
+            return t_, fi_, nflt_
+
+        t, fi, n_faults = lax.while_loop(
+            s_cond, s_body, (t, fi, st["n_faults"])
+        )
+        nf = take(F, fi)
+
+        upd = masked_primitive_update if use_pallas else primitive_update
+        kw = {"interpret": interpret} if use_pallas else {}
+        t, saved, unsaved, period_work, flags = upd(
+            prim, cont, target, ckend, nf,
+            t, saved, unsaved, period_work, W, DR,
+            eps=eps, reg_cont=int(B._C_CKPTREG), **kw,
+        )
+        faulted = (flags & FLAG_FAULTED) != 0
+        ok = (flags & FLAG_OK) != 0
+        fin = (flags & FLAG_FIN) != 0
+        cok = (flags & FLAG_CKPT_OK) != 0
+        reg = (flags & FLAG_REG) != 0
+
+        fi = fi + faulted.astype(fi.dtype)
+        n_faults = n_faults + faulted.astype(n_faults.dtype)
+        phase = jnp.where(faulted, B._PH_MAIN, phase)
+        phase = jnp.where(fin, B._PH_DONE, phase)
+        n_pro = st["n_pro"] + (cok & ~reg).astype(st["n_pro"].dtype)
+        n_reg = n_reg + reg.astype(n_reg.dtype)
+
+        # ---- continuations on success ------------------------------ #
+        cmask = ok & (phase != B._PH_DONE)
+        cc = jnp.clip(cont, 0, CONT2PH.shape[0] - 1)
+        phase = jnp.where(cmask, jnp.take(CONT2PH, cc), phase)
+
+        n_mig = st["n_mig"] + (cmask & (cont == B._C_MIG)).astype(
+            st["n_mig"].dtype
+        )
+        modem = cmask & (cont == B._C_MODE)
+        phase = jnp.where(modem, jnp.take(MODE2PH, mode), phase)
+
+        popm = cmask & (cont == B._C_POP_EP)
+        ckr = cmask & (cont == B._C_CKPTREG)
+
+        def _pop(args):
+            # pop the prediction into the episode registers; for _C_CKPTREG
+            # (action point fell inside the regular checkpoint) enter the
+            # episode only if the window start is still current.  ep_ft is
+            # only consulted by the migration cancel, so the fast path
+            # neither carries nor gathers it.
+            if has_migration:
+                ep_t0, ep_ft, ep_end, pi, phase = args
+            else:
+                ep_t0, ep_end, pi, phase = args
+            p0v = take(P0, pi)
+            takep = ckr & (na_saved <= t) & jnp.isfinite(p0v)
+            good = takep & (p0v >= t - 1e-9)
+            pop = popm | takep
+            ep_t0 = jnp.where(pop, p0v, ep_t0)
+            ep_end = jnp.where(pop, p0v + window, ep_end)
+            pi = pi + pop.astype(pi.dtype)
+            phase = jnp.where(popm | good, B._PH_EP_START, phase)
+            if has_migration:
+                ep_ft = jnp.where(pop, take(Pft, pi - pop.astype(pi.dtype)),
+                                  ep_ft)
+                return ep_t0, ep_ft, ep_end, pi, phase
+            return ep_t0, ep_end, pi, phase
+
+        if has_migration:
+            ep_t0, ep_ft, ep_end, pi, phase = lax.cond(
+                jnp.any(popm | ckr), _pop, lambda a: a,
+                (ep_t0, ep_ft, ep_end, pi, phase),
+            )
+        else:
+            ep_t0, ep_end, pi, phase = lax.cond(
+                jnp.any(popm | ckr), _pop, lambda a: a,
+                (ep_t0, ep_end, pi, phase),
+            )
+
+        st = {
+            "t": t, "saved": saved, "unsaved": unsaved,
+            "period_work": period_work, "na_saved": na_saved,
+            "ep_t0": ep_t0, "ep_end": ep_end,
+            "fi": fi, "pi": pi,
+            "n_faults": n_faults, "n_pro": n_pro, "n_reg": n_reg,
+            "n_mig": n_mig, "phase": phase,
+            "exhausted": exhausted,
+        }
+        if has_migration:
+            st["ep_ft"] = ep_ft
+            st["Fcancel"] = Fcancel
+        return it + 1, st
+
+    def cond(carry):
+        it, st = carry
+        return jnp.any(st["phase"] != B._PH_DONE) & (it < max_iters)
+
+    n_it, final = lax.while_loop(cond, step, (jnp.int32(0), state))
+    final = dict(final); final["_iters"] = n_it
+    return final
+
+
+_RUN_CACHE: dict = {}
+
+
+def _get_runner(
+    use_pallas: bool, interpret: bool, max_iters: int, eps: float,
+    has_migration: bool,
+):
+    import jax
+
+    key = (use_pallas, interpret, max_iters, eps, has_migration)
+    if key not in _RUN_CACHE:
+        _RUN_CACHE[key] = jax.jit(
+            partial(
+                _jit_run, use_pallas=use_pallas, interpret=interpret,
+                max_iters=max_iters, eps=eps, has_migration=has_migration,
+            )
+        )
+    return _RUN_CACHE[key]
+
+
+def _pad_lane(a: np.ndarray, n: int, fill) -> np.ndarray:
+    """Pad the lane axis of a 1-D or 2-D per-lane array to ``n`` lanes."""
+    if a.shape[0] == n:
+        return a
+    shape = (n - a.shape[0],) + a.shape[1:]
+    return np.concatenate([a, np.full(shape, fill, dtype=a.dtype)], axis=0)
+
+
+def _run_chunk(
+    runner, has_migration: bool, sl: slice, n_pad: int, fdt, idt,
+    W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
+):
+    """Pack one lane chunk onto the device, run it, pull results back."""
+    import jax.numpy as jnp
+
+    n_real = sl.stop - sl.start
+
+    def fvec(x, fill=0.0):
+        return jnp.asarray(_pad_lane(x[sl], n_pad, fill), fdt)
+
+    Cd = fvec(C, 1.0)
+    Md = fvec(M, 1.0)
+    moded = jnp.asarray(_pad_lane(mode[sl], n_pad, 0), jnp.int32)
+    T_Rd = fvec(T_R, 2.0)
+    windowd = fvec(window)
+    consts = {
+        "W": fvec(W, 1.0),
+        "C": Cd,
+        "DR": fvec(D) + fvec(R),
+        "T_R": T_Rd,
+        "T_P": fvec(T_P, np.nan),
+        "mode": moded,
+        "horizon": fvec(horizon, np.inf),
+        "window": windowd,
+        "wpp": jnp.maximum(T_Rd - Cd, 1e-9),
+        "lead_act": jnp.where(moded == B._M_MIGRATION, Md, Cd),
+        "tp_eff_default": jnp.maximum(Cd, windowd),
+        # (events, lanes) device layout — see the gather note in _jit_run
+        "F": jnp.asarray(_pad_lane(F[sl], n_pad, np.inf).T, fdt),
+        "P0": jnp.asarray(_pad_lane(P0[sl], n_pad, np.inf).T, fdt),
+        "Pft": jnp.asarray(_pad_lane(Pft[sl], n_pad, np.nan).T, fdt),
+    }
+    pad_mask = np.zeros(n_pad, dtype=bool)
+    pad_mask[n_real:] = True  # padding lanes start inert
+    zf = jnp.zeros(n_pad, fdt)
+    zi = jnp.zeros(n_pad, idt)
+    state = {
+        "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
+        "na_saved": zf, "ep_t0": zf, "ep_end": zf,
+        "fi": jnp.zeros(n_pad, jnp.int32), "pi": jnp.zeros(n_pad, jnp.int32),
+        "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
+        "phase": jnp.where(
+            jnp.asarray(pad_mask), B._PH_DONE, B._PH_MAIN
+        ).astype(jnp.int32),
+        "exhausted": jnp.zeros(n_pad, bool),
+    }
+    if has_migration:
+        state["ep_ft"] = jnp.full(n_pad, np.nan, fdt)
+        state["Fcancel"] = jnp.zeros(consts["F"].shape, bool)
+    final = runner(consts, state)
+    out = {k: np.asarray(final[k])[:n_real] for k in (
+        "t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase",
+    )}
+    if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
+        raise RuntimeError("jax batch simulator did not converge")
+    return out
+
+
+def simulate_batch_jax(
+    work,
+    platform: Union[Platform, Sequence[Platform]],
+    strategy: Union[Strategy, Sequence[Strategy]],
+    traces: BatchTraces,
+    rng: Optional[np.random.Generator] = None,
+    max_iters: int = 5_000_000,
+    chunk: Union[int, str, None] = "auto",
+    precision: str = "auto",
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> BatchResult:
+    """Device-resident :func:`repro.core.batch_sim.simulate_batch`.
+
+    Parameters beyond the NumPy engine's:
+
+    chunk       lanes resident on the device at once ("auto": 5120 on
+                CPU — cache-sized chunks beat one giant batch there —
+                16384 on accelerators; None: the whole batch).  Chunks
+                share one compiled executable (lane counts are padded to
+                the Pallas tile and event widths rounded to powers of
+                two).
+    precision   "x64" (default off-TPU; float-rounding agreement with the
+                NumPy engine), "x32" (TPU default — no f64 on TPU), or
+                "auto".
+    use_pallas  run the hot primitive-update step as the Pallas kernel
+                (interpret-mode off-TPU); False uses the identical
+                pure-jnp body.
+    interpret   force/forbid Pallas interpret mode (default: off-TPU).
+    """
+    import jax
+
+    L = traces.n_lanes
+    W, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
+        work, platform, strategy, L
+    )
+    if L == 0:
+        z = np.zeros(0)
+        zi = np.zeros(0, np.int64)
+        return BatchResult(z, z, zi, zi, zi, zi, np.zeros(0, bool))
+    p_t0, p_ft, _ = B._filter_trusted(traces, q, mode, rng)
+    # pow2-rounded sentinel widths: chunks (and similarly-sized batches)
+    # hit the same compiled executable
+    F = pad_sentinel(traces.fault_times, traces.n_faults, np.inf,
+                     round_pow2=True, min_width=8)
+    P0 = pad_sentinel(p_t0, traces.n_preds, np.inf,
+                      round_pow2=True, min_width=8)
+    Pft = pad_sentinel(p_ft, traces.n_preds, np.nan,
+                       round_pow2=True, min_width=8)
+
+    backend = jax.default_backend()
+    if precision == "auto":
+        precision = "x32" if backend == "tpu" else "x64"
+    if interpret is None:
+        interpret = backend != "tpu"
+    x64 = precision == "x64"
+
+    if chunk == "auto":
+        chunk = _DEFAULT_CHUNK_CPU if backend == "cpu" else _DEFAULT_CHUNK_DEV
+    chunk = L if chunk is None else min(int(chunk), L)
+    n_pad = -(-chunk // LANE_TILE) * LANE_TILE
+
+    if x64 and not jax.config.jax_enable_x64:
+        from jax.experimental import enable_x64
+
+        ctx = enable_x64()
+    else:
+        ctx = contextlib.nullcontext()
+    with ctx:
+        import jax.numpy as jnp
+
+        fdt = jnp.float64 if x64 else jnp.float32
+        idt = jnp.int64 if x64 else jnp.int32
+        outs = []
+        for lo in range(0, L, chunk):
+            sl = slice(lo, min(lo + chunk, L))
+            # migration-free chunks compile a specialized step with no
+            # fault-cancellation state (most sweeps; much less traffic)
+            has_mig = bool((mode[sl] == B._M_MIGRATION).any())
+            runner = _get_runner(
+                use_pallas, interpret, max_iters, float(_EPS), has_mig
+            )
+            outs.append(_run_chunk(
+                runner, has_mig, sl, n_pad, fdt, idt,
+                W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
+                traces.horizon, traces.window,
+            ))
+    cat = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    return BatchResult(
+        makespan=cat["t"].astype(np.float64),
+        work=W,
+        n_faults=cat["n_faults"].astype(np.int64),
+        n_proactive_ckpts=cat["n_pro"].astype(np.int64),
+        n_regular_ckpts=cat["n_reg"].astype(np.int64),
+        n_migrations=cat["n_mig"].astype(np.int64),
+        trace_exhausted=cat["exhausted"],
+    )

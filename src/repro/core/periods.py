@@ -276,13 +276,14 @@ def two_level_periods(
     Each tier's term is Young-shaped in its own period, so
       T_m* = sqrt(2 mu C_m / ((1-rq) f))
       T_d* = sqrt(2 mu C_d / ((1-rq)(1-f)))
-    (clamped so T_d >= T_m >= C_m — a disk checkpoint subsumes a memory
-    one)."""
+    (clamped so T_d >= max(C_d, T_m) and T_m >= C_m — a period can never
+    be shorter than its own checkpoint, and a disk checkpoint subsumes a
+    memory one)."""
     denom = max(1.0 - r * q, 1e-12)
     t_m = math.sqrt(2.0 * mu * C_m / (denom * max(f, 1e-12)))
     t_d = math.sqrt(2.0 * mu * C_d / (denom * max(1.0 - f, 1e-12)))
     t_m = max(t_m, C_m)
-    t_d = max(t_d, t_m)
+    t_d = max(t_d, C_d, t_m)
     return t_m, t_d
 
 

@@ -116,8 +116,16 @@ class SimulatedPredictor:
 def estimate_recall_precision(
     n_true_positive: int, n_false_positive: int, n_false_negative: int
 ) -> tuple[float, float]:
-    """Online r/p estimation from observed counters (Section 2.2)."""
+    """Online r/p estimation from observed counters (Section 2.2).
+
+    With zero observed predictions (TP + FP == 0) there is *no evidence*
+    of precision, and the estimate must not be trusted: returning the
+    old optimistic 1.0 let the executor's online re-optimization flip to
+    full q=1 trust in a predictor that had never produced a prediction.
+    Both undefined ratios now degrade to 0.0 (claim nothing you have not
+    observed); callers wanting a prior should gate on the evidence count
+    instead (see ``ft.executor._MIN_PRED_EVIDENCE``)."""
     tp, fp, fn = n_true_positive, n_false_positive, n_false_negative
     r = tp / (tp + fn) if tp + fn else 0.0
-    p = tp / (tp + fp) if tp + fp else 1.0
+    p = tp / (tp + fp) if tp + fp else 0.0
     return r, p

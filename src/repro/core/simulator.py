@@ -432,9 +432,10 @@ def simulate_many(
     Traces are generated in one batched pass (see
     :func:`repro.core.events.make_event_traces_batch`) and, with the default
     ``engine="batch"``, simulated by the vectorized lane-per-trace engine
-    (:mod:`repro.core.batch_sim`).  ``engine="scalar"`` runs the reference
-    scalar engine over the *same* traces — useful as an oracle and for
-    benchmarking the vectorization itself.
+    (:mod:`repro.core.batch_sim`).  ``engine="jax"`` advances the same
+    lanes device-resident (:mod:`repro.core.jax_sim`).  ``engine="scalar"``
+    runs the reference scalar engine over the *same* traces — useful as an
+    oracle and for benchmarking the vectorization itself.
 
     ``n_components`` switches the fault trace from a single renewal stream
     to the superposition of per-component renewals (see events.py)."""
@@ -447,6 +448,12 @@ def simulate_many(
         from .batch_sim import simulate_batch
 
         return simulate_batch(work, platform, strategy, traces, rng=rng).to_results()
+    if engine == "jax":
+        from .jax_sim import simulate_batch_jax
+
+        return simulate_batch_jax(
+            work, platform, strategy, traces, rng=rng
+        ).to_results()
     if engine == "scalar":
         return [
             simulate(
@@ -455,7 +462,9 @@ def simulate_many(
             )
             for i in range(n_runs)
         ]
-    raise ValueError(f"unknown engine {engine!r} (expected 'batch' or 'scalar')")
+    raise ValueError(
+        f"unknown engine {engine!r} (expected 'batch', 'jax' or 'scalar')"
+    )
 
 
 def best_period_search(

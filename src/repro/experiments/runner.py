@@ -13,6 +13,10 @@ single vectorized engine call:
 3. the groups are concatenated and every lane advances simultaneously in
    one :func:`repro.core.batch_sim.simulate_batch` call.
 
+``engine="jax"`` advances the very same lanes with the device-resident
+engine (:mod:`repro.core.jax_sim`): jit + ``lax.while_loop`` over a stacked
+lane-state pytree, Pallas hot step, host-side chunked lane scheduling
+(``chunk_lanes``) so 100k-lane grids never exceed device memory.
 ``engine="scalar"`` feeds each lane's :class:`EventTrace` view to the scalar
 reference engine instead: identical traces, Python event loop — the oracle
 for equivalence checks.  ``engine="legacy"`` reproduces the pre-batching
@@ -124,11 +128,18 @@ def _run_legacy(grid: GridSpec) -> List[List]:
     return out
 
 
-def run_grid(grid: GridSpec, engine: str = "batch") -> SweepResult:
-    """Execute every cell of ``grid`` and aggregate per-cell statistics."""
-    if engine not in ("batch", "scalar", "legacy"):
+def run_grid(
+    grid: GridSpec, engine: str = "batch", chunk_lanes="auto"
+) -> SweepResult:
+    """Execute every cell of ``grid`` and aggregate per-cell statistics.
+
+    ``chunk_lanes`` (jax engine only) caps the lanes resident on the
+    device per engine call — "auto" picks a backend-appropriate chunk,
+    an int forces one, None runs the whole grid in a single call."""
+    if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
-            f"unknown engine {engine!r} (expected 'batch', 'scalar' or 'legacy')"
+            f"unknown engine {engine!r} "
+            "(expected 'batch', 'jax', 'scalar' or 'legacy')"
         )
     t0 = time.monotonic()
     if engine == "legacy":
@@ -166,11 +177,20 @@ def run_grid(grid: GridSpec, engine: str = "batch") -> SweepResult:
     platforms = [grid.cells[ci].platform for ci in cell_order for _ in range(n_runs)]
     strategies = [grid.cells[ci].strategy for ci in cell_order for _ in range(n_runs)]
 
-    if engine == "batch":
-        res = simulate_batch(
-            work, platforms, strategies, traces,
-            rng=np.random.default_rng([grid.seed, len(groups)]),
-        )
+    if engine in ("batch", "jax"):
+        if engine == "jax":
+            from ..core.jax_sim import simulate_batch_jax
+
+            res = simulate_batch_jax(
+                work, platforms, strategies, traces,
+                rng=np.random.default_rng([grid.seed, len(groups)]),
+                chunk=chunk_lanes,
+            )
+        else:
+            res = simulate_batch(
+                work, platforms, strategies, traces,
+                rng=np.random.default_rng([grid.seed, len(groups)]),
+            )
         waste = res.waste
         makespan = res.makespan
         n_faults, n_pro = res.n_faults, res.n_proactive_ckpts
@@ -216,6 +236,11 @@ def run_cells(
     n_runs: int = 100,
     seed: int = 0,
     engine: str = "batch",
+    chunk_lanes="auto",
 ) -> SweepResult:
     """Convenience wrapper: build a :class:`GridSpec` and run it."""
-    return run_grid(GridSpec(tuple(cells), n_runs=n_runs, seed=seed), engine=engine)
+    return run_grid(
+        GridSpec(tuple(cells), n_runs=n_runs, seed=seed),
+        engine=engine,
+        chunk_lanes=chunk_lanes,
+    )

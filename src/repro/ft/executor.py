@@ -44,6 +44,11 @@ __all__ = [
     "FaultTolerantExecutor",
 ]
 
+#: minimum observations behind an estimated ratio (TP + FP for the
+#: precision estimate, TP + FN for recall) before it may influence
+#: re-optimization — below this the prior holds
+_MIN_PRED_EVIDENCE = 3
+
 
 class SimClock:
     def __init__(self, t0: float = 0.0):
@@ -213,9 +218,18 @@ class FaultTolerantExecutor:
     def _observed_model(self) -> PredictorModel:
         if self.tp_obs + self.fp_obs + self.fn_obs >= 20:
             r, p = estimate_recall_precision(self.tp_obs, self.fp_obs, self.fn_obs)
-            # blend with prior to avoid early noise
-            r = 0.5 * r + 0.5 * self.pred_model.recall
-            p = 0.5 * p + 0.5 * self.pred_model.precision
+            # blend with prior to avoid early noise — but each ratio only
+            # once its own denominator has evidence: a degenerate 0.0
+            # estimate (no predictions observed, or no faults observed)
+            # must not swing the re-optimized policy off the prior
+            if self.tp_obs + self.fn_obs >= _MIN_PRED_EVIDENCE:
+                r = 0.5 * r + 0.5 * self.pred_model.recall
+            else:
+                r = self.pred_model.recall
+            if self.tp_obs + self.fp_obs >= _MIN_PRED_EVIDENCE:
+                p = 0.5 * p + 0.5 * self.pred_model.precision
+            else:
+                p = self.pred_model.precision
             return PredictorModel(r, p, self.pred_model.lead, self.pred_model.window)
         return self.pred_model
 

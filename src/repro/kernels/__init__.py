@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-<name>.py   pl.pallas_call + BlockSpec VMEM tiling (TPU target)
-ops.py      jit'd wrappers (layout + GQA handling + interpret fallback)
-ref.py      pure-jnp oracles the kernels are validated against
+<name>.py    pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+ops.py       jit'd wrappers (layout + GQA handling + interpret fallback)
+ref.py       pure-jnp oracles the kernels are validated against
+sim_step.py  masked primitive-update step of the device simulation engine
 """

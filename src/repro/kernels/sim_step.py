@@ -1,0 +1,188 @@
+"""Pallas kernel for the batch simulator's masked primitive-update step.
+
+This is the one dense elementwise block the device simulation engine
+(:mod:`repro.core.jax_sim`) executes *every* outer iteration: given the
+primitive each lane decided to run (work segment / idle segment /
+checkpoint), the pre-resolved next-fault date, and the lane state, it
+
+1. applies the fault check (a fault at or before the primitive's target
+   interrupts work/idle; a fault strictly before a checkpoint's end date
+   aborts it — the exact-date prediction semantics of the scalar oracle),
+2. advances the clock and the saved/unsaved/period-work accounting with
+   masked updates, and
+3. reports the outcome flags (faulted / ok / job finished / checkpoint
+   committed / regular checkpoint) packed in one int32 bitfield.
+
+Lane state is laid out as ``(rows, 128)`` float slabs (rows a multiple of
+the sublane tile), so the kernel is a pure VPU elementwise pass.  On
+non-TPU backends it runs in interpret mode (exact semantics); the pure-jnp
+:func:`primitive_update` is both the kernel body and the no-Pallas
+fallback, so the two paths are bit-identical by construction.
+
+Primitive codes extend ``repro.core.batch_sim``'s 0 noop / 1 work /
+2 idle / 3 checkpoint with 4 = work *not* credited toward the regular
+period (the device engine folds the NumPy engine's separate ``credit``
+flag into the primitive code — one less lane array per iteration).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "PRIM_NOOP",
+    "PRIM_WORK",
+    "PRIM_IDLE",
+    "PRIM_CKPT",
+    "PRIM_WORK_NC",
+    "FLAG_FAULTED",
+    "FLAG_OK",
+    "FLAG_FIN",
+    "FLAG_CKPT_OK",
+    "FLAG_REG",
+    "primitive_update",
+    "masked_primitive_update",
+]
+
+#: primitive kinds (0-3 shared with repro.core.batch_sim's _PR_* codes;
+#: 4 is the device engine's uncredited-work variant of PRIM_WORK)
+PRIM_NOOP, PRIM_WORK, PRIM_IDLE, PRIM_CKPT, PRIM_WORK_NC = 0, 1, 2, 3, 4
+
+#: outcome bitfield
+FLAG_FAULTED = 1  # a fault interrupted the primitive
+FLAG_OK = 2  # primitive completed without fault
+FLAG_FIN = 4  # the work segment finished the job
+FLAG_CKPT_OK = 8  # a checkpoint committed (saved <- saved + unsaved)
+FLAG_REG = 16  # ... and it was a *regular* (period-resetting) checkpoint
+
+
+def primitive_update(
+    prim, cont, target, ckend, nf, t, saved, unsaved, pw, W, DR,
+    *, eps: float, reg_cont: int,
+):
+    """One masked primitive execution; mirrors the NumPy engine's
+    execute-one-primitive-per-lane block statement for statement.
+
+    ``target`` must already be capped at job completion and ``ckend``
+    fixed from the pre-fault-resolution clock (the caller replicates the
+    scalar oracle's order of operations); ``nf`` is each lane's next
+    pending fault after stale-fault resolution.  Returns
+    ``(t, saved, unsaved, period_work, flags)``.
+    """
+    creditb = prim == PRIM_WORK
+    workm = creditb | (prim == PRIM_WORK_NC)
+    idlem = prim == PRIM_IDLE
+    ckm = prim == PRIM_CKPT
+    res = workm | idlem | ckm
+
+    faulted = ((workm | idlem) & (nf <= target)) | (ckm & (nf < ckend))
+    ok = res & ~faulted
+
+    t1 = jnp.where(faulted, nf + DR, t)
+    unsaved1 = jnp.where(faulted, 0.0, unsaved)
+    pw1 = jnp.where(faulted, 0.0, pw)
+
+    wok = workm & ok
+    dt = target - t
+    unsaved2 = jnp.where(wok, unsaved1 + dt, unsaved1)
+    pw2 = jnp.where(wok & creditb, pw1 + dt, pw1)
+    t2 = jnp.where(wok, target, t1)
+    fin = wok & (saved + unsaved2 >= W - eps)
+
+    iok = idlem & ok
+    t3 = jnp.where(iok, target, t2)
+
+    cok = ckm & ok
+    t4 = jnp.where(cok, ckend, t3)
+    saved2 = jnp.where(cok, saved + unsaved2, saved)
+    unsaved3 = jnp.where(cok, 0.0, unsaved2)
+    reg = cok & (cont == reg_cont)
+    pw3 = jnp.where(reg, 0.0, pw2)
+
+    flags = (
+        faulted.astype(jnp.int32) * FLAG_FAULTED
+        + ok.astype(jnp.int32) * FLAG_OK
+        + fin.astype(jnp.int32) * FLAG_FIN
+        + cok.astype(jnp.int32) * FLAG_CKPT_OK
+        + reg.astype(jnp.int32) * FLAG_REG
+    )
+    return t4, saved2, unsaved3, pw3, flags
+
+
+def _step_kernel(
+    prim_ref, cont_ref, target_ref, ckend_ref, nf_ref,
+    t_ref, saved_ref, unsaved_ref, pw_ref, w_ref, dr_ref,
+    t_out, saved_out, unsaved_out, pw_out, flags_out,
+    *, eps: float, reg_cont: int,
+):
+    t, saved, unsaved, pw, flags = primitive_update(
+        prim_ref[...], cont_ref[...], target_ref[...],
+        ckend_ref[...], nf_ref[...], t_ref[...], saved_ref[...],
+        unsaved_ref[...], pw_ref[...], w_ref[...], dr_ref[...],
+        eps=eps, reg_cont=reg_cont,
+    )
+    t_out[...] = t
+    saved_out[...] = saved
+    unsaved_out[...] = unsaved
+    pw_out[...] = pw
+    flags_out[...] = flags
+
+
+def masked_primitive_update(
+    prim, cont, target, ckend, nf, t, saved, unsaved, pw, W, DR,
+    *, eps: float, reg_cont: int, interpret: bool | None = None,
+    tile: int = 8,
+):
+    """Pallas entry point over flat ``(L,)`` lane vectors, L % 128 == 0.
+
+    The lane axis is viewed as ``(L // 128, 128)`` and tiled ``tile`` rows
+    per grid step (8 rows = the f32 sublane tile).  ``interpret`` defaults
+    to True off-TPU (the repo-wide kernel idiom, see kernels/ops.py).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L = t.shape[0]
+    if L % 128:
+        raise ValueError(f"lane count {L} not a multiple of 128")
+    rows = L // 128
+    if interpret:
+        tile = rows  # no VMEM budget to respect: one grid step, no slicing
+    tile = max(1, min(tile, rows))
+    while rows % tile:
+        tile //= 2
+
+    fdt = t.dtype
+
+    def as2d(x, dtype):
+        return jnp.asarray(x, dtype).reshape(rows, 128)
+
+    ins = [
+        as2d(prim, jnp.int32),
+        as2d(cont, jnp.int32),
+        as2d(target, fdt),
+        as2d(ckend, fdt),
+        as2d(nf, fdt),
+        as2d(t, fdt),
+        as2d(saved, fdt),
+        as2d(unsaved, fdt),
+        as2d(pw, fdt),
+        as2d(W, fdt),
+        as2d(DR, fdt),
+    ]
+    spec = pl.BlockSpec((tile, 128), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((rows, 128), fdt)] * 4 + [
+        jax.ShapeDtypeStruct((rows, 128), jnp.int32)
+    ]
+    outs = pl.pallas_call(
+        partial(_step_kernel, eps=eps, reg_cont=reg_cont),
+        grid=(rows // tile,),
+        in_specs=[spec] * len(ins),
+        out_specs=[spec] * len(out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ins)
+    return tuple(o.reshape(L) for o in outs)

@@ -86,6 +86,67 @@ class TestSimulatedPolicy:
         assert rep.period_T > math.sqrt(2 * ex.platform.mu * ex.c_est) * 1.5
 
 
+class TestOnlineEstimation:
+    def test_zero_evidence_precision_is_zero(self):
+        """Regression: with zero observed predictions the estimator used
+        to return precision 1.0 — perfect trust in a predictor that had
+        never predicted anything."""
+        from repro.core.predictor import estimate_recall_precision
+
+        r, p = estimate_recall_precision(0, 0, 25)
+        assert r == 0.0
+        assert p == 0.0
+        # evidence present: plain ratios
+        r, p = estimate_recall_precision(3, 1, 1)
+        assert r == pytest.approx(0.75)
+        assert p == pytest.approx(0.75)
+
+    def test_reoptimization_gated_on_prediction_evidence(self):
+        """A silent predictor (25 faults seen, zero predictions) must not
+        inflate the precision fed to the online re-optimization: the
+        observed model keeps the prior precision until TP + FP evidence
+        exists, so the policy cannot flip to q=1 trust on nothing."""
+        plat = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        pm = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+        trace = make_event_trace(
+            np.random.default_rng(0), horizon=1e6, mtbf=plat.mu,
+            recall=0.85, precision=0.82, window=300.0, lead=3600.0,
+        )
+        ex = FaultTolerantExecutor(
+            step_fn=lambda s, k: s, state=0, platform=plat,
+            pred_model=pm, predictor=SimulatedPredictor(trace, pm),
+            clock=SimClock(), strategy="auto",
+        )
+        ex.fn_obs = 25  # only unpredicted faults observed
+        obs = ex._observed_model()
+        assert obs.precision == pytest.approx(pm.precision)  # prior held
+        assert obs.recall < pm.recall  # recall evidence *is* used
+        # once predictions are actually observed, precision evidence flows
+        ex.tp_obs, ex.fp_obs = 4, 2
+        obs = ex._observed_model()
+        assert obs.precision < pm.precision
+
+    def test_recall_gated_symmetrically(self):
+        """The mirror failure: a chatty false-positive predictor (20 FPs,
+        zero faults seen yet) must not drag the recall estimate off the
+        prior — recall has no evidence until faults are observed."""
+        plat = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        pm = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+        trace = make_event_trace(
+            np.random.default_rng(1), horizon=1e6, mtbf=plat.mu,
+            recall=0.85, precision=0.82, window=300.0, lead=3600.0,
+        )
+        ex = FaultTolerantExecutor(
+            step_fn=lambda s, k: s, state=0, platform=plat,
+            pred_model=pm, predictor=SimulatedPredictor(trace, pm),
+            clock=SimClock(), strategy="auto",
+        )
+        ex.fp_obs = 20  # no faults observed at all: tp + fn == 0
+        obs = ex._observed_model()
+        assert obs.recall == pytest.approx(pm.recall)  # prior held
+        assert obs.precision < pm.precision  # FP evidence *is* used
+
+
 class TestRealTrainingRecovery:
     """Real CPU model + real checkpoints: the loss trajectory after an
     injected fault + restore matches a fault-free run (deterministic

@@ -1,0 +1,258 @@
+"""JAX device engine vs NumPy batch engine vs scalar oracle.
+
+The three engines consume the *same* generated ``BatchTraces`` (trust
+filtering is deterministic for q in {0, 1}), so makespans must agree to
+float rounding across all five paper strategies + migration, the
+exponential / Weibull / lognormal failure laws, and both trust settings.
+Also covers the chunked lane scheduler, the ``run_grid(engine="jax")``
+dispatch (the per-cell waste acceptance gate), and a hypothesis property
+test randomizing platforms, laws, and strategies.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Platform,
+    PredictorModel,
+    make_event_traces_batch,
+    simulate_batch,
+)
+from repro.core import events as E
+from repro.core import simulator as S
+from repro.core.jax_sim import simulate_batch_jax
+from repro.core.simulator import Strategy, simulate
+
+MN = 60.0
+PLAT = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+WORK = 20 * 86400.0
+PREDW = PredictorModel(recall=0.85, precision=0.82, window=3000.0)
+PRED = PredictorModel(recall=0.85, precision=0.82)
+PRED0 = PredictorModel(0.0, 1.0)
+
+#: scalar-vs-vectorized tolerance (fast-forward float fusion, see
+#: tests/test_batch_sim.py); jax-vs-numpy agreement is far tighter
+MK_TOL = 1e-3
+
+
+def _strategies():
+    return [
+        (S.young(PLAT), PRED0),  # q = 0 baseline
+        (S.exact_prediction(PLAT, PRED), PRED),
+        (S.instant(PLAT, PREDW), PREDW),
+        (S.nockpt(PLAT, PREDW), PREDW),
+        (S.withckpt(PLAT, PREDW), PREDW),
+        (S.migration(PLAT, PRED), PRED),
+        # q = 0 with predictions present in the trace: the trust filter
+        # must hide them identically in both vectorized engines
+        (Strategy("Distrust", S.young(PLAT).T_R, q=0.0, mode="exact"), PRED),
+    ]
+
+
+def _traces_for(strat, pred, dist, n=4, seed=42):
+    rng = np.random.default_rng(seed)
+    return make_event_traces_batch(
+        rng,
+        n,
+        horizon=12 * WORK,
+        mtbf=PLAT.mu,
+        recall=pred.recall if strat.mode != "none" else 0.0,
+        precision=pred.precision,
+        window=pred.window,
+        lead=pred.lead,
+        fault_dist=dist,
+    )
+
+
+@pytest.mark.parametrize(
+    "dist",
+    [E.exponential(), E.weibull(0.7), E.lognormal(1.0)],
+    ids=["exp", "weibull0.7", "lognormal"],
+)
+def test_jax_matches_batch_and_scalar(dist):
+    """Three-way equivalence on every strategy: jax-vs-numpy to float
+    rounding (identical primitive sequence), both-vs-oracle to MK_TOL."""
+    for strat, pred in _strategies():
+        traces = _traces_for(strat, pred, dist)
+        bj = simulate_batch_jax(WORK, PLAT, strat, traces)
+        bn = simulate_batch(WORK, PLAT, strat, traces)
+        np.testing.assert_allclose(
+            bj.makespan, bn.makespan, rtol=1e-12, atol=1e-6,
+            err_msg=f"{strat.name}/{dist.name}",
+        )
+        np.testing.assert_array_equal(bj.n_faults, bn.n_faults)
+        np.testing.assert_array_equal(bj.n_regular_ckpts, bn.n_regular_ckpts)
+        np.testing.assert_array_equal(
+            bj.n_proactive_ckpts, bn.n_proactive_ckpts
+        )
+        np.testing.assert_array_equal(bj.n_migrations, bn.n_migrations)
+        np.testing.assert_array_equal(bj.trace_exhausted, bn.trace_exhausted)
+        for i in range(traces.n_lanes):
+            sr = simulate(WORK, PLAT, strat, traces.lane(i))
+            assert bj.lane(i).makespan == pytest.approx(
+                sr.makespan, abs=MK_TOL
+            ), (strat.name, dist.name, i)
+
+
+def test_chunked_scheduling_matches_unchunked():
+    """Chunk boundaries (including a ragged final chunk) are invisible."""
+    strat, pred = S.instant(PLAT, PREDW), PREDW
+    traces = _traces_for(strat, pred, E.exponential(), n=7, seed=3)
+    whole = simulate_batch_jax(WORK, PLAT, strat, traces, chunk=None)
+    chunked = simulate_batch_jax(WORK, PLAT, strat, traces, chunk=3)
+    np.testing.assert_array_equal(whole.makespan, chunked.makespan)
+    np.testing.assert_array_equal(whole.n_faults, chunked.n_faults)
+
+
+def test_pallas_and_jnp_paths_agree():
+    """The Pallas hot step (interpret mode on CPU) and the pure-jnp
+    fallback share one body — results must be bit-identical."""
+    strat, pred = S.withckpt(PLAT, PREDW), PREDW
+    traces = _traces_for(strat, pred, E.weibull(0.7), n=4, seed=11)
+    a = simulate_batch_jax(WORK, PLAT, strat, traces, use_pallas=True)
+    b = simulate_batch_jax(WORK, PLAT, strat, traces, use_pallas=False)
+    np.testing.assert_array_equal(a.makespan, b.makespan)
+    np.testing.assert_array_equal(a.n_regular_ckpts, b.n_regular_ckpts)
+
+
+def test_heterogeneous_lanes_jax():
+    """Per-lane platforms/strategies in one device call."""
+    plats = [PLAT, Platform(mu=400 * MN, C=5 * MN, D=1 * MN, R=5 * MN)]
+    strats = [S.young(plats[0]), S.exact_prediction(plats[1], PRED)]
+    rng = np.random.default_rng(11)
+    traces = make_event_traces_batch(
+        rng, 2, horizon=12 * WORK,
+        mtbf=[p.mu for p in plats],
+        recall=[0.0, PRED.recall],
+        precision=[1.0, PRED.precision],
+        window=0.0,
+    )
+    bj = simulate_batch_jax(WORK, plats, strats, traces)
+    bn = simulate_batch(WORK, plats, strats, traces)
+    np.testing.assert_allclose(bj.makespan, bn.makespan, rtol=1e-12, atol=1e-6)
+
+
+def test_run_grid_jax_matches_batch():
+    """Acceptance gate: per-cell mean waste of the jax engine agrees with
+    the NumPy batch engine to <= 1e-6 (same traces, float-rounding-level
+    per-lane agreement)."""
+    from repro.experiments import ExperimentCell, GridSpec, run_grid
+
+    cells = []
+    for k in range(2):
+        plat = Platform(mu=(500 + 500 * k) * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+        pred = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+        dist = E.exponential() if k % 2 == 0 else E.weibull(0.7)
+        for strat in (
+            S.young(plat),
+            S.exact_prediction(plat, PredictorModel(pred.recall, pred.precision)),
+            S.instant(plat, pred),
+            S.nockpt(plat, pred),
+            S.withckpt(plat, pred),
+        ):
+            cells.append(
+                ExperimentCell(
+                    label=f"k{k}/{strat.name}",
+                    work=6 * 86400.0,
+                    platform=plat,
+                    predictor=pred,
+                    strategy=strat,
+                    fault_dist=dist,
+                )
+            )
+    grid = GridSpec(tuple(cells), n_runs=4, seed=17)
+    sj = run_grid(grid, engine="jax")
+    sb = run_grid(grid, engine="batch")
+    assert sj.engine == "jax"
+    for cj, cb in zip(sj.cells, sb.cells):
+        assert abs(cj.mean_waste - cb.mean_waste) <= 1e-6, cj.cell.label
+        np.testing.assert_allclose(cj.makespan, cb.makespan, rtol=1e-12)
+
+
+def test_simulate_many_jax_engine():
+    res_j = S.simulate_many(
+        WORK, PLAT, S.exact_prediction(PLAT, PRED), PRED,
+        n_runs=4, seed=3, engine="jax",
+    )
+    res_b = S.simulate_many(
+        WORK, PLAT, S.exact_prediction(PLAT, PRED), PRED,
+        n_runs=4, seed=3, engine="batch",
+    )
+    for j, b in zip(res_j, res_b):
+        assert j.makespan == pytest.approx(b.makespan, abs=1e-6)
+        assert j.n_faults == b.n_faults
+
+
+# ---------------------------------------------------------------------- #
+# randomized three-way agreement (hypothesis when available, otherwise a
+# fixed seed sweep — a bare module-level importorskip would silently skip
+# the deterministic equivalence tests above too)
+# ---------------------------------------------------------------------- #
+_LAWS = {
+    "exp": E.exponential(),
+    "weibull0.7": E.weibull(0.7),
+    "lognormal": E.lognormal(1.0),
+}
+
+
+def _check_three_way(mu_mn, c_mn, law, mode, q, seed):
+    """Randomized platform x law x strategy x q in {0,1}: the scalar
+    oracle, the NumPy batch engine, and the JAX device engine agree on
+    every lane's makespan."""
+    plat = Platform(
+        mu=mu_mn * MN, C=c_mn * MN, D=1 * MN, R=c_mn * MN, M=3 * MN
+    )
+    work = 6 * 86400.0
+    t_r = max(plat.C * 1.5, math.sqrt(2 * plat.mu * plat.C))
+    strat = Strategy("Rand", t_r, q=q, mode=mode,
+                     T_P=max(plat.C, 1000.0) if mode == "withckpt" else None)
+    rng = np.random.default_rng(seed)
+    traces = make_event_traces_batch(
+        rng, 2, horizon=12 * work, mtbf=plat.mu,
+        recall=0.7 if mode != "none" else 0.0, precision=0.5,
+        window=2000.0, fault_dist=_LAWS[law],
+    )
+    bj = simulate_batch_jax(work, plat, strat, traces)
+    bn = simulate_batch(work, plat, strat, traces)
+    np.testing.assert_allclose(bj.makespan, bn.makespan, rtol=1e-12, atol=1e-6)
+    for i in range(traces.n_lanes):
+        sr = simulate(work, plat, strat, traces.lane(i))
+        assert bj.lane(i).makespan == pytest.approx(sr.makespan, abs=MK_TOL)
+        assert bj.lane(i).n_faults == sr.n_faults
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_three_way_makespan_agreement(seed):
+        rng = np.random.default_rng(seed)
+        _check_three_way(
+            mu_mn=float(rng.uniform(400.0, 2000.0)),
+            c_mn=float(rng.uniform(3.0, 15.0)),
+            law=sorted(_LAWS)[seed % len(_LAWS)],
+            mode=["none", "exact", "nockpt", "withckpt", "migration"][
+                seed % 5
+            ],
+            q=float(seed % 2),
+            seed=seed * 977,
+        )
+
+else:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mu_mn=st.floats(400.0, 2000.0),
+        c_mn=st.floats(3.0, 15.0),
+        law=st.sampled_from(sorted(_LAWS)),
+        mode=st.sampled_from(
+            ["none", "exact", "nockpt", "withckpt", "migration"]
+        ),
+        q=st.sampled_from([0.0, 1.0]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_three_way_makespan_agreement(mu_mn, c_mn, law, mode, q, seed):
+        _check_three_way(mu_mn, c_mn, law, mode, q, seed)

@@ -59,3 +59,16 @@ class TestTwoLevel:
         for f in (0.05, 0.5, 0.99):
             t_m, t_d = two_level_periods(MU, C_M, C_D, f)
             assert t_d >= t_m >= C_M
+
+    def test_disk_period_not_shorter_than_disk_checkpoint(self):
+        """Regression: a tiny MTBF used to yield T_d < C_d (a disk period
+        shorter than the disk checkpoint itself) — the C_d clamp was
+        missing.  e.g. mu=5, C_d=50, f=0.5 gave T_d ~= 31.6."""
+        t_m, t_d = two_level_periods(5.0, C_m=1.0, C_d=50.0, f=0.5)
+        assert t_d >= 50.0
+        assert t_d >= t_m
+        for mu in (1.0, 5.0, 100.0, MU):
+            for f in (1e-9, 0.3, 0.7, 1.0 - 1e-9):
+                t_m, t_d = two_level_periods(mu, C_M, C_D, f)
+                assert t_d >= C_D
+                assert t_d >= t_m >= C_M
