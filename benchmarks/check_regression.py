@@ -1,0 +1,176 @@
+"""Benchmark regression gate (CI step).
+
+Re-runs the two tracked benchmark modules — ``waste_curves`` (the paper's
+Figures 4-7 cells: analytic waste vs simulated waste) and ``jax_engine``
+(device-engine throughput + multi-device scaling) — and fails if either
+
+* the *correctness* signal drifts: a cell's simulated waste moves away
+  from the committed baseline (the sweep is seeded, so a drift means the
+  engine's semantics changed) or leaves the analytic-model envelope, or
+  the jax-vs-numpy engine disagreement exceeds float-rounding level; or
+* the *performance* signal regresses: an engine's lanes/sec falls more
+  than ``--perf-tol`` (default 30%) below the committed
+  ``BENCH_*.json`` baseline.
+
+Fresh records are written to ``--out-dir`` so the CI workflow can upload
+them as artifacts (and a maintainer can promote them to new baselines).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baseline-dir .] [--out-dir bench-fresh] \
+        [--waste-tol 0.12] [--drift-tol 0.02] [--perf-tol 0.30]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+from . import common
+
+#: tracked modules and their committed baseline files
+BASELINES = {
+    "waste_curves": "BENCH_sim.waste_curves.json",
+    "jax_engine": "BENCH_sim.jax_engine.json",
+}
+
+
+def _by_name(records: List[Dict]) -> Dict[str, Dict]:
+    return {r["name"]: r for r in records}
+
+
+def compare(
+    baseline: List[Dict],
+    fresh: List[Dict],
+    *,
+    waste_tol: float = 0.12,
+    drift_tol: float = 0.02,
+    perf_tol: float = 0.30,
+    agree_tol: float = 1e-9,
+) -> List[str]:
+    """Compare fresh benchmark records against committed baselines.
+
+    Returns a list of human-readable failure strings (empty = gate
+    passes).  Only names present in *both* record sets are compared, so
+    adding new benchmarks never trips the gate retroactively."""
+    failures: List[str] = []
+    base = _by_name(baseline)
+    for rec in fresh:
+        b = base.get(rec["name"])
+        d = rec.get("derived")
+        if b is None or not isinstance(d, dict):
+            continue
+        bd = b.get("derived") if isinstance(b.get("derived"), dict) else {}
+
+        # correctness: simulated waste within the analytic envelope ...
+        if "waste_pred_sim" in d and "waste_pred_capped" in d:
+            gap = abs(d["waste_pred_sim"] - d["waste_pred_capped"])
+            if gap > waste_tol:
+                failures.append(
+                    f"{rec['name']}: analytic-vs-sim waste gap {gap:.4f} "
+                    f"> {waste_tol} (sim {d['waste_pred_sim']}, "
+                    f"analytic {d['waste_pred_capped']})"
+                )
+            # ... and reproducing the seeded baseline value
+            if "waste_pred_sim" in bd:
+                drift = abs(d["waste_pred_sim"] - bd["waste_pred_sim"])
+                if drift > drift_tol:
+                    failures.append(
+                        f"{rec['name']}: simulated waste drifted "
+                        f"{drift:.4f} > {drift_tol} vs baseline "
+                        f"(fresh {d['waste_pred_sim']}, "
+                        f"baseline {bd['waste_pred_sim']})"
+                    )
+
+        # correctness: device engine still agrees with the NumPy engine
+        if "max_abs_waste_diff" in d and d["max_abs_waste_diff"] > agree_tol:
+            failures.append(
+                f"{rec['name']}: jax-vs-numpy waste diff "
+                f"{d['max_abs_waste_diff']:.2e} > {agree_tol:.0e}"
+            )
+
+        # performance: lanes/sec within perf_tol of the baseline
+        if perf_tol:
+            for key in ("jax_lanes_per_s", "numpy_lanes_per_s"):
+                if key in d and key in bd and bd[key] > 0:
+                    floor = (1.0 - perf_tol) * bd[key]
+                    if d[key] < floor:
+                        failures.append(
+                            f"{rec['name']}: {key} {d[key]:.0f} regressed "
+                            f">{perf_tol:.0%} below baseline {bd[key]:.0f}"
+                        )
+    return failures
+
+
+def _load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)["benchmarks"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--out-dir", default="bench-fresh",
+                    help="where fresh BENCH_*.json records are written")
+    ap.add_argument("--waste-tol", type=float, default=0.12,
+                    help="max |analytic - simulated| waste per cell")
+    ap.add_argument("--drift-tol", type=float, default=0.02,
+                    help="max simulated-waste drift vs the seeded baseline")
+    ap.add_argument("--perf-tol", type=float, default=0.30,
+                    help="max fractional lanes/sec regression (0 disables)")
+    ap.add_argument("--modules", default=None, metavar="A,B",
+                    help="comma-separated subset of "
+                    f"{','.join(BASELINES)} (default: all)")
+    args = ap.parse_args()
+
+    selected = dict(BASELINES)
+    if args.modules:
+        unknown = set(args.modules.split(",")) - set(BASELINES)
+        if unknown:
+            ap.exit(2, f"error: unknown module(s) {sorted(unknown)}; "
+                       f"expected subset of {sorted(BASELINES)}\n")
+        selected = {
+            k: v for k, v in BASELINES.items()
+            if k in args.modules.split(",")
+        }
+
+    import importlib
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures: List[str] = []
+    for name, fname in selected.items():
+        bpath = os.path.join(args.baseline_dir, fname)
+        if not os.path.exists(bpath):
+            failures.append(f"{name}: missing baseline {bpath}")
+            continue
+        mod = importlib.import_module(f".{name}", __package__)
+        common.reset_records()
+        print(f"# == regression gate: {name} ==", file=sys.stderr, flush=True)
+        mod.run(quick=True)
+        fresh = list(common.RECORDS)
+        common.write_records_json(
+            os.path.join(args.out_dir, fname),
+            meta={"mode": "quick", "modules": [name]},
+        )
+        failures.extend(
+            compare(
+                _load(bpath), fresh,
+                waste_tol=args.waste_tol, drift_tol=args.drift_tol,
+                perf_tol=args.perf_tol,
+            )
+        )
+
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)} finding(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nregression gate passed "
+          f"(fresh records in {args.out_dir}/)")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,11 +17,24 @@ import time
 
 from . import common
 
+#: benchmark registry (name -> module), importable lazily so ``--only``
+#: validation fails fast instead of paying every module's import cost
+MODULE_NAMES = (
+    "sim_tables",        # Tables 1-2
+    "waste_curves",      # Figures 4-7
+    "recall_precision",  # Figures 8-11
+    "jax_engine",        # device-engine throughput + scaling curves
+    "ckpt_bench",        # C measurement + waste impact
+    "step_bench",        # real CPU step timings
+    "roofline_report",   # Roofline table from cache
+)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale run counts")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help=f"run a single benchmark: {', '.join(MODULE_NAMES)}")
     ap.add_argument(
         "--json", default=None,
         help="machine-readable output path ('' disables; default "
@@ -29,32 +42,29 @@ def main() -> None:
         "partial runs never clobber the full tracking file)",
     )
     args = ap.parse_args()
+    if args.only and args.only not in MODULE_NAMES:
+        ap.exit(
+            2,
+            f"error: unknown benchmark {args.only!r} for --only; "
+            f"expected one of: {', '.join(MODULE_NAMES)}\n",
+        )
     if args.json is None:
         args.json = (
             f"BENCH_sim.{args.only}.json" if args.only else "BENCH_sim.json"
         )
 
-    from . import (
-        ckpt_bench, jax_engine, recall_precision, roofline_report,
-        sim_tables, step_bench, waste_curves,
-    )
+    import importlib
 
     modules = {
-        "sim_tables": sim_tables,        # Tables 1-2
-        "waste_curves": waste_curves,    # Figures 4-7
-        "recall_precision": recall_precision,  # Figures 8-11
-        "jax_engine": jax_engine,        # device-engine throughput curve
-        "ckpt_bench": ckpt_bench,        # C measurement + waste impact
-        "step_bench": step_bench,        # real CPU step timings
-        "roofline_report": roofline_report,  # Roofline table from cache
+        name: importlib.import_module(f".{name}", __package__)
+        for name in MODULE_NAMES
+        if not args.only or name == args.only
     }
     common.reset_records()
     print("name,us_per_call,derived")
     t0 = time.monotonic()
     ran = []
     for name, mod in modules.items():
-        if args.only and name != args.only:
-            continue
         print(f"# == {name} ==", file=sys.stderr, flush=True)
         mod.run(quick=not args.full)
         ran.append(name)

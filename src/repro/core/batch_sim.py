@@ -54,7 +54,7 @@ from .events import BatchTraces, pad_sentinel
 from .simulator import SimResult, Strategy, _EPS
 from .waste import Platform
 
-__all__ = ["MODE_CODES", "BatchResult", "simulate_batch"]
+__all__ = ["MODE_CODES", "BatchResult", "pad_lane_axis", "simulate_batch"]
 
 #: strategy-mode codes shared with :class:`repro.core.simulator.Strategy`
 MODE_CODES = {"none": 0, "exact": 1, "nockpt": 2, "withckpt": 3, "migration": 4}
@@ -160,6 +160,18 @@ def _lane_params(work, platform, strategy, L: int):
     mode = np.array([MODE_CODES[s.mode] for s in strats], dtype=np.int8)
     q = np.array([s.q for s in strats], dtype=np.float64)
     return W, C, D, R, M, T_R, T_P, mode, q
+
+
+def pad_lane_axis(a: np.ndarray, n: int, fill) -> np.ndarray:
+    """Pad the lane axis of a 1-D or 2-D per-lane array to ``n`` lanes.
+
+    Shared packing helper of the device engines: padding lanes are filled
+    with ``fill`` (a value that keeps them inert — ``+inf`` fault dates,
+    phase ``DONE`` state, benign platform constants)."""
+    if a.shape[0] == n:
+        return a
+    shape = (n - a.shape[0],) + a.shape[1:]
+    return np.concatenate([a, np.full(shape, fill, dtype=a.dtype)], axis=0)
 
 
 def _filter_trusted(

@@ -33,6 +33,23 @@ jit-compiles to a single XLA while-loop, unlocking Monte-Carlo campaigns
   iteration; it executes as a Pallas kernel
   (:mod:`repro.kernels.sim_step`), interpret-mode off-TPU, with a
   pure-jnp fallback (``use_pallas=False``) that shares the same body.
+* **Lane-sharded multi-device dispatch** — lanes are mutually
+  independent, so ``devices=`` splits each chunk into equal per-device
+  shards and runs the *same* compiled step on every device through a
+  collective-free ``jax.pmap``; per-lane results are identical to the
+  single-device path for any device count (each lane executes the same
+  primitive sequence regardless of which lanes co-reside), and each
+  device's while-loop exits as soon as its own shard finishes.
+* **Async double-buffered chunk pipeline** — chunk packing is pure host
+  NumPy and dispatch is JAX-async, so the scheduler packs and ships
+  chunk ``k+1`` while chunk ``k`` executes, then fetches results one
+  chunk behind the dispatch front (``copy_to_host_async`` first, so the
+  D2H copies overlap too).  State buffers are donated to the executable.
+* **Two-level compilation cache** — an in-process runner registry keyed
+  on the (pallas, precision, migration, device-set) specialization, plus
+  JAX's persistent compilation cache (:func:`enable_compilation_cache`
+  or ``REPRO_JAX_CACHE_DIR``) so repeated sweep *processes* skip XLA
+  recompiles of the same chunk shapes entirely.
 
 Because this engine and the NumPy engine execute the same primitive
 sequence in the same order, their makespans agree to float rounding when
@@ -46,21 +63,37 @@ the scalar, NumPy-batch, and JAX engines.
 from __future__ import annotations
 
 import contextlib
+import os
+import warnings
 from functools import partial
 from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from . import batch_sim as B
-from .batch_sim import BatchResult
+from .batch_sim import BatchResult, pad_lane_axis
 from .events import BatchTraces, pad_sentinel
 from .simulator import Strategy, _EPS
 from .waste import Platform
 
-__all__ = ["simulate_batch_jax", "LANE_TILE"]
+__all__ = [
+    "simulate_batch_jax",
+    "enable_compilation_cache",
+    "LANE_TILE",
+    "SHARD_TILE",
+]
 
 #: lane-count granularity: 8 f32 sublanes x 128 lanes, the Pallas tile
 LANE_TILE = 1024
+
+#: per-device lane granularity of the sharded dispatch (the Pallas row
+#: width): small enough that 8-way sharding of a cache-sized CPU chunk
+#: still leaves every device a few tiles, large enough to stay tiled
+SHARD_TILE = 128
+
+#: environment knob: point it at a directory to persist compiled
+#: executables across processes (see :func:`enable_compilation_cache`)
+CACHE_ENV = "REPRO_JAX_CACHE_DIR"
 
 #: default chunks: bound device-resident lanes so 100k-lane grids don't
 #: OOM (and bound the inert-lane overhead of the no-repacking design).
@@ -390,87 +423,218 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
 
 _RUN_CACHE: dict = {}
 
+_cache_env_done = False
+
+
+def enable_compilation_cache(path: Union[str, "os.PathLike"]) -> None:
+    """Persist compiled engine executables under ``path``.
+
+    Repeated sweep invocations (separate processes hitting the same chunk
+    shape / migration specialization) then skip XLA recompiles entirely:
+    the in-process registry (``_RUN_CACHE``) already de-duplicates within
+    a process, and this extends it across processes via
+    ``jax.config.jax_compilation_cache_dir``.  Call it — or export
+    ``REPRO_JAX_CACHE_DIR`` — *before the first JAX computation* of the
+    process; JAX only picks the cache directory up at backend
+    initialization.
+    """
+    import jax
+
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    for opt, val in (
+        # the engine's executables are small and quick to build one by
+        # one but numerous (chunk shape x migration x precision), so
+        # cache everything regardless of size / compile time
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+    ):
+        try:
+            jax.config.update(opt, val)
+        except AttributeError:  # pragma: no cover - knob renamed upstream
+            pass
+
+
+def _maybe_enable_cache_from_env() -> None:
+    global _cache_env_done
+    if _cache_env_done:
+        return
+    _cache_env_done = True
+    path = os.environ.get(CACHE_ENV)
+    if path:
+        enable_compilation_cache(path)
+
+
+def _resolve_devices(devices, mesh) -> list:
+    """Normalize the ``devices=`` / ``mesh=`` knobs to a device list.
+
+    ``devices`` accepts None (single default device — the bit-stable
+    baseline), ``"all"``, an int (first n local devices), or an explicit
+    sequence of jax devices; ``mesh`` accepts a ``jax.sharding.Mesh``
+    whose device set is used (lane sharding is data-parallel, so only the
+    flat device list matters)."""
+    import jax
+
+    if mesh is not None:
+        if devices is not None:
+            raise ValueError("pass either devices= or mesh=, not both")
+        devs = [d for d in np.asarray(mesh.devices).flat]
+    elif devices is None:
+        devs = [jax.devices()[0]]
+    elif isinstance(devices, str):
+        if devices != "all":
+            raise ValueError(f"devices={devices!r} (expected 'all')")
+        devs = list(jax.devices())
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"devices={devices} but this process has {len(avail)} "
+                "jax device(s); use XLA_FLAGS=--xla_force_host_platform_"
+                "device_count=N to fake host devices"
+            )
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+        if not devs:
+            raise ValueError("devices= must name at least one device")
+    return devs
+
 
 def _get_runner(
     use_pallas: bool, interpret: bool, max_iters: int, eps: float,
-    has_migration: bool,
+    has_migration: bool, devs,
 ):
     import jax
 
-    key = (use_pallas, interpret, max_iters, eps, has_migration)
+    key = (
+        use_pallas, interpret, max_iters, eps, has_migration,
+        tuple(d.id for d in devs),
+    )
     if key not in _RUN_CACHE:
-        _RUN_CACHE[key] = jax.jit(
-            partial(
-                _jit_run, use_pallas=use_pallas, interpret=interpret,
-                max_iters=max_iters, eps=eps, has_migration=has_migration,
-            )
+        step = partial(
+            _jit_run, use_pallas=use_pallas, interpret=interpret,
+            max_iters=max_iters, eps=eps, has_migration=has_migration,
         )
+        if len(devs) == 1:
+            _RUN_CACHE[key] = jax.jit(step, donate_argnums=(1,))
+        else:
+            # lane-sharded dispatch: lanes are mutually independent, so a
+            # collective-free pmap over per-device lane blocks runs the
+            # exact single-device program n_dev times — per-lane results
+            # are identical by construction, and each device's while-loop
+            # exits as soon as its own lanes finish
+            _RUN_CACHE[key] = jax.pmap(
+                step, devices=devs, donate_argnums=(1,)
+            )
     return _RUN_CACHE[key]
 
 
-def _pad_lane(a: np.ndarray, n: int, fill) -> np.ndarray:
-    """Pad the lane axis of a 1-D or 2-D per-lane array to ``n`` lanes."""
-    if a.shape[0] == n:
-        return a
-    shape = (n - a.shape[0],) + a.shape[1:]
-    return np.concatenate([a, np.full(shape, fill, dtype=a.dtype)], axis=0)
+#: per-lane result arrays pulled back from the device after each chunk
+_OUT_KEYS = ("t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase")
 
 
-def _run_chunk(
-    runner, has_migration: bool, sl: slice, n_pad: int, fdt, idt,
+def _pack_chunk(
+    has_migration: bool, sl: slice, n_dev: int, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
 ):
-    """Pack one lane chunk onto the device, run it, pull results back."""
-    import jax.numpy as jnp
+    """Host-side packing of one lane chunk into engine pytrees.
 
-    n_real = sl.stop - sl.start
+    Pure NumPy — no device work — so the async pipeline can pack chunk
+    ``k+1`` while chunk ``k`` runs on the devices.  ``n_pad`` is the
+    total padded lane count (``n_dev`` equal shards); sharded arrays gain
+    a leading device axis for the pmap dispatch."""
+    shard = n_pad // n_dev
+
+    def lanes(a):  # (n_pad,) -> (n_pad,) | (n_dev, shard)
+        return a if n_dev == 1 else a.reshape(n_dev, shard)
+
+    def events(a):  # (n_pad, E) -> (E, n_pad) | (n_dev, E, shard)
+        # (events, lanes) device layout — see the gather note in _jit_run
+        if n_dev == 1:
+            return np.ascontiguousarray(a.T)
+        return np.ascontiguousarray(
+            a.reshape(n_dev, shard, a.shape[1]).transpose(0, 2, 1)
+        )
 
     def fvec(x, fill=0.0):
-        return jnp.asarray(_pad_lane(x[sl], n_pad, fill), fdt)
+        return lanes(pad_lane_axis(x[sl], n_pad, fill).astype(fdt))
 
-    Cd = fvec(C, 1.0)
-    Md = fvec(M, 1.0)
-    moded = jnp.asarray(_pad_lane(mode[sl], n_pad, 0), jnp.int32)
-    T_Rd = fvec(T_R, 2.0)
-    windowd = fvec(window)
+    Ch = fvec(C, 1.0)
+    Mh = fvec(M, 1.0)
+    modeh = lanes(pad_lane_axis(mode[sl], n_pad, 0).astype(np.int32))
+    T_Rh = fvec(T_R, 2.0)
+    windowh = fvec(window)
     consts = {
         "W": fvec(W, 1.0),
-        "C": Cd,
+        "C": Ch,
         "DR": fvec(D) + fvec(R),
-        "T_R": T_Rd,
+        "T_R": T_Rh,
         "T_P": fvec(T_P, np.nan),
-        "mode": moded,
+        "mode": modeh,
         "horizon": fvec(horizon, np.inf),
-        "window": windowd,
-        "wpp": jnp.maximum(T_Rd - Cd, 1e-9),
-        "lead_act": jnp.where(moded == B._M_MIGRATION, Md, Cd),
-        "tp_eff_default": jnp.maximum(Cd, windowd),
-        # (events, lanes) device layout — see the gather note in _jit_run
-        "F": jnp.asarray(_pad_lane(F[sl], n_pad, np.inf).T, fdt),
-        "P0": jnp.asarray(_pad_lane(P0[sl], n_pad, np.inf).T, fdt),
-        "Pft": jnp.asarray(_pad_lane(Pft[sl], n_pad, np.nan).T, fdt),
+        "window": windowh,
+        "wpp": np.maximum(T_Rh - Ch, 1e-9),
+        "lead_act": np.where(modeh == B._M_MIGRATION, Mh, Ch),
+        "tp_eff_default": np.maximum(Ch, windowh),
+        "F": events(pad_lane_axis(F[sl], n_pad, np.inf).astype(fdt)),
+        "P0": events(pad_lane_axis(P0[sl], n_pad, np.inf).astype(fdt)),
+        "Pft": events(pad_lane_axis(Pft[sl], n_pad, np.nan).astype(fdt)),
     }
-    pad_mask = np.zeros(n_pad, dtype=bool)
-    pad_mask[n_real:] = True  # padding lanes start inert
-    zf = jnp.zeros(n_pad, fdt)
-    zi = jnp.zeros(n_pad, idt)
+    n_real = sl.stop - sl.start
+    phase = np.full(n_pad, B._PH_MAIN, np.int32)
+    phase[n_real:] = B._PH_DONE  # padding lanes start inert
+    zf = lanes(np.zeros(n_pad, fdt))
+    zi = lanes(np.zeros(n_pad, idt))
     state = {
         "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
         "na_saved": zf, "ep_t0": zf, "ep_end": zf,
-        "fi": jnp.zeros(n_pad, jnp.int32), "pi": jnp.zeros(n_pad, jnp.int32),
+        "fi": lanes(np.zeros(n_pad, np.int32)),
+        "pi": lanes(np.zeros(n_pad, np.int32)),
         "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
-        "phase": jnp.where(
-            jnp.asarray(pad_mask), B._PH_DONE, B._PH_MAIN
-        ).astype(jnp.int32),
-        "exhausted": jnp.zeros(n_pad, bool),
+        "phase": lanes(phase),
+        "exhausted": lanes(np.zeros(n_pad, bool)),
     }
     if has_migration:
-        state["ep_ft"] = jnp.full(n_pad, np.nan, fdt)
-        state["Fcancel"] = jnp.zeros(consts["F"].shape, bool)
-    final = runner(consts, state)
-    out = {k: np.asarray(final[k])[:n_real] for k in (
-        "t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase",
-    )}
+        state["ep_ft"] = lanes(np.full(n_pad, np.nan, fdt))
+        state["Fcancel"] = np.zeros(consts["F"].shape, bool)
+    return consts, state
+
+
+def _dispatch(runner, devs, consts, state):
+    """Ship one packed chunk to the device(s) and start it (async)."""
+    import jax
+
+    if len(devs) == 1:
+        consts = jax.device_put(consts, devs[0])
+        state = jax.device_put(state, devs[0])
+    else:
+        try:  # explicit per-device placement when available
+            tm = jax.tree_util.tree_map
+            consts, state = (
+                jax.device_put_sharded(
+                    [tm(lambda a: a[i], tree) for i in range(len(devs))],
+                    devs,
+                )
+                for tree in (consts, state)
+            )
+        except AttributeError:  # pragma: no cover - pmap splits host arrays
+            pass
+    with warnings.catch_warnings():
+        # state buffers are donated (packed fresh per chunk), but CPU
+        # lacks donation: scope the advisory's suppression to this call
+        # so user code's own donation warnings stay visible
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return runner(consts, state)
+
+
+def _fetch(final, n_real: int):
+    """Pull one dispatched chunk's per-lane results back to the host."""
+    for k in _OUT_KEYS:  # overlap the D2H copies across arrays
+        final[k].copy_to_host_async()
+    out = {k: np.asarray(final[k]).reshape(-1)[:n_real] for k in _OUT_KEYS}
     if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
         raise RuntimeError("jax batch simulator did not converge")
     return out
@@ -487,17 +651,23 @@ def simulate_batch_jax(
     precision: str = "auto",
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    devices=None,
+    mesh=None,
 ) -> BatchResult:
     """Device-resident :func:`repro.core.batch_sim.simulate_batch`.
 
     Parameters beyond the NumPy engine's:
 
-    chunk       lanes resident on the device at once ("auto": 5120 on
-                CPU — cache-sized chunks beat one giant batch there —
-                16384 on accelerators; None: the whole batch).  Chunks
-                share one compiled executable (lane counts are padded to
-                the Pallas tile and event widths rounded to powers of
-                two).
+    chunk       total lanes resident across the device(s) at once
+                ("auto": 5120-10240 on CPU — cache-sized chunks beat one
+                giant batch there — 16384 per device on accelerators;
+                None: the whole batch).
+                Chunks share one compiled executable (lane counts are
+                padded to the Pallas tile and event widths rounded to
+                powers of two).  Host-side packing of chunk ``k+1``
+                overlaps device execution of chunk ``k`` (double-buffered
+                async pipeline), and results are fetched one chunk
+                behind the dispatch front.
     precision   "x64" (default off-TPU; float-rounding agreement with the
                 NumPy engine), "x32" (TPU default — no f64 on TPU), or
                 "auto".
@@ -505,9 +675,19 @@ def simulate_batch_jax(
                 (interpret-mode off-TPU); False uses the identical
                 pure-jnp body.
     interpret   force/forbid Pallas interpret mode (default: off-TPU).
+    devices     shard every chunk's lanes across these devices (None: the
+                default device; "all": every local device; an int n: the
+                first n local devices; or an explicit device sequence).
+                Lanes are independent, so the sharded dispatch is a
+                collective-free pmap and per-lane results are *identical*
+                to the single-device path for any device count.
+    mesh        a ``jax.sharding.Mesh``; shorthand for ``devices=`` over
+                its (flattened) device set.  Mutually exclusive with
+                ``devices=``.
     """
     import jax
 
+    _maybe_enable_cache_from_env()
     L = traces.n_lanes
     W, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
         work, platform, strategy, L
@@ -526,7 +706,9 @@ def simulate_batch_jax(
     Pft = pad_sentinel(p_ft, traces.n_preds, np.nan,
                        round_pow2=True, min_width=8)
 
-    backend = jax.default_backend()
+    devs = _resolve_devices(devices, mesh)
+    n_dev = len(devs)
+    backend = devs[0].platform
     if precision == "auto":
         precision = "x32" if backend == "tpu" else "x64"
     if interpret is None:
@@ -534,9 +716,22 @@ def simulate_batch_jax(
     x64 = precision == "x64"
 
     if chunk == "auto":
-        chunk = _DEFAULT_CHUNK_CPU if backend == "cpu" else _DEFAULT_CHUNK_DEV
+        if backend == "cpu":
+            # host devices share one cache hierarchy, so bound the TOTAL
+            # resident lanes rather than scaling per device; x2 leaves the
+            # async pipeline a second chunk in flight (measured optimum
+            # across 1-8 forced host devices, see benchmarks/jax_engine)
+            chunk = _DEFAULT_CHUNK_CPU * min(n_dev, 2)
+        else:
+            chunk = _DEFAULT_CHUNK_DEV * n_dev
     chunk = L if chunk is None else min(int(chunk), L)
-    n_pad = -(-chunk // LANE_TILE) * LANE_TILE
+    # equal per-device shards, padded to the tile; single-device keeps the
+    # LANE_TILE quantum so chunk shapes (hence compiled executables) are
+    # unchanged from the unsharded engine
+    quant = LANE_TILE if n_dev == 1 else SHARD_TILE
+    per_dev_lanes = -(-chunk // n_dev)
+    shard = -(-per_dev_lanes // quant) * quant
+    n_pad = shard * n_dev
 
     if x64 and not jax.config.jax_enable_x64:
         from jax.experimental import enable_x64
@@ -545,24 +740,28 @@ def simulate_batch_jax(
     else:
         ctx = contextlib.nullcontext()
     with ctx:
-        import jax.numpy as jnp
-
-        fdt = jnp.float64 if x64 else jnp.float32
-        idt = jnp.int64 if x64 else jnp.int32
+        fdt = np.float64 if x64 else np.float32
+        idt = np.int64 if x64 else np.int32
         outs = []
+        pend = None  # the chunk in flight: (dispatched pytree, n_real)
         for lo in range(0, L, chunk):
             sl = slice(lo, min(lo + chunk, L))
             # migration-free chunks compile a specialized step with no
             # fault-cancellation state (most sweeps; much less traffic)
             has_mig = bool((mode[sl] == B._M_MIGRATION).any())
             runner = _get_runner(
-                use_pallas, interpret, max_iters, float(_EPS), has_mig
+                use_pallas, interpret, max_iters, float(_EPS), has_mig, devs
             )
-            outs.append(_run_chunk(
-                runner, has_mig, sl, n_pad, fdt, idt,
+            consts, state = _pack_chunk(
+                has_mig, sl, n_dev, n_pad, fdt, idt,
                 W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
                 traces.horizon, traces.window,
-            ))
+            )
+            disp = _dispatch(runner, devs, consts, state)
+            if pend is not None:  # fetch one chunk behind the dispatch
+                outs.append(_fetch(*pend))
+            pend = (disp, sl.stop - sl.start)
+        outs.append(_fetch(*pend))
     cat = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
     return BatchResult(
         makespan=cat["t"].astype(np.float64),

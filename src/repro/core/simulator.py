@@ -426,6 +426,8 @@ def simulate_many(
     n_components: Optional[int] = None,
     stationary: bool = False,
     engine: str = "batch",
+    devices=None,
+    mesh=None,
 ) -> List[SimResult]:
     """Average behaviour over ``n_runs`` random traces (paper: 100 runs).
 
@@ -433,12 +435,16 @@ def simulate_many(
     :func:`repro.core.events.make_event_traces_batch`) and, with the default
     ``engine="batch"``, simulated by the vectorized lane-per-trace engine
     (:mod:`repro.core.batch_sim`).  ``engine="jax"`` advances the same
-    lanes device-resident (:mod:`repro.core.jax_sim`).  ``engine="scalar"``
-    runs the reference scalar engine over the *same* traces — useful as an
-    oracle and for benchmarking the vectorization itself.
+    lanes device-resident (:mod:`repro.core.jax_sim`); ``devices=`` /
+    ``mesh=`` shard the lanes across a device set (results are identical
+    for any device count).  ``engine="scalar"`` runs the reference scalar
+    engine over the *same* traces — useful as an oracle and for
+    benchmarking the vectorization itself.
 
     ``n_components`` switches the fault trace from a single renewal stream
     to the superposition of per-component renewals (see events.py)."""
+    if engine != "jax" and (devices is not None or mesh is not None):
+        raise ValueError("devices=/mesh= require engine='jax'")
     rng = np.random.default_rng(seed)
     traces = _traces_for(
         work, platform, strategy, pred, n_runs, rng, fault_dist,
@@ -452,7 +458,8 @@ def simulate_many(
         from .jax_sim import simulate_batch_jax
 
         return simulate_batch_jax(
-            work, platform, strategy, traces, rng=rng
+            work, platform, strategy, traces, rng=rng,
+            devices=devices, mesh=mesh,
         ).to_results()
     if engine == "scalar":
         return [

@@ -16,7 +16,9 @@ single vectorized engine call:
 ``engine="jax"`` advances the very same lanes with the device-resident
 engine (:mod:`repro.core.jax_sim`): jit + ``lax.while_loop`` over a stacked
 lane-state pytree, Pallas hot step, host-side chunked lane scheduling
-(``chunk_lanes``) so 100k-lane grids never exceed device memory.
+(``chunk_lanes``) so 100k-lane grids never exceed device memory, and
+optional lane sharding across a device set (``devices=`` / ``mesh=``) with
+device-count-invariant results.
 ``engine="scalar"`` feeds each lane's :class:`EventTrace` view to the scalar
 reference engine instead: identical traces, Python event loop — the oracle
 for equivalence checks.  ``engine="legacy"`` reproduces the pre-batching
@@ -129,18 +131,24 @@ def _run_legacy(grid: GridSpec) -> List[List]:
 
 
 def run_grid(
-    grid: GridSpec, engine: str = "batch", chunk_lanes="auto"
+    grid: GridSpec, engine: str = "batch", chunk_lanes="auto",
+    devices=None, mesh=None,
 ) -> SweepResult:
     """Execute every cell of ``grid`` and aggregate per-cell statistics.
 
     ``chunk_lanes`` (jax engine only) caps the lanes resident on the
     device per engine call — "auto" picks a backend-appropriate chunk,
-    an int forces one, None runs the whole grid in a single call."""
+    an int forces one, None runs the whole grid in a single call.
+    ``devices`` / ``mesh`` (jax engine only) shard each chunk's lanes
+    across a device set (:func:`repro.core.jax_sim.simulate_batch_jax`);
+    per-lane results are identical for any device count."""
     if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
             f"unknown engine {engine!r} "
             "(expected 'batch', 'jax', 'scalar' or 'legacy')"
         )
+    if engine != "jax" and (devices is not None or mesh is not None):
+        raise ValueError("devices=/mesh= require engine='jax'")
     t0 = time.monotonic()
     if engine == "legacy":
         cells = []
@@ -184,7 +192,7 @@ def run_grid(
             res = simulate_batch_jax(
                 work, platforms, strategies, traces,
                 rng=np.random.default_rng([grid.seed, len(groups)]),
-                chunk=chunk_lanes,
+                chunk=chunk_lanes, devices=devices, mesh=mesh,
             )
         else:
             res = simulate_batch(
@@ -237,10 +245,14 @@ def run_cells(
     seed: int = 0,
     engine: str = "batch",
     chunk_lanes="auto",
+    devices=None,
+    mesh=None,
 ) -> SweepResult:
     """Convenience wrapper: build a :class:`GridSpec` and run it."""
     return run_grid(
         GridSpec(tuple(cells), n_runs=n_runs, seed=seed),
         engine=engine,
         chunk_lanes=chunk_lanes,
+        devices=devices,
+        mesh=mesh,
     )

@@ -183,6 +183,11 @@ def masked_primitive_update(
         in_specs=[spec] * len(ins),
         out_specs=[spec] * len(out_shape),
         out_shape=out_shape,
+        # the float lane-state slabs (t/saved/unsaved/pw, inputs 5-8) are
+        # loop-carried intermediates: alias them onto the corresponding
+        # outputs so the step updates state in place instead of streaming
+        # four fresh (rows, 128) buffers per iteration
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3},
         interpret=interpret,
     )(*ins)
     return tuple(o.reshape(L) for o in outs)

@@ -1,0 +1,66 @@
+"""Subprocess body for test_jax_sim.py's sharded-dispatch invariance test:
+per-lane results of the JAX engine must be *identical* for any device
+count (1/2/8 forced host devices), including ragged final shards and
+chunk boundaries, and agree with the NumPy engine.  Run directly:
+
+    python tests/_jax_sharded_check.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8"
+).strip()
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import Platform, PredictorModel, make_event_traces_batch, simulate_batch
+from repro.core import simulator as S
+from repro.core.jax_sim import simulate_batch_jax
+
+assert len(jax.devices()) == 8, jax.devices()
+
+MN = 60.0
+PLAT = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, M=5 * MN)
+WORK = 8 * 86400.0
+PREDW = PredictorModel(recall=0.85, precision=0.82, window=3000.0)
+PRED = PredictorModel(recall=0.85, precision=0.82)
+
+# 9 lanes: ragged against every shard width (1024 for 1 device, 128 for
+# the sharded dispatch), so padding/inert-lane handling is exercised
+for strat, pred in [(S.instant(PLAT, PREDW), PREDW),
+                    (S.migration(PLAT, PRED), PRED)]:
+    rng = np.random.default_rng(5)
+    traces = make_event_traces_batch(
+        rng, 9, horizon=12 * WORK, mtbf=PLAT.mu,
+        recall=pred.recall, precision=pred.precision,
+        window=pred.window, lead=pred.lead,
+    )
+    ref = simulate_batch_jax(WORK, PLAT, strat, traces, devices=1)
+    ref_np = simulate_batch(WORK, PLAT, strat, traces)
+    np.testing.assert_allclose(
+        ref.makespan, ref_np.makespan, rtol=1e-12, atol=1e-6
+    )
+    for devices, chunk in [(2, "auto"), (8, "auto"), (8, 4)]:
+        got = simulate_batch_jax(
+            WORK, PLAT, strat, traces, devices=devices, chunk=chunk
+        )
+        np.testing.assert_array_equal(
+            got.makespan, ref.makespan,
+            err_msg=f"{strat.name} devices={devices} chunk={chunk}",
+        )
+        for field in ("n_faults", "n_proactive_ckpts", "n_regular_ckpts",
+                      "n_migrations", "trace_exhausted"):
+            np.testing.assert_array_equal(
+                getattr(got, field), getattr(ref, field),
+                err_msg=f"{strat.name} devices={devices} {field}",
+            )
+    print(f"  {strat.name}: 1/2/8-device results identical", flush=True)
+
+print("JAX_SHARDED_OK")

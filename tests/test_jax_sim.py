@@ -171,6 +171,135 @@ def test_run_grid_jax_matches_batch():
         np.testing.assert_allclose(cj.makespan, cb.makespan, rtol=1e-12)
 
 
+def _n_devices() -> int:
+    import jax
+
+    return len(jax.devices())
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_device_count_invariance(devices):
+    """Sharded dispatch is invisible: per-lane makespans are *identical*
+    (not just close) for any device count, and counters match exactly —
+    including a ragged lane count (13) that leaves uneven final shards.
+
+    With a single local device only devices=1 runs; the CI multi-device
+    job forces 8 host devices so every count is exercised."""
+    if devices > _n_devices():
+        pytest.skip(f"needs {devices} devices, have {_n_devices()}")
+    strat, pred = S.instant(PLAT, PREDW), PREDW
+    traces = _traces_for(strat, pred, E.exponential(), n=13, seed=29)
+    ref = simulate_batch_jax(WORK, PLAT, strat, traces, devices=1)
+    got = simulate_batch_jax(WORK, PLAT, strat, traces, devices=devices)
+    np.testing.assert_array_equal(got.makespan, ref.makespan)
+    np.testing.assert_array_equal(got.n_faults, ref.n_faults)
+    np.testing.assert_array_equal(got.n_regular_ckpts, ref.n_regular_ckpts)
+    np.testing.assert_array_equal(
+        got.n_proactive_ckpts, ref.n_proactive_ckpts
+    )
+    bn = simulate_batch(WORK, PLAT, strat, traces)
+    np.testing.assert_allclose(
+        got.makespan, bn.makespan, rtol=1e-12, atol=1e-6
+    )
+
+
+def test_mesh_dispatch_matches_devices():
+    """mesh= is shorthand for devices= over the mesh's device set."""
+    import jax
+
+    mesh = jax.make_mesh((_n_devices(),), ("lanes",))
+    strat, pred = S.instant(PLAT, PREDW), PREDW
+    traces = _traces_for(strat, pred, E.exponential(), n=5, seed=31)
+    ref = simulate_batch_jax(WORK, PLAT, strat, traces, devices=_n_devices())
+    got = simulate_batch_jax(WORK, PLAT, strat, traces, mesh=mesh)
+    np.testing.assert_array_equal(got.makespan, ref.makespan)
+
+
+def test_devices_validation():
+    strat, pred = S.instant(PLAT, PREDW), PREDW
+    traces = _traces_for(strat, pred, E.exponential(), n=2, seed=1)
+    with pytest.raises(ValueError, match="device"):
+        simulate_batch_jax(WORK, PLAT, strat, traces, devices=4096)
+    with pytest.raises(ValueError, match="not both"):
+        simulate_batch_jax(WORK, PLAT, strat, traces, devices=1, mesh=object())
+    with pytest.raises(ValueError, match="expected 'all'"):
+        simulate_batch_jax(WORK, PLAT, strat, traces, devices="most")
+    with pytest.raises(ValueError, match="engine"):
+        S.simulate_many(
+            WORK, PLAT, strat, pred, n_runs=2, engine="batch", devices=1
+        )
+    from repro.experiments import ExperimentCell, run_cells
+
+    cell = ExperimentCell(
+        label="x", work=WORK, platform=PLAT, predictor=pred, strategy=strat
+    )
+    with pytest.raises(ValueError, match="engine"):
+        run_cells([cell], n_runs=2, engine="batch", devices=1)
+
+
+@pytest.mark.slow
+def test_sharded_invariance_subprocess():
+    """1/2/8 forced-host-device invariance, guaranteed even on
+    single-device hosts (the device count must be fixed before jax
+    initializes, hence the subprocess)."""
+    import os
+    import subprocess
+    import sys
+
+    if _n_devices() >= 2:
+        pytest.skip("multi-device process: covered in-process above")
+    script = os.path.join(
+        os.path.dirname(__file__), "_jax_sharded_check.py"
+    )
+    proc = subprocess.run(
+        [sys.executable, script], capture_output=True, text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    assert "JAX_SHARDED_OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_persistent_compilation_cache_env(tmp_path):
+    """REPRO_JAX_CACHE_DIR populates a persistent compilation cache.
+
+    Subprocess: the cache directory must be configured before the jax
+    backend initializes, which has long happened in the test process."""
+    import os
+    import subprocess
+    import sys
+
+    cache = tmp_path / "jax-cache"
+    env = dict(os.environ)
+    env["REPRO_JAX_CACHE_DIR"] = str(cache)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    body = (
+        "import numpy as np\n"
+        "from repro.core import Platform, PredictorModel, "
+        "make_event_traces_batch\n"
+        "from repro.core import simulator as S\n"
+        "from repro.core.jax_sim import simulate_batch_jax\n"
+        "plat = Platform(mu=60000.0, C=600.0, D=60.0, R=600.0)\n"
+        "pred = PredictorModel(0.0, 1.0)\n"
+        "tr = make_event_traces_batch(np.random.default_rng(0), 2, "
+        "horizon=1e6, mtbf=plat.mu, recall=0.0, precision=1.0, window=0.0)\n"
+        "simulate_batch_jax(86400.0, plat, S.young(plat), tr)\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", body], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert cache.is_dir() and any(cache.iterdir()), (
+        "persistent compilation cache is empty"
+    )
+
+
 def test_simulate_many_jax_engine():
     res_j = S.simulate_many(
         WORK, PLAT, S.exact_prediction(PLAT, PRED), PRED,
