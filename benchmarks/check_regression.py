@@ -91,9 +91,12 @@ def compare(
                 f"{d['max_abs_waste_diff']:.2e} > {agree_tol:.0e}"
             )
 
-        # performance: lanes/sec within perf_tol of the baseline
+        # performance: lanes/sec within perf_tol of the baseline (the
+        # jax_dev floor gates the device-generation trace mode)
         if perf_tol:
-            for key in ("jax_lanes_per_s", "numpy_lanes_per_s"):
+            for key in (
+                "jax_lanes_per_s", "numpy_lanes_per_s", "jax_dev_lanes_per_s"
+            ):
                 if key in d and key in bd and bd[key] > 0:
                     floor = (1.0 - perf_tol) * bd[key]
                     if d[key] < floor:

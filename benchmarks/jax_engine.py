@@ -1,5 +1,6 @@
 """Lanes-throughput curve: JAX device engine vs the NumPy batch engine,
-plus the multi-device scaling curve of the sharded dispatch.
+the host-vs-device *trace-mode* comparison, and the multi-device scaling
+curve of the sharded dispatch.
 
 One representative paper cell (Instant strategy, exponential faults,
 accurate predictor) swept over lane counts; both engines consume the same
@@ -8,6 +9,15 @@ wall-clock diverges.  The JAX engine is warmed up first (its jit compile
 is a one-off, amortized across every later call at the same chunk shape)
 and timed in steady state — the number a long Monte-Carlo campaign sees.
 
+``jax_engine/device_trace_lanes{n}`` times the same cell end-to-end in
+device trace mode (``TraceSpec``: counter-based RNG streams sampled
+inside the engine, O(1) cursor state per lane) against the host path
+(host NumPy generation + event-array engine), with the
+generation/packing/dispatch(=compute)/fetch split of both.  The 40960-lane record
+carries the acceptance number ``speedup_end_to_end`` (device-mode
+campaign throughput vs the host-trace JAX path) plus the waste-mean
+z-score against the NumPy engine.
+
 The devices curve (``jax_engine/devices{d}_lanes{n}``) times the sharded
 engine on 1/2/4/8 devices at a >= 10k lane count.  It runs in a child
 process with ``--xla_force_host_platform_device_count=8`` so the parent
@@ -15,6 +25,7 @@ benchmark process keeps its real device topology; on actual accelerator
 fleets pass ``--devices`` to use the local devices directly.
 
 Acceptance trajectory: jax lanes/s >= numpy lanes/s at 10k lanes on CPU,
+device trace mode >= 2x the host-trace path end-to-end at 40960 lanes,
 and sharded lanes/s non-decreasing with device count (expected >> on an
 accelerator, where the Pallas hot step compiles to a real Mosaic kernel
 instead of interpret mode and every device is a physical chip).
@@ -34,7 +45,9 @@ import time
 import numpy as np
 
 from repro.core import Platform, PredictorModel, make_event_traces_batch, simulate_batch
+from repro.core import jax_sim
 from repro.core import simulator as S
+from repro.core.events import make_trace_spec
 from repro.core.jax_sim import simulate_batch_jax
 
 from .common import emit
@@ -47,6 +60,9 @@ LANES_FULL = [1024, 4096, 10240, 32768, 102400]
 #: sharded-dispatch scaling curve: forced host device counts x lane count
 DEVICES_CURVE = (1, 2, 4, 8)
 DEVICES_LANES = 40960
+
+#: lane count of the trace-mode acceptance comparison
+TRACE_MODE_LANES = 40960
 
 
 def _cell():
@@ -64,29 +80,61 @@ def _traces(n: int, plat: Platform, pred: PredictorModel, seed: int = 7):
     )
 
 
+def _spec(n: int, plat: Platform, pred: PredictorModel, seed: int = 7):
+    return make_trace_spec(
+        n, horizon=12 * WORK, mtbf=plat.mu,
+        recall=pred.recall, precision=pred.precision,
+        window=pred.window, lead=pred.lead, seed=seed,
+    )
+
+
+def _split():
+    # dispatch_s is the device-compute leg on CPU (execution blocks the
+    # dispatch); on accelerators compute hides under dispatch + fetch
+    t = jax_sim.LAST_TIMINGS
+    return {
+        "pack_s": round(t.get("pack_s", 0.0), 3),
+        "dispatch_s": round(t.get("dispatch_s", 0.0), 3),
+        "fetch_s": round(t.get("fetch_s", 0.0), 3),
+    }
+
+
 def run(quick: bool = True, devices=None) -> None:
     plat, pred, strat = _cell()
     reps = 3 if quick else 5
-    for n in LANES_QUICK if quick else LANES_FULL:
+    for n in (LANES_QUICK if quick else LANES_FULL) + [TRACE_MODE_LANES]:
+        t0 = time.monotonic()
         traces = _traces(n, plat, pred)
+        gen_s = time.monotonic() - t0
+        spec = _spec(n, plat, pred)
 
         res_np = simulate_batch(WORK, plat, strat, traces)
         res_jx = simulate_batch_jax(  # jit warmup
             WORK, plat, strat, traces, devices=devices
         )
+        res_dev = simulate_batch_jax(  # device-generation warmup
+            WORK, plat, strat, spec, devices=devices
+        )
 
-        # interleaved best-of-N: both engines see the same machine noise
-        np_times, jx_times = [], []
+        # interleaved best-of-N: all engines see the same machine noise;
+        # the pack/fetch split is captured from the winning rep so it
+        # decomposes the reported time
+        np_s = jx_s = dv_s = float("inf")
+        jx_split = dv_split = {}
         for _ in range(reps):
-            np_times.append(
-                _timed(lambda: simulate_batch(WORK, plat, strat, traces))
+            np_s = min(
+                np_s, _timed(lambda: simulate_batch(WORK, plat, strat, traces))
             )
-            jx_times.append(
-                _timed(lambda: simulate_batch_jax(
-                    WORK, plat, strat, traces, devices=devices
-                ))
-            )
-        np_s, jx_s = min(np_times), min(jx_times)
+            t = _timed(lambda: simulate_batch_jax(
+                WORK, plat, strat, traces, devices=devices
+            ))
+            if t < jx_s:
+                jx_s, jx_split = t, _split()
+            t = _timed(lambda: simulate_batch_jax(
+                WORK, plat, strat, spec, devices=devices
+            ))
+            if t < dv_s:
+                dv_s, dv_split = t, _split()
 
         agree = float(np.abs(res_jx.waste - res_np.waste).max())
         emit(
@@ -95,10 +143,34 @@ def run(quick: bool = True, devices=None) -> None:
             {
                 "numpy_s": round(np_s, 3),
                 "jax_s": round(jx_s, 3),
+                "gen_s": round(gen_s, 3),
+                **jx_split,
                 "numpy_lanes_per_s": round(n / np_s, 1),
                 "jax_lanes_per_s": round(n / jx_s, 1),
                 "speedup_vs_numpy": round(np_s / jx_s, 2),
                 "max_abs_waste_diff": agree,
+            },
+        )
+        # device trace mode: generation happens inside the engine, so the
+        # end-to-end comparison charges the host path its generation time
+        mw_np = float(res_np.waste.mean())
+        mw_dev = float(res_dev.waste.mean())
+        se = float(res_np.waste.std(ddof=1)) / np.sqrt(n)
+        emit(
+            f"jax_engine/device_trace_lanes{n}",
+            dv_s * 1e6 / n,
+            {
+                "jax_dev_s": round(dv_s, 3),
+                **dv_split,
+                "jax_dev_lanes_per_s": round(n / dv_s, 1),
+                "host_end_to_end_s": round(gen_s + jx_s, 3),
+                "speedup_end_to_end": round((gen_s + jx_s) / dv_s, 2),
+                "mean_waste_numpy": round(mw_np, 6),
+                "mean_waste_device": round(mw_dev, 6),
+                # independent samples of the same law: |z| <~ 2-3
+                "waste_z_vs_numpy": round(
+                    (mw_dev - mw_np) / (se * np.sqrt(2.0)), 2
+                ),
             },
         )
     _run_devices_curve(reps=reps)

@@ -50,7 +50,7 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from .events import BatchTraces, pad_sentinel
+from .events import BatchTraces, TraceSpec, pad_sentinel
 from .simulator import SimResult, Strategy, _EPS
 from .waste import Platform
 
@@ -604,7 +604,7 @@ def simulate_batch(
     work,
     platform: Union[Platform, Sequence[Platform]],
     strategy: Union[Strategy, Sequence[Strategy]],
-    traces: BatchTraces,
+    traces: Union[BatchTraces, TraceSpec],
     rng: Optional[np.random.Generator] = None,
     max_iters: int = 50_000_000,
 ) -> BatchResult:
@@ -613,7 +613,14 @@ def simulate_batch(
     ``work``, ``platform`` and ``strategy`` are either shared by all lanes or
     per-lane sequences of length ``traces.n_lanes``.  ``rng`` is only
     consulted for fractional trust probabilities ``0 < q < 1``.
+
+    A :class:`TraceSpec` (device-generation stream layout) is accepted by
+    replaying its counter streams on the host (:meth:`TraceSpec.
+    materialize`) — the validation bridge between the device-generated
+    and host-generated paths.
     """
+    if isinstance(traces, TraceSpec):
+        traces = traces.materialize()
     L = traces.n_lanes
     W, C, D, R, M, T_R, T_P, mode, q = _lane_params(work, platform, strategy, L)
     p_t0, p_ft, _ = _filter_trusted(traces, q, mode, rng)

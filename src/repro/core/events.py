@@ -36,6 +36,7 @@ __all__ = [
     "PredictionEvent",
     "EventTrace",
     "BatchTraces",
+    "TraceSpec",
     "pad_sentinel",
     "Distribution",
     "exponential",
@@ -45,12 +46,14 @@ __all__ = [
     "make_fault_trace",
     "make_event_trace",
     "make_event_traces_batch",
+    "make_trace_spec",
     "superposed_fault_times",
     "superposed_fault_times_batch",
     "mu_np",
     "mu_p",
     "mu_e",
     "false_prediction_mtbf",
+    "false_prediction_mtbf_batch",
 ]
 
 
@@ -96,15 +99,37 @@ def false_prediction_mtbf(mu: float, r: float, p: float) -> float:
     return p * mu / (r * (1.0 - p))
 
 
+def false_prediction_mtbf_batch(
+    mtbf: np.ndarray, recall: np.ndarray, precision: np.ndarray
+) -> np.ndarray:
+    """Vectorized :func:`false_prediction_mtbf` (``+inf`` where no false
+    predictions occur) — shared by the host trace generator and the
+    device-generation packing path."""
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        return np.where(
+            (recall > 0.0) & (precision < 1.0),
+            precision * mtbf / np.maximum(recall * (1.0 - precision), 1e-300),
+            np.inf,
+        )
+
+
 # --------------------------------------------------------------------------- #
 # Inter-arrival distributions
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
 class Distribution:
-    """A positive inter-arrival distribution with a given mean."""
+    """A positive inter-arrival distribution with a given mean.
+
+    ``kind``/``param`` identify the family for the device trace generator
+    (:class:`TraceSpec`): the on-device inverse-CDF samplers dispatch on
+    them statically.  Custom distributions may leave ``kind`` empty; they
+    then work with every host path but not with ``trace_mode="device"``.
+    """
 
     name: str
     sampler: Callable[[np.random.Generator, float, int], np.ndarray]
+    kind: str = ""
+    param: float = 0.0
 
     def sample(self, rng: np.random.Generator, mean: float, n: int) -> np.ndarray:
         return self.sampler(rng, mean, n)
@@ -140,19 +165,25 @@ def _uniform_sample(rng: np.random.Generator, mean: float, n: int) -> np.ndarray
 
 
 def exponential() -> Distribution:
-    return Distribution("exponential", _exp_sample)
+    return Distribution("exponential", _exp_sample, kind="exponential")
 
 
 def weibull(shape: float) -> Distribution:
-    return Distribution(f"weibull(k={shape})", _weibull_sampler(shape))
+    return Distribution(
+        f"weibull(k={shape})", _weibull_sampler(shape),
+        kind="weibull", param=shape,
+    )
 
 
 def lognormal(sigma: float = 1.0) -> Distribution:
-    return Distribution(f"lognormal(sigma={sigma})", _lognormal_sampler(sigma))
+    return Distribution(
+        f"lognormal(sigma={sigma})", _lognormal_sampler(sigma),
+        kind="lognormal", param=sigma,
+    )
 
 
 def uniform() -> Distribution:
-    return Distribution("uniform", _uniform_sample)
+    return Distribution("uniform", _uniform_sample, kind="uniform")
 
 
 # --------------------------------------------------------------------------- #
@@ -509,12 +540,23 @@ def _arrival_times_batch(
     horizons: np.ndarray,
     max_block: int = 4_000_000,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Batched renewal arrivals: one ``(L, m)`` sampling pass per round.
+    """Batched renewal arrivals: one vectorized sampling pass per round.
 
     Relies on every :class:`Distribution` being a scale family — sampling at
     mean 1 and multiplying by the per-lane mean yields the per-lane law.
     Returns ``(times (L, W) +inf padded, counts (L,))`` with arrivals in
     ``(0, horizon_i]`` per lane.
+
+    The first round draws a full ``(L, m)`` block sized to the expected
+    per-lane count; *refill* rounds (lanes whose cumulative arrivals have
+    not yet crossed their horizon — the heavy-tail stragglers) draw one
+    vectorized ``(n_unfinished, m)`` block over just those lanes, in
+    ascending lane order, and their arrivals are scattered into the
+    output in one pass at the end — both the sampling and the assembly
+    cost O(stragglers), not O(L), per round.  On 100k-lane grids the
+    refill rounds used to dominate generation time.  Traces at a given
+    seed are unchanged when no refill occurs and differ (same law) when
+    one does.
     """
     means = np.asarray(means, dtype=np.float64)
     horizons = np.asarray(horizons, dtype=np.float64)
@@ -543,22 +585,46 @@ def _arrival_times_batch(
 
     cap = max(16, max_block // L)
     m = int(np.clip(expected.max() * 1.25 + 8, 16, cap))
-    blocks: List[np.ndarray] = []
-    totals = np.zeros(L)
-    while True:
-        block = dist.sample(rng, 1.0, (L, m)) * means[:, None]
-        block = np.maximum(block, 1e-9)  # guard zero inter-arrivals
-        block[~finite] = np.inf
-        blocks.append(block)
-        totals = totals + block.sum(axis=1)
-        if np.all(~finite | (totals > horizons)):
-            break
-        m = max(16, m // 3)
-    times = np.cumsum(np.concatenate(blocks, axis=1), axis=1)
-    keep = times <= horizons[:, None]  # monotone rows: kept entries are a prefix
+    block = dist.sample(rng, 1.0, (L, m)) * means[:, None]
+    block = np.maximum(block, 1e-9)  # guard zero inter-arrivals
+    block[~finite] = np.inf
+    times = np.cumsum(block, axis=1)
+    keep = times <= horizons[:, None]  # monotone rows: kept is a prefix
     counts = keep.sum(axis=1).astype(np.int64)
-    width = int(counts.max())
-    return np.where(keep, times, np.inf)[:, :width], counts
+    tail = times[:, -1]
+    ex_lanes: List[np.ndarray] = []
+    ex_times: List[np.ndarray] = []
+    act = np.flatnonzero(finite & (tail <= horizons))
+    tail = tail[act]  # act-aligned from here on
+    while act.size:
+        m = max(16, m // 3)
+        sub = np.maximum(
+            dist.sample(rng, 1.0, (act.size, m)) * means[act, None], 1e-9
+        )
+        sub_t = tail[:, None] + np.cumsum(sub, axis=1)
+        sk = sub_t <= horizons[act, None]
+        cnt = sk.sum(axis=1)
+        ex_lanes.append(np.repeat(act, cnt))
+        ex_times.append(sub_t[sk])  # row-major: grouped by lane, sorted
+        counts[act] += cnt
+        tail = sub_t[:, -1]
+        live = tail <= horizons[act]
+        act, tail = act[live], tail[live]
+    width = int(counts.max(initial=0))
+    out = np.full((L, max(width, times.shape[1])), np.inf)
+    out[:, : times.shape[1]] = np.where(keep, times, np.inf)
+    if ex_lanes:
+        lanes_cat = np.concatenate(ex_lanes)
+        times_cat = np.concatenate(ex_times)
+        # refill rounds append in time order per lane; a stable sort by
+        # lane turns (round, lane) order into per-lane sorted runs
+        order = np.argsort(lanes_cat, kind="stable")
+        lanes_s = lanes_cat[order]
+        base = keep.sum(axis=1)
+        starts = np.concatenate([[0], np.cumsum(counts - base)[:-1]])
+        pos = base[lanes_s] + np.arange(lanes_s.size) - starts[lanes_s]
+        out[lanes_s, pos] = times_cat[order]
+    return out[:, :width], counts
 
 
 def _bc(x, L: int) -> np.ndarray:
@@ -571,17 +637,51 @@ def superposed_fault_times_batch(
     mtbfs: np.ndarray,
     n_components: int,
     dist: Distribution | None = None,
+    stationary: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Batched fresh-start :func:`superposed_fault_times`: every lane's
     component frontier advances in one flattened sampling pass per round
     (the frontier shrinks geometrically, so a handful of rounds covers the
-    horizon).  Returns ``(times (L, W) +inf padded sorted, counts)``."""
+    horizon).  Returns ``(times (L, W) +inf padded sorted, counts)``.
+
+    ``stationary=True`` draws each component's first arrival from the
+    equilibrium (length-biased residual-life) law, like the scalar path —
+    but vectorized: each lane gets its *own* pool of unit-mean gaps
+    (lanes are independent Monte-Carlo runs, so pools must not be shared
+    — a shared pool's heavy atoms would correlate every run of a sweep
+    and understate the per-cell CIs), and the length-biased choice runs
+    as one offset-``searchsorted`` pass per lane block instead of a
+    per-lane Python loop."""
     dist = dist or exponential()
     horizons = np.asarray(horizons, dtype=np.float64)
     mtbfs = np.asarray(mtbfs, dtype=np.float64)
     L = horizons.shape[0]
     mu_ind = mtbfs * n_components
-    first = dist.sample(rng, 1.0, (L, n_components)) * mu_ind[:, None]
+    if stationary:
+        # pool size trades length-biased fidelity (ratio bias O(1/K))
+        # against the (block, K) memory of per-lane pools
+        K = int(min(max(4 * n_components, 2048), 20000))
+        first = np.empty((L, n_components))
+        B = max(1, 4_000_000 // K)
+        for lo in range(0, L, B):
+            sl = slice(lo, min(lo + B, L))
+            nb = sl.stop - sl.start
+            pool = np.maximum(dist.sample(rng, 1.0, (nb, K)), 1e-9)
+            cdf = np.cumsum(pool / pool.sum(axis=1, keepdims=True), axis=1)
+            cdf[:, -1] = 1.0  # guard float-rounding shortfall
+            rows = np.arange(nb)[:, None]
+            u = rng.random((nb, n_components))
+            # rows offset by 2 keep the flattened cdf globally sorted, so
+            # one searchsorted inverts every lane's CDF at once
+            idx = np.searchsorted(
+                (cdf + 2.0 * rows).ravel(), (u + 2.0 * rows).ravel(),
+                side="right",
+            ).reshape(nb, n_components) - rows * K
+            idx = np.minimum(idx, K - 1)
+            gaps = pool[rows, idx] * mu_ind[sl][:, None]
+            first[sl] = rng.uniform(0.0, 1.0, (nb, n_components)) * gaps
+    else:
+        first = dist.sample(rng, 1.0, (L, n_components)) * mu_ind[:, None]
     lane0, comp0 = np.nonzero(first < horizons[:, None])
     f_lane = lane0
     f_time = first[lane0, comp0]
@@ -632,8 +732,6 @@ def make_event_traces_batch(
     windows).  The generated traces are distributionally identical to the
     scalar path but consume the RNG in a different order, so individual
     traces differ draw-for-draw from :func:`make_event_trace` at equal seeds.
-    Superposed component traces (``n_components``) fall back to a per-lane
-    loop — the per-component sampling inside each lane is already vectorized.
     """
     L = int(n_traces)
     horizon = _bc(horizon, L)
@@ -645,23 +743,9 @@ def make_event_traces_batch(
     fault_dist = fault_dist or exponential()
     false_pred_dist = false_pred_dist or fault_dist
 
-    if n_components and stationary:
-        # the equilibrium first-arrival draw is pool-based: keep per-lane
-        rows = [
-            superposed_fault_times(
-                rng, float(horizon[i]), float(mtbf[i]), n_components,
-                fault_dist, stationary,
-            )
-            for i in range(L)
-        ]
-        n_faults = np.array([len(r) for r in rows], dtype=np.int64)
-        width = int(n_faults.max()) if L else 0
-        fault_times = np.full((L, width), np.inf)
-        for i, r in enumerate(rows):
-            fault_times[i, : len(r)] = r
-    elif n_components:
+    if n_components:
         fault_times, n_faults = superposed_fault_times_batch(
-            rng, horizon, mtbf, n_components, fault_dist
+            rng, horizon, mtbf, n_components, fault_dist, stationary
         )
     else:
         fault_times, n_faults = _arrival_times_batch(rng, fault_dist, mtbf, horizon)
@@ -675,12 +759,7 @@ def make_event_traces_batch(
     tp_t0 = np.where(predicted, np.maximum(0.0, fault_times - offsets), np.inf)
     tp_ft = np.where(predicted, fault_times, np.nan)
 
-    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-        fp_mean = np.where(
-            (recall > 0.0) & (precision < 1.0),
-            precision * mtbf / np.maximum(recall * (1.0 - precision), 1e-300),
-            np.inf,
-        )
+    fp_mean = false_prediction_mtbf_batch(mtbf, recall, precision)
     fp_t0, n_fp = _arrival_times_batch(rng, false_pred_dist, fp_mean, horizon)
 
     t0 = np.concatenate([tp_t0, fp_t0], axis=1)
@@ -718,4 +797,369 @@ def make_event_traces_batch(
         n_preds=n_preds,
         window=window,
         lead=lead,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Counter-based RNG trace specifications (device-side generation)
+# --------------------------------------------------------------------------- #
+#: stream kinds of the per-lane counter-based RNG layout.  Every lane owns
+#: five independent streams, one per kind (the TP coin stream's two output
+#: words carry the predicted coin and the window offset); draw ``i`` of a
+#: stream never depends on any other draw, so the device engine, the NumPy
+#: :meth:`TraceSpec.materialize` reference, and any cursor replaying the
+#: stream see identical events regardless of chunking or device count.
+(
+    STREAM_FAULT_GAP,  # fault inter-arrival time i
+    STREAM_TP_COIN,  # fault i: word0 = predicted coin, word1 = window offset
+    STREAM_FP_GAP,  # false-prediction inter-arrival time j
+    STREAM_TP_TRUST,  # trust coin for fault i's prediction (0 < q < 1 only)
+    STREAM_FP_TRUST,  # trust coin for false prediction j (0 < q < 1 only)
+) = range(5)
+
+#: Threefry-2x32 key-schedule parity constant (Salmon et al., SC'11)
+_TF_PARITY = 0x1BD11BDA
+#: Threefry-2x32 rotation schedule (repeating groups of four rounds)
+_TF_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+#: Random123 default round count (known-answer tested)
+THREEFRY_ROUNDS = 20
+
+#: SplitMix64 constants (Vigna; Stafford Mix13 finalizer).  Subkeys are
+#: derived with Threefry (quality key spacing, once per lane per stream
+#: kind); per-*counter* draws — the hot path, one evaluation per lane per
+#: event — use the ~10-op SplitMix64 mix, which passes BigCrush, instead
+#: of an ~80-op cipher.
+_SM_GAMMA = 0x9E3779B97F4A7C15
+_SM_MIX1 = 0xBF58476D1CE4E5B9
+_SM_MIX2 = 0x94D049BB133111EB
+
+
+def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
+    """Vectorized Threefry-2x32 block cipher (NumPy reference).
+
+    Round/key-injection layout follows Random123 (injection after every
+    fourth round).  The device engine re-implements the identical
+    function in jnp (:func:`repro.kernels.sim_step.threefry2x32`); a
+    bit-equality test pins the two together.  All inputs broadcast;
+    returns two ``uint32`` words.
+    """
+    k0 = np.asarray(k0, np.uint32)
+    k1 = np.asarray(k1, np.uint32)
+    x0 = np.asarray(c0, np.uint32)
+    x1 = np.asarray(c1, np.uint32)
+    with np.errstate(over="ignore"):
+        ks = (k0, k1, k0 ^ k1 ^ np.uint32(_TF_PARITY))
+        x0 = x0 + ks[0]
+        x1 = x1 + ks[1]
+        for i in range(rounds):
+            r = _TF_ROTATIONS[(i // 4) % 2][i % 4]
+            x0 = x0 + x1
+            x1 = (x1 << np.uint32(r)) | (x1 >> np.uint32(32 - r))
+            x1 = x1 ^ x0
+            if i % 4 == 3:
+                s = i // 4 + 1
+                x0 = x0 + ks[s % 3]
+                x1 = x1 + ks[(s + 1) % 3] + np.uint32(s)
+    return x0, x1
+
+
+def splitmix64(key64, ctr):
+    """Counter-indexed SplitMix64 draw (NumPy reference): output ``ctr``
+    of the stream whose state orbit starts at ``key64`` — i.e.
+    ``mix(key64 + (ctr + 1) * GAMMA)``, exactly Vigna's generator with a
+    random starting state.  Returns the (high, low) uint32 words of the
+    64-bit output.  The jnp twin lives in :mod:`repro.kernels.sim_step`;
+    a known-answer test pins both to the reference sequence
+    (``key64 = 0`` -> ``0xE220A8397B1DCDAF, ...``)."""
+    key64 = np.asarray(key64, np.uint64)
+    with np.errstate(over="ignore"):
+        z = key64 + (np.asarray(ctr, np.uint64) + np.uint64(1)) * np.uint64(
+            _SM_GAMMA
+        )
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(_SM_MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(_SM_MIX2)
+        z = z ^ (z >> np.uint64(31))
+    return (z >> np.uint64(32)).astype(np.uint32), z.astype(np.uint32)
+
+
+def uniform24(bits, dtype=np.float64):
+    """Map ``uint32`` words to uniforms in the *open* interval (0, 1):
+    the top 24 bits, centered by half an ulp — so ``log`` and ``log1p``
+    transforms never see an endpoint.  24-bit granularity is ~6e-8 of the
+    mean, far below Monte-Carlo resolution, and keeps the f32 (TPU) and
+    f64 paths on one code shape."""
+    return ((bits >> np.uint32(8)).astype(dtype) + dtype(0.5)) * dtype(2.0**-24)
+
+
+def gap_transform_np(kind: str, param: float, mean, x0, x1):
+    """Inverse-CDF inter-arrival transform of one counter draw (NumPy
+    reference; mirrors :func:`repro.kernels.sim_step.gap_transform`).
+
+    ``x0``/``x1`` are the two threefry output words; only the lognormal
+    family consumes the second (Box–Muller phase).  Matches the host
+    :class:`Distribution` families: same mean parameterization, same
+    ``1e-9`` zero-gap guard."""
+    u = uniform24(x0)
+    if kind == "exponential":
+        g = -np.log1p(-u) * mean
+    elif kind == "weibull":
+        scale = 1.0 / math.gamma(1.0 + 1.0 / param)
+        g = (np.asarray(mean) * scale) * (-np.log1p(-u)) ** (1.0 / param)
+    elif kind == "lognormal":
+        z = np.sqrt(-2.0 * np.log(u)) * np.cos(2.0 * np.pi * uniform24(x1))
+        with np.errstate(over="ignore"):
+            g = np.exp(np.log(mean) - 0.5 * param * param + param * z)
+    elif kind == "uniform":
+        g = 2.0 * np.asarray(mean) * u
+    else:
+        raise ValueError(
+            f"device trace generation supports exponential/weibull/"
+            f"lognormal/uniform, got kind={kind!r}"
+        )
+    return np.maximum(g, 1e-9)
+
+
+def require_inverse_cdf(dist: Distribution) -> None:
+    """Raise unless ``dist`` names a family the device sampler supports
+    (single point of truth for the supported-family list)."""
+    if not dist.kind:
+        raise ValueError(
+            f"distribution {dist.name!r} has no inverse-CDF kind; "
+            "device trace generation supports exponential/weibull/"
+            "lognormal/uniform"
+        )
+
+
+def stream_subkey_np(seed: int, stream, kind: int):
+    """Per-(lane-stream, kind) subkey derivation (NumPy reference).
+
+    ``seed`` is split into two key words; the counter words carry the
+    64-bit stream id (low word verbatim, high word shifted past the
+    4-bit kind tag), so distinct (stream, kind) pairs map to distinct
+    cipher inputs."""
+    stream = np.asarray(stream, np.int64)
+    s0 = np.uint32(seed & 0xFFFFFFFF)
+    s1 = np.uint32((seed >> 32) & 0xFFFFFFFF)
+    c0 = (stream & 0xFFFFFFFF).astype(np.uint32)
+    c1 = ((((stream >> 32) << 4) | kind) & 0xFFFFFFFF).astype(np.uint32)
+    return threefry2x32(s0, s1, c0, c1)
+
+
+def stream_key64_np(seed: int, stream, kind: int) -> np.ndarray:
+    """The 64-bit SplitMix stream key: the two Threefry subkey words
+    packed ``(high << 32) | low``."""
+    k0, k1 = stream_subkey_np(seed, stream, kind)
+    return (k0.astype(np.uint64) << np.uint64(32)) | k1.astype(np.uint64)
+
+
+@dataclass
+class TraceSpec:
+    """A *generative* trace batch: per-lane parameters plus a counter-based
+    RNG stream layout, in place of materialized event arrays.
+
+    Where :class:`BatchTraces` stores ``(lanes, events)`` slabs sampled on
+    the host, a ``TraceSpec`` stores only the O(lanes) parameters and lets
+    the consumer sample events on demand: lane ``i``'s events are a pure
+    function of ``(seed, stream[i])`` through the six counter-indexed
+    streams above.  The JAX engine (``trace_mode="device"``) walks these
+    streams with O(1) per-lane cursors; :meth:`materialize` replays the
+    identical streams into a :class:`BatchTraces` on the host (NumPy), so
+    host engines — and exactness tests — can consume the same traces.
+
+    Lanes sharing a ``stream`` id face identical faults and predictions
+    (the paired experiment design); ``take``/``tile`` preserve that by
+    carrying the ids."""
+
+    horizon: np.ndarray  # (L,)
+    mtbf: np.ndarray  # (L,)
+    recall: np.ndarray  # (L,)
+    precision: np.ndarray  # (L,)
+    window: np.ndarray  # (L,)
+    lead: np.ndarray  # (L,)
+    fault_dist: Distribution
+    false_pred_dist: Distribution
+    seed: int
+    stream: np.ndarray  # (L,) int64 global RNG stream ids
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.horizon.shape[0])
+
+    @property
+    def fp_mean(self) -> np.ndarray:
+        return false_prediction_mtbf_batch(self.mtbf, self.recall, self.precision)
+
+    def take(self, rows) -> "TraceSpec":
+        rows = np.asarray(rows)
+        return TraceSpec(
+            horizon=self.horizon[rows], mtbf=self.mtbf[rows],
+            recall=self.recall[rows], precision=self.precision[rows],
+            window=self.window[rows], lead=self.lead[rows],
+            fault_dist=self.fault_dist, false_pred_dist=self.false_pred_dist,
+            seed=self.seed, stream=self.stream[rows],
+        )
+
+    def tile(self, reps: int) -> "TraceSpec":
+        return self.take(np.tile(np.arange(self.n_lanes), reps))
+
+    def _grow_stream(self, kind: int, means: np.ndarray, max_events: int):
+        """Replay one gap stream to (just past) every lane's horizon:
+        ``(times (L, W), valid (L, W), counts (L,))``.  Sequential
+        accumulation order matches the device cursors, so the times are
+        bit-identical to what the engine observes (f64)."""
+        L = self.n_lanes
+        key = stream_key64_np(self.seed, self.stream, kind)
+        dist = self.fault_dist if kind == STREAM_FAULT_GAP else self.false_pred_dist
+        with np.errstate(invalid="ignore"):
+            expected = np.where(
+                np.isfinite(means) & (means > 0), self.horizon / means, 0.0
+            )
+        K = int(np.clip(
+            expected.max(initial=0.0) * 1.4 + 16, 16, max(max_events, 16)
+        ))
+        # ``max_events`` is a floor for the runaway guard, which scales
+        # with the expected count so any cell the device path can run is
+        # also replayable on the host (memory permitting)
+        cap = max(max_events, int(expected.max(initial=0.0) * 4) + 64)
+        last = np.zeros(L)
+        start = 0
+        cols: List[np.ndarray] = []
+        while True:
+            ctr = np.broadcast_to(
+                np.arange(start, start + K, dtype=np.int64), (L, K)
+            )
+            x0, x1 = splitmix64(key[:, None], ctr)
+            gaps = gap_transform_np(dist.kind, dist.param, means[:, None], x0, x1)
+            # seed the cumulative sum with `last` so later blocks keep
+            # the cursor's sequential (last + g1) + g2 association —
+            # bit-identical to the device accumulation, not last + (g1+g2)
+            t = np.cumsum(
+                np.concatenate([last[:, None], gaps], axis=1), axis=1
+            )[:, 1:]
+            cols.append(t)
+            last = t[:, -1]
+            if np.all(last > self.horizon):
+                break
+            start += K
+            if start > cap:
+                raise ValueError(
+                    f"lane needs more than {cap} events to cover its "
+                    "horizon; raise max_events"
+                )
+            K = max(16, K // 2)
+        times = np.concatenate(cols, axis=1)
+        valid = times <= self.horizon[:, None]
+        return times, valid, valid.sum(axis=1).astype(np.int64)
+
+    def materialize(self, max_events: int = 1 << 17) -> BatchTraces:
+        """Replay the counter streams on the host into a
+        :class:`BatchTraces` — the exact events the device engine samples
+        lazily (fault dates bit-identical in f64; merged predictions
+        time-sorted as in :func:`make_event_traces_batch`, whereas the
+        device cursor consumes true-positive predictions in fault order).
+
+        Trust coins (fractional ``q``) are *not* applied here: host
+        engines draw trust from their own RNG, so fractional-``q`` runs
+        agree with the device path only in distribution.  ``q`` in
+        {0, 1} — every paper strategy — is filter-exact."""
+        L = self.n_lanes
+        fault_times, valid, n_faults = self._grow_stream(
+            STREAM_FAULT_GAP, self.mtbf, max_events
+        )
+        W = fault_times.shape[1]
+        ctr = np.broadcast_to(np.arange(W, dtype=np.int64), (L, W))
+        ckey = stream_key64_np(self.seed, self.stream, STREAM_TP_COIN)
+        cw0, cw1 = splitmix64(ckey[:, None], ctr)
+        predicted = valid & (uniform24(cw0) < self.recall[:, None])
+        off = uniform24(cw1) * self.window[:, None]
+        tp_t0 = np.where(
+            predicted, np.maximum(0.0, fault_times - off), np.inf
+        )
+        tp_ft = np.where(predicted, fault_times, np.nan)
+        fault_times = np.where(valid, fault_times, np.inf)
+
+        fp_times, fp_valid, n_fp = self._grow_stream(
+            STREAM_FP_GAP, self.fp_mean, max_events
+        )
+        fp_t0 = np.where(fp_valid, fp_times, np.inf)
+
+        t0 = np.concatenate([tp_t0, fp_t0], axis=1)
+        ft = np.concatenate([tp_ft, np.full(fp_t0.shape, np.nan)], axis=1)
+        order = np.argsort(t0, axis=1, kind="stable")
+        t0 = np.take_along_axis(t0, order, axis=1)
+        ft = np.take_along_axis(ft, order, axis=1)
+        n_preds = predicted.sum(axis=1).astype(np.int64) + n_fp
+
+        pwidth = (int(n_preds.max()) if L else 0) + 1
+        t0 = t0[:, :pwidth] if t0.shape[1] >= pwidth else np.concatenate(
+            [t0, np.full((L, pwidth - t0.shape[1]), np.inf)], axis=1
+        )
+        ft = ft[:, :pwidth] if ft.shape[1] >= pwidth else np.concatenate(
+            [ft, np.full((L, pwidth - ft.shape[1]), np.nan)], axis=1
+        )
+        fwidth = (int(n_faults.max()) if L else 0) + 1
+        if fault_times.shape[1] < fwidth:
+            fault_times = np.concatenate(
+                [fault_times, np.full((L, fwidth - fault_times.shape[1]), np.inf)],
+                axis=1,
+            )
+        else:
+            fault_times = fault_times[:, :fwidth]
+        return BatchTraces(
+            horizon=self.horizon,
+            fault_times=fault_times,
+            fault_predicted=predicted[:, : fault_times.shape[1]],
+            n_faults=n_faults,
+            pred_t0=t0,
+            pred_fault=ft,
+            n_preds=n_preds,
+            window=self.window,
+            lead=self.lead,
+        )
+
+
+def make_trace_spec(
+    n_traces: int,
+    horizon,
+    mtbf,
+    recall,
+    precision,
+    window=0.0,
+    lead=math.inf,
+    fault_dist: Distribution | None = None,
+    false_pred_dist: Distribution | None = None,
+    seed: int = 0,
+    stream=None,
+) -> TraceSpec:
+    """Counter-RNG counterpart of :func:`make_event_traces_batch`: same
+    broadcastable per-lane parameters, but returns the O(lanes)
+    :class:`TraceSpec` instead of sampling events on the host.
+
+    ``stream`` assigns the per-lane RNG stream ids (default
+    ``arange(n_traces)``); pass disjoint ranges to make several specs
+    independent under one seed, or repeated ids to pair lanes on
+    identical traces.  Superposed component traces (``n_components``) are
+    host-generation only."""
+    L = int(n_traces)
+    fault_dist = fault_dist or exponential()
+    false_pred_dist = false_pred_dist or fault_dist
+    for d in (fault_dist, false_pred_dist):
+        require_inverse_cdf(d)
+    if stream is None:
+        stream = np.arange(L, dtype=np.int64)
+    else:
+        stream = np.asarray(stream, dtype=np.int64)
+        if stream.shape != (L,):
+            raise ValueError(f"stream must have shape ({L},), got {stream.shape}")
+    return TraceSpec(
+        horizon=_bc(horizon, L),
+        mtbf=_bc(mtbf, L),
+        recall=_bc(recall, L),
+        precision=_bc(precision, L),
+        window=_bc(window, L),
+        lead=_bc(lead, L),
+        fault_dist=fault_dist,
+        false_pred_dist=false_pred_dist,
+        seed=int(seed),
+        stream=stream,
     )

@@ -58,6 +58,68 @@ f64 and fall back to f32).  Trust filtering happens host-side through
 the NumPy engine's own filter, so the deterministic trust settings
 ``q in {0, 1}`` used by all paper strategies are trace-identical across
 the scalar, NumPy-batch, and JAX engines.
+
+Device trace generation (``trace_mode="device"`` / :class:`TraceSpec`)
+======================================================================
+
+Passing a :class:`~repro.core.events.TraceSpec` instead of materialized
+:class:`~repro.core.events.BatchTraces` moves event generation *inside*
+the engine: no host sampling, no sentinel-padded ``(lanes, events)``
+slabs, no ``(events, lanes)`` transpose, no host->device event copy —
+chunk packing ships O(lanes) scalars and chunking exists purely for
+compilation-shape reuse, so multi-million-lane campaigns fit trivially.
+
+**RNG stream layout** (the reproducibility contract; NumPy reference in
+:meth:`TraceSpec.materialize`):
+
+* lane ``i`` owns a 64-bit stream id ``spec.stream[i]`` — a *global*
+  lane identity that travels with the lane through chunking, sharding
+  and ``take``/``tile``, which is what makes results invariant to chunk
+  size and device count for a fixed ``(seed, stream)`` assignment.
+* per-(lane, kind) subkeys are derived once per chunk:
+  ``threefry2x32(seed_words, (stream_lo, stream_hi << 4 | kind))`` with
+  the five kinds of :mod:`repro.core.events` (``STREAM_FAULT_GAP``,
+  ``STREAM_TP_COIN`` — word 0 the predicted coin, word 1 the window
+  offset — ``STREAM_FP_GAP``, ``STREAM_TP_TRUST``, ``STREAM_FP_TRUST``).
+* draw ``n`` of a stream is ``SplitMix64(subkey_as_u64, n)`` (x64; the
+  x32/TPU fallback is ``threefry2x32(subkey, (n, 0))``) — counter
+  indexed, never sequential, so cursors can replay a stream (the strike
+  cursor re-walks the lookahead cursor's fault stream) and strategy-side
+  draws (trust coins) never perturb trace-side draws.
+
+**O(1) lane cursors** replace the per-lane event rows:
+
+* *strike cursor* ``(sf_ctr, sf_time)`` — the next fault to hit the
+  node; refilled by one counter draw when a fault resolves (fused into
+  the Pallas hot step) or goes stale during downtime.
+* *lookahead cursor* ``(la_ctr, la_time)`` + *pending-TP slot*
+  ``(tp_t0, tp_ft, tp_ctr)`` — the fault stream is walked ahead of the
+  strike cursor to find the next *visible* true-positive prediction
+  (recall coin, then trust coin for fractional ``q``); its window
+  position comes from the offset stream.
+* *false-prediction cursor* ``(fp_ctr, fp_time)`` — an independent
+  renewal stream at the Section 2.3 false-prediction rate.
+* the merged prediction head is ``min(tp_t0, fp_time)`` (ties to the
+  TP, matching the host generator's stable sort).  True positives are
+  consumed in fault order; when a prediction window exceeds the fault
+  inter-arrival gap the host path's time-sorted merge can order two TPs
+  differently — a distribution-level (not per-trace) difference, which
+  is why device-mode equivalence is statistical for ``window > 0`` and
+  exact for exact-date predictions.
+* *migration cancel slots* ``(ep_fctr, cancel_ctr[3])`` — the
+  vacated-node fault is cancelled by counter index instead of an
+  ``(L, F)`` mask scan.  Cancellations are set in fault order (TPs are
+  consumed in fault order) and retired in fault order (the strike
+  cursor visits indices monotonically), so three slots track pending
+  cancellations exactly; a fourth *simultaneously pending* cancellation
+  (four overlapping migration episodes with undelivered predicted
+  faults) is dropped — beyond-pathological under any paper parameters.
+
+Streams retire at the lane's generation horizon (date ``+inf``), exactly
+like the host generator's ``(0, horizon]`` clipping.  Equivalence with
+the host-generated path is statistical (same laws, different draws);
+:meth:`TraceSpec.materialize` replays the identical streams on the host
+for exactness tests and KS/accounting fidelity checks.
 """
 
 from __future__ import annotations
@@ -71,17 +133,28 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from . import batch_sim as B
+from . import events as E
 from .batch_sim import BatchResult, pad_lane_axis
-from .events import BatchTraces, pad_sentinel
+from .events import BatchTraces, TraceSpec, pad_sentinel
 from .simulator import Strategy, _EPS
 from .waste import Platform
 
 __all__ = [
     "simulate_batch_jax",
+    "device_interarrival_samples",
     "enable_compilation_cache",
+    "LAST_TIMINGS",
     "LANE_TILE",
     "SHARD_TILE",
 ]
+
+#: host-side time split of the most recent :func:`simulate_batch_jax`
+#: call: {"trace_mode", "pack_s", "dispatch_s", "fetch_s", "n_chunks"}.
+#: ``pack_s`` is host NumPy packing (events for the host trace mode,
+#: O(lanes) scalars for device mode), ``dispatch_s`` device_put + async
+#: launch, ``fetch_s`` the device wait + D2H copies.  Benchmarks read it
+#: to attribute end-to-end time.
+LAST_TIMINGS: dict = {}
 
 #: lane-count granularity: 8 f32 sublanes x 128 lanes, the Pallas tile
 LANE_TILE = 1024
@@ -98,40 +171,143 @@ CACHE_ENV = "REPRO_JAX_CACHE_DIR"
 #: default chunks: bound device-resident lanes so 100k-lane grids don't
 #: OOM (and bound the inert-lane overhead of the no-repacking design).
 #: On CPU a cache-sized chunk beats one giant batch; accelerators want
-#: large chunks to stay utilization-bound.
+#: large chunks to stay utilization-bound.  Device trace mode carries no
+#: event slabs — its per-lane state is ~50x smaller — so the cache-sized
+#: CPU chunk holds twice the lanes (measured optimum at 40960 lanes).
 _DEFAULT_CHUNK_CPU = 5120
+_DEFAULT_CHUNK_CPU_SPEC = 10240
 _DEFAULT_CHUNK_DEV = 16384
 
 
 def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
-             has_migration):
+             has_migration, gen=None):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
     from ..kernels.sim_step import (
         FLAG_CKPT_OK, FLAG_FAULTED, FLAG_FIN, FLAG_OK, FLAG_REG,
-        PRIM_WORK_NC, masked_primitive_update, primitive_update,
+        PRIM_WORK_NC, counter_uniform, counter_uniform2,
+        masked_primitive_update, primitive_update, stream_advance,
+        stream_key, threefry2x32,
     )
 
     CONT2PH = jnp.asarray(B._CONT2PH, jnp.int32)
     MODE2PH = jnp.asarray(B._MODE2PH, jnp.int32)
 
-    # event arrays are (events, lanes): cursor gathers a[cursor[l], l]
-    # then touch a handful of contiguous (L,)-rows (lanes advance through
-    # their traces roughly in step), not one element per 2 KB row of the
-    # (lanes, events) layout — the difference between L1 hits and L cache
-    # misses per gather, several times per iteration
-    F, P0, Pft = consts["F"], consts["P0"], consts["Pft"]
+    device_gen = gen is not None
+    if device_gen:
+        F = P0 = Pft = frows = None
+    else:
+        # event arrays are (events, lanes): cursor gathers a[cursor[l], l]
+        # then touch a handful of contiguous (L,)-rows (lanes advance
+        # through their traces roughly in step), not one element per 2 KB
+        # row of the (lanes, events) layout — the difference between L1
+        # hits and L cache misses per gather, several times per iteration
+        F, P0, Pft = consts["F"], consts["P0"], consts["Pft"]
+        frows = jnp.arange(F.shape[0], dtype=jnp.int32)[:, None]
     W, C, DR = consts["W"], consts["C"], consts["DR"]
     T_R, T_P, mode = consts["T_R"], consts["T_P"], consts["mode"]
     horizon, window = consts["horizon"], consts["window"]
     wpp, lead_act = consts["wpp"], consts["lead_act"]
     tp_eff_default = consts["tp_eff_default"]
-    frows = jnp.arange(F.shape[0], dtype=jnp.int32)[:, None]
 
     def take(a, idx):
         return jnp.take_along_axis(a, idx[None, :], axis=0)[0]
+
+    if device_gen:
+        # ---- counter-based generator closures (see module docstring) -- #
+        f_kind, f_param, fp_kind, fp_param, frac_q = gen
+        fdt = horizon.dtype
+        mtbf, fp_mean = consts["mtbf"], consts["fp_mean"]
+        recall, q_eff = consts["recall"], consts["q_eff"]
+        inf = jnp.asarray(jnp.inf, fdt)
+        nan = jnp.asarray(jnp.nan, fdt)
+
+        def subkey(kind):
+            # Threefry-derived per-(lane, kind) subkeys, once per chunk;
+            # packed by stream_key into the per-draw representation
+            # (uint64 SplitMix key on x64, the pair itself on x32)
+            return stream_key(*threefry2x32(
+                consts["s0"], consts["s1"], consts["sid_lo"],
+                (consts["sid_hi"] << 4) | jnp.uint32(kind),
+            ))
+
+        fg_key = subkey(E.STREAM_FAULT_GAP)
+        tc_key = subkey(E.STREAM_TP_COIN)
+        fp_key = subkey(E.STREAM_FP_GAP)
+        if frac_q:
+            tt_key = subkey(E.STREAM_TP_TRUST)
+            ft_key = subkey(E.STREAM_FP_TRUST)
+
+        def adv_fault(m, ctr, tm):
+            return stream_advance(
+                m, ctr, tm, fg_key, mtbf, horizon,
+                kind=f_kind, param=f_param,
+            )
+
+        def adv_fp(m, ctr, tm):
+            return stream_advance(
+                m, ctr, tm, fp_key, fp_mean, horizon,
+                kind=fp_kind, param=fp_param,
+            )
+
+        def tp_consume(m, la_ctr, la_time, tp_t0, tp_ft, tp_ctr):
+            """Advance the lookahead fault cursor until the pending-TP
+            slot holds the next *visible* true positive (or the stream
+            dies at the horizon).  Advance-then-check: each pass draws
+            one fault gap + the fused (coin, offset) pair per active
+            lane, terminating in ~1/recall expected passes."""
+
+            def cond(c):
+                return jnp.any(c[0])
+
+            def body(c):
+                act, ctr, tm, t0, ft, tc = c
+                ctr, tm = adv_fault(act, ctr, tm)
+                u_coin, u_off = counter_uniform2(tc_key, ctr, fdt)
+                vis = u_coin < recall
+                if frac_q:
+                    vis &= counter_uniform(tt_key, ctr, fdt) < q_eff
+                alive = jnp.isfinite(tm)
+                good = act & vis & alive
+                t0 = jnp.where(
+                    good, jnp.maximum(0.0, tm - u_off * window), t0
+                )
+                ft = jnp.where(good, tm, ft)
+                tc = jnp.where(good, ctr, tc)
+                dead = act & ~alive
+                t0 = jnp.where(dead, inf, t0)
+                ft = jnp.where(dead, nan, ft)
+                act = act & ~(good | dead)
+                return act, ctr, tm, t0, ft, tc
+
+            _, la_ctr, la_time, tp_t0, tp_ft, tp_ctr = lax.while_loop(
+                cond, body, (m, la_ctr, la_time, tp_t0, tp_ft, tp_ctr)
+            )
+            return la_ctr, la_time, tp_t0, tp_ft, tp_ctr
+
+        def fp_consume(m, fp_ctr, fp_time):
+            """Advance to the next false prediction; with fractional
+            trust the stream is thinned by per-event trust coins."""
+
+            def cond(c):
+                return jnp.any(c[0])
+
+            def body(c):
+                act, ctr, tm = c
+                ctr, tm = adv_fp(act, ctr, tm)
+                if frac_q:
+                    vis = counter_uniform(ft_key, ctr, fdt) < q_eff
+                else:
+                    vis = jnp.ones_like(act)
+                act = act & ~vis & jnp.isfinite(tm)
+                return act, ctr, tm
+
+            _, fp_ctr, fp_time = lax.while_loop(
+                cond, body, (m, fp_ctr, fp_time)
+            )
+            return fp_ctr, fp_time
 
     def step(carry):
         it, st = carry
@@ -139,12 +315,36 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         saved, unsaved = st["saved"], st["unsaved"]
         period_work, na_saved = st["period_work"], st["na_saved"]
         ep_t0, ep_end = st["ep_t0"], st["ep_end"]
-        fi, pi = st["fi"], st["pi"]
         phase = st["phase"]  # PH_DONE marks finished lanes (no done array)
-        # lanes that can migrate carry the fault-cancellation mask; all
-        # other sweeps compile a specialized step without it (it would
-        # cost an (L, F) carry copy + three gathers every iteration)
-        Fcancel = st["Fcancel"] if has_migration else None
+        if device_gen:
+            fi = pi = None
+            sf_ctr, sf_time = st["sf_ctr"], st["sf_time"]
+            la_ctr, la_time = st["la_ctr"], st["la_time"]
+            tp_t0, tp_ft, tp_ctr = st["tp_t0"], st["tp_ft"], st["tp_ctr"]
+            fp_ctr, fp_time = st["fp_ctr"], st["fp_time"]
+            if has_migration:
+                ep_fctr = st["ep_fctr"]
+                # retire cancel slots the strike cursor has passed
+                cancels = tuple(
+                    jnp.where(sf_ctr > st[k], -1, st[k])
+                    for k in ("cancel0", "cancel1", "cancel2")
+                )
+
+                def is_cancelled(ctr):
+                    return (
+                        (ctr == cancels[0]) | (ctr == cancels[1])
+                        | (ctr == cancels[2])
+                    )
+            else:
+                ep_fctr = cancels = None
+            Fcancel = None
+        else:
+            fi, pi = st["fi"], st["pi"]
+            # lanes that can migrate carry the fault-cancellation mask;
+            # all other sweeps compile a specialized step without it (it
+            # would cost an (L, F) carry copy + three gathers every
+            # iteration)
+            Fcancel = st["Fcancel"] if has_migration else None
         ep_ft = st["ep_ft"] if has_migration else None
 
         prim = jnp.zeros_like(phase)  # int32, PRIM_NOOP
@@ -154,23 +354,56 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         # ---- regular-mode decisions -------------------------------- #
         mn = phase == B._PH_MAIN
 
-        def p_cond(pi_):  # skip predictions whose action point passed
-            return jnp.any(mn & (take(P0, pi_) - lead_act < t))
+        if device_gen:
+            # skip predictions whose action point passed: consume from
+            # the merged (pending-TP, next-FP) head instead of a cursor
+            def p_cond(c):
+                tp_t0_, fp_time_ = c[2], c[6]
+                head = jnp.minimum(tp_t0_, fp_time_)
+                return jnp.any(mn & (head - lead_act < t))
 
-        def p_body(pi_):
-            adv = mn & (take(P0, pi_) - lead_act < t)
-            return pi_ + adv.astype(pi_.dtype)
+            def p_body(c):
+                la_ctr_, la_time_, tp_t0_, tp_ft_, tp_ctr_, fp_ctr_, fp_time_ = c
+                head = jnp.minimum(tp_t0_, fp_time_)
+                adv = mn & (head - lead_act < t)
+                use_tp = adv & (tp_t0_ <= fp_time_)
+                la_ctr_, la_time_, tp_t0_, tp_ft_, tp_ctr_ = tp_consume(
+                    use_tp, la_ctr_, la_time_, tp_t0_, tp_ft_, tp_ctr_
+                )
+                fp_ctr_, fp_time_ = fp_consume(
+                    adv & ~use_tp, fp_ctr_, fp_time_
+                )
+                return (la_ctr_, la_time_, tp_t0_, tp_ft_, tp_ctr_,
+                        fp_ctr_, fp_time_)
 
-        pi = lax.while_loop(p_cond, p_body, pi)
-        na = take(P0, pi) - lead_act
+            (la_ctr, la_time, tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time) = (
+                lax.while_loop(
+                    p_cond, p_body,
+                    (la_ctr, la_time, tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time),
+                )
+            )
+            na = jnp.minimum(tp_t0, fp_time) - lead_act
+        else:
+            def p_cond(pi_):  # skip predictions whose action point passed
+                return jnp.any(mn & (take(P0, pi_) - lead_act < t))
+
+            def p_body(pi_):
+                adv = mn & (take(P0, pi_) - lead_act < t)
+                return pi_ + adv.astype(pi_.dtype)
+
+            pi = lax.while_loop(p_cond, p_body, pi)
+            na = take(P0, pi) - lead_act
 
         # clean-period fast-forward (same fusion rule as the NumPy engine)
-        curf = take(F, fi)
+        curf = sf_time if device_gen else take(F, fi)
         ffm = (
             mn & (period_work == 0.0) & (unsaved == 0.0) & (curf >= t)
         )
         if has_migration:
-            ffm &= ~take(Fcancel, fi)
+            if device_gen:
+                ffm &= ~is_cancelled(sf_ctr)
+            else:
+                ffm &= ~take(Fcancel, fi)
         k_fault = jnp.floor((curf - t) / T_R)
         k_act = jnp.floor((na - t) / T_R)
         k_act = jnp.where(t + k_act * T_R >= na, k_act - 1.0, k_act)
@@ -206,26 +439,45 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         es = phase == B._PH_EP_START
         emig = es & (mode == B._M_MIGRATION)
         if has_migration:
-            # the predicted fault hits the vacated node: cancel it.  The
-            # O(L*F) match scan only runs on iterations where some lane
-            # migrates; the (row, mask) delta crosses the cond boundary
-            # (small arrays), never the Fcancel buffer itself (an
-            # identity branch would copy it every iteration), and the
-            # mark lands as one fused elementwise OR.
+            # the predicted fault hits the vacated node: cancel it
             can = emig & ~jnp.isnan(ep_ft) & (ep_ft >= t)
-
-            def _match(_):
-                m = (F == ep_ft[None, :]) & (frows >= fi[None, :]) & ~Fcancel
-                return (
-                    jnp.argmax(m, axis=0).astype(jnp.int32),
-                    can & m.any(axis=0),
+            if device_gen:
+                # cancel by fault-counter index (stored at pop time) —
+                # elementwise merges instead of an (L, F) match scan.
+                # Slots fill in fault order and retire in fault order;
+                # a fourth simultaneously-pending cancel is dropped.
+                c0, c1, c2 = cancels
+                f0 = c0 < 0
+                f1 = ~f0 & (c1 < 0)
+                f2 = ~f0 & ~f1 & (c2 < 0)
+                cancels = (
+                    jnp.where(can & f0, ep_fctr, c0),
+                    jnp.where(can & f1, ep_fctr, c1),
+                    jnp.where(can & f2, ep_fctr, c2),
                 )
+            else:
+                # The O(L*F) match scan only runs on iterations where
+                # some lane migrates; the (row, mask) delta crosses the
+                # cond boundary (small arrays), never the Fcancel buffer
+                # itself (an identity branch would copy it every
+                # iteration), and the mark lands as one fused
+                # elementwise OR.
+                def _match(_):
+                    m = (
+                        (F == ep_ft[None, :])
+                        & (frows >= fi[None, :])
+                        & ~Fcancel
+                    )
+                    return (
+                        jnp.argmax(m, axis=0).astype(jnp.int32),
+                        can & m.any(axis=0),
+                    )
 
-            def _nomatch(_):
-                return jnp.zeros_like(fi), jnp.zeros_like(can)
+                def _nomatch(_):
+                    return jnp.zeros_like(fi), jnp.zeros_like(can)
 
-            cj, setm = lax.cond(jnp.any(can), _match, _nomatch, 0)
-            Fcancel = Fcancel | (setm[None, :] & (frows == cj[None, :]))
+                cj, setm = lax.cond(jnp.any(can), _match, _nomatch, 0)
+                Fcancel = Fcancel | (setm[None, :] & (frows == cj[None, :]))
 
         def _ep_start(args):
             prim, target, cont = args
@@ -301,48 +553,88 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         ckend = t + C  # only consulted under ckm
 
         # resolve stale faults (fault during downtime: recovery restarts)
-        def s_cond(c):
-            t_, fi_, _ = c
-            cf = take(F, fi_)
-            stale = cf < t_
-            if has_migration:
-                stale |= take(Fcancel, fi_)
-            return jnp.any(res & stale)
+        if device_gen:
+            def s_cond(c):
+                t_, ctr_, tm_, _ = c
+                stale = tm_ < t_
+                if has_migration:
+                    stale |= is_cancelled(ctr_)
+                return jnp.any(res & stale)
 
-        def s_body(c):
-            t_, fi_, nflt_ = c
-            cf = take(F, fi_)
-            if has_migration:
-                cc = take(Fcancel, fi_)
-                stepm = res & (cc | (cf < t_))
-                hit = stepm & ~cc & (cf >= t_ - DR)
-            else:
-                stepm = res & (cf < t_)
-                hit = stepm & (cf >= t_ - DR)
-            t_ = jnp.where(hit, cf + DR, t_)
-            nflt_ = nflt_ + hit.astype(nflt_.dtype)
-            fi_ = fi_ + stepm.astype(fi_.dtype)
-            return t_, fi_, nflt_
+            def s_body(c):
+                t_, ctr_, tm_, nflt_ = c
+                if has_migration:
+                    cc = is_cancelled(ctr_)
+                    stepm = res & (cc | (tm_ < t_))
+                    hit = stepm & ~cc & (tm_ >= t_ - DR)
+                else:
+                    stepm = res & (tm_ < t_)
+                    hit = stepm & (tm_ >= t_ - DR)
+                t_ = jnp.where(hit, tm_ + DR, t_)
+                nflt_ = nflt_ + hit.astype(nflt_.dtype)
+                ctr_, tm_ = adv_fault(stepm, ctr_, tm_)
+                return t_, ctr_, tm_, nflt_
 
-        t, fi, n_faults = lax.while_loop(
-            s_cond, s_body, (t, fi, st["n_faults"])
-        )
-        nf = take(F, fi)
+            t, sf_ctr, sf_time, n_faults = lax.while_loop(
+                s_cond, s_body, (t, sf_ctr, sf_time, st["n_faults"])
+            )
+            nf = sf_time
+        else:
+            def s_cond(c):
+                t_, fi_, _ = c
+                cf = take(F, fi_)
+                stale = cf < t_
+                if has_migration:
+                    stale |= take(Fcancel, fi_)
+                return jnp.any(res & stale)
+
+            def s_body(c):
+                t_, fi_, nflt_ = c
+                cf = take(F, fi_)
+                if has_migration:
+                    cc = take(Fcancel, fi_)
+                    stepm = res & (cc | (cf < t_))
+                    hit = stepm & ~cc & (cf >= t_ - DR)
+                else:
+                    stepm = res & (cf < t_)
+                    hit = stepm & (cf >= t_ - DR)
+                t_ = jnp.where(hit, cf + DR, t_)
+                nflt_ = nflt_ + hit.astype(nflt_.dtype)
+                fi_ = fi_ + stepm.astype(fi_.dtype)
+                return t_, fi_, nflt_
+
+            t, fi, n_faults = lax.while_loop(
+                s_cond, s_body, (t, fi, st["n_faults"])
+            )
+            nf = take(F, fi)
 
         upd = masked_primitive_update if use_pallas else primitive_update
         kw = {"interpret": interpret} if use_pallas else {}
-        t, saved, unsaved, period_work, flags = upd(
-            prim, cont, target, ckend, nf,
-            t, saved, unsaved, period_work, W, DR,
-            eps=eps, reg_cont=int(B._C_CKPTREG), **kw,
-        )
+        if device_gen:
+            # the struck fault is consumed: the sampling step (refill the
+            # strike cursor with one counter draw where faulted) is fused
+            # into the hot-step kernel itself
+            kw["stream"] = (fg_key, sf_ctr, sf_time, mtbf, horizon)
+            kw["gap"] = (f_kind, f_param)
+            t, saved, unsaved, period_work, flags, sf_ctr, sf_time = upd(
+                prim, cont, target, ckend, nf,
+                t, saved, unsaved, period_work, W, DR,
+                eps=eps, reg_cont=int(B._C_CKPTREG), **kw,
+            )
+        else:
+            t, saved, unsaved, period_work, flags = upd(
+                prim, cont, target, ckend, nf,
+                t, saved, unsaved, period_work, W, DR,
+                eps=eps, reg_cont=int(B._C_CKPTREG), **kw,
+            )
         faulted = (flags & FLAG_FAULTED) != 0
         ok = (flags & FLAG_OK) != 0
         fin = (flags & FLAG_FIN) != 0
         cok = (flags & FLAG_CKPT_OK) != 0
         reg = (flags & FLAG_REG) != 0
 
-        fi = fi + faulted.astype(fi.dtype)
+        if not device_gen:
+            fi = fi + faulted.astype(fi.dtype)
         n_faults = n_faults + faulted.astype(n_faults.dtype)
         phase = jnp.where(faulted, B._PH_MAIN, phase)
         phase = jnp.where(fin, B._PH_DONE, phase)
@@ -363,58 +655,156 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         popm = cmask & (cont == B._C_POP_EP)
         ckr = cmask & (cont == B._C_CKPTREG)
 
-        def _pop(args):
-            # pop the prediction into the episode registers; for _C_CKPTREG
-            # (action point fell inside the regular checkpoint) enter the
-            # episode only if the window start is still current.  ep_ft is
-            # only consulted by the migration cancel, so the fast path
-            # neither carries nor gathers it.
-            if has_migration:
-                ep_t0, ep_ft, ep_end, pi, phase = args
-            else:
-                ep_t0, ep_end, pi, phase = args
-            p0v = take(P0, pi)
-            takep = ckr & (na_saved <= t) & jnp.isfinite(p0v)
-            good = takep & (p0v >= t - 1e-9)
-            pop = popm | takep
-            ep_t0 = jnp.where(pop, p0v, ep_t0)
-            ep_end = jnp.where(pop, p0v + window, ep_end)
-            pi = pi + pop.astype(pi.dtype)
-            phase = jnp.where(popm | good, B._PH_EP_START, phase)
-            if has_migration:
-                ep_ft = jnp.where(pop, take(Pft, pi - pop.astype(pi.dtype)),
-                                  ep_ft)
-                return ep_t0, ep_ft, ep_end, pi, phase
-            return ep_t0, ep_end, pi, phase
+        if device_gen:
+            def _pop(args):
+                # pop the merged-head prediction into the episode
+                # registers and refill the consumed cursor; for
+                # _C_CKPTREG (action point fell inside the regular
+                # checkpoint) enter the episode only if the window start
+                # is still current
+                if has_migration:
+                    (ep_t0, ep_ft, ep_fctr, ep_end, la_ctr, la_time,
+                     tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time, phase) = args
+                else:
+                    (ep_t0, ep_end, la_ctr, la_time,
+                     tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time, phase) = args
+                p0v = jnp.minimum(tp_t0, fp_time)
+                takep = ckr & (na_saved <= t) & jnp.isfinite(p0v)
+                good = takep & (p0v >= t - 1e-9)
+                pop = popm | takep
+                use_tp = pop & (tp_t0 <= fp_time)
+                ep_t0 = jnp.where(pop, p0v, ep_t0)
+                ep_end = jnp.where(pop, p0v + window, ep_end)
+                phase = jnp.where(popm | good, B._PH_EP_START, phase)
+                if has_migration:
+                    ep_ft = jnp.where(
+                        pop, jnp.where(use_tp, tp_ft, nan), ep_ft
+                    )
+                    ep_fctr = jnp.where(
+                        pop, jnp.where(use_tp, tp_ctr, -1), ep_fctr
+                    )
+                la_ctr, la_time, tp_t0, tp_ft, tp_ctr = tp_consume(
+                    use_tp, la_ctr, la_time, tp_t0, tp_ft, tp_ctr
+                )
+                fp_ctr, fp_time = fp_consume(pop & ~use_tp, fp_ctr, fp_time)
+                if has_migration:
+                    return (ep_t0, ep_ft, ep_fctr, ep_end, la_ctr, la_time,
+                            tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time, phase)
+                return (ep_t0, ep_end, la_ctr, la_time,
+                        tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time, phase)
 
-        if has_migration:
-            ep_t0, ep_ft, ep_end, pi, phase = lax.cond(
-                jnp.any(popm | ckr), _pop, lambda a: a,
-                (ep_t0, ep_ft, ep_end, pi, phase),
-            )
+            if has_migration:
+                (ep_t0, ep_ft, ep_fctr, ep_end, la_ctr, la_time, tp_t0,
+                 tp_ft, tp_ctr, fp_ctr, fp_time, phase) = lax.cond(
+                    jnp.any(popm | ckr), _pop, lambda a: a,
+                    (ep_t0, ep_ft, ep_fctr, ep_end, la_ctr, la_time,
+                     tp_t0, tp_ft, tp_ctr, fp_ctr, fp_time, phase),
+                )
+            else:
+                (ep_t0, ep_end, la_ctr, la_time, tp_t0, tp_ft, tp_ctr,
+                 fp_ctr, fp_time, phase) = lax.cond(
+                    jnp.any(popm | ckr), _pop, lambda a: a,
+                    (ep_t0, ep_end, la_ctr, la_time, tp_t0, tp_ft, tp_ctr,
+                     fp_ctr, fp_time, phase),
+                )
         else:
-            ep_t0, ep_end, pi, phase = lax.cond(
-                jnp.any(popm | ckr), _pop, lambda a: a,
-                (ep_t0, ep_end, pi, phase),
-            )
+            def _pop(args):
+                # pop the prediction into the episode registers; for
+                # _C_CKPTREG (action point fell inside the regular
+                # checkpoint) enter the episode only if the window start
+                # is still current.  ep_ft is only consulted by the
+                # migration cancel, so the fast path neither carries nor
+                # gathers it.
+                if has_migration:
+                    ep_t0, ep_ft, ep_end, pi, phase = args
+                else:
+                    ep_t0, ep_end, pi, phase = args
+                p0v = take(P0, pi)
+                takep = ckr & (na_saved <= t) & jnp.isfinite(p0v)
+                good = takep & (p0v >= t - 1e-9)
+                pop = popm | takep
+                ep_t0 = jnp.where(pop, p0v, ep_t0)
+                ep_end = jnp.where(pop, p0v + window, ep_end)
+                pi = pi + pop.astype(pi.dtype)
+                phase = jnp.where(popm | good, B._PH_EP_START, phase)
+                if has_migration:
+                    ep_ft = jnp.where(
+                        pop, take(Pft, pi - pop.astype(pi.dtype)), ep_ft
+                    )
+                    return ep_t0, ep_ft, ep_end, pi, phase
+                return ep_t0, ep_end, pi, phase
+
+            if has_migration:
+                ep_t0, ep_ft, ep_end, pi, phase = lax.cond(
+                    jnp.any(popm | ckr), _pop, lambda a: a,
+                    (ep_t0, ep_ft, ep_end, pi, phase),
+                )
+            else:
+                ep_t0, ep_end, pi, phase = lax.cond(
+                    jnp.any(popm | ckr), _pop, lambda a: a,
+                    (ep_t0, ep_end, pi, phase),
+                )
 
         st = {
             "t": t, "saved": saved, "unsaved": unsaved,
             "period_work": period_work, "na_saved": na_saved,
             "ep_t0": ep_t0, "ep_end": ep_end,
-            "fi": fi, "pi": pi,
             "n_faults": n_faults, "n_pro": n_pro, "n_reg": n_reg,
             "n_mig": n_mig, "phase": phase,
             "exhausted": exhausted,
         }
-        if has_migration:
-            st["ep_ft"] = ep_ft
-            st["Fcancel"] = Fcancel
+        if device_gen:
+            st.update(
+                sf_ctr=sf_ctr, sf_time=sf_time,
+                la_ctr=la_ctr, la_time=la_time,
+                tp_t0=tp_t0, tp_ft=tp_ft, tp_ctr=tp_ctr,
+                fp_ctr=fp_ctr, fp_time=fp_time,
+            )
+            if has_migration:
+                st["ep_ft"] = ep_ft
+                st["ep_fctr"] = ep_fctr
+                st["cancel0"], st["cancel1"], st["cancel2"] = cancels
+        else:
+            st["fi"] = fi
+            st["pi"] = pi
+            if has_migration:
+                st["ep_ft"] = ep_ft
+                st["Fcancel"] = Fcancel
         return it + 1, st
 
     def cond(carry):
         it, st = carry
         return jnp.any(st["phase"] != B._PH_DONE) & (it < max_iters)
+
+    if device_gen:
+        # prime the cursors: first strike fault, first visible TP (walks
+        # the lookahead stream), first visible false prediction.  Inert
+        # (padding) lanes never activate a stream.
+        state = dict(state)
+        live = state["phase"] != B._PH_DONE
+        neg1 = jnp.full_like(state["phase"], -1)
+        zf = jnp.zeros_like(horizon)
+        sf_ctr, sf_time = adv_fault(live, neg1, zf)
+        pvis = live & (q_eff > 0.0)
+        la_ctr, la_time, tp_t0, tp_ft, tp_ctr = tp_consume(
+            pvis & (recall > 0.0), neg1, zf,
+            jnp.full_like(horizon, jnp.inf), jnp.full_like(horizon, jnp.nan),
+            neg1,
+        )
+        fp_act = pvis & jnp.isfinite(fp_mean)
+        fp_ctr, fp_time = fp_consume(fp_act, neg1, zf)
+        fp_time = jnp.where(fp_act, fp_time, jnp.asarray(jnp.inf, fdt))
+        state.update(
+            sf_ctr=sf_ctr, sf_time=sf_time, la_ctr=la_ctr, la_time=la_time,
+            tp_t0=tp_t0, tp_ft=tp_ft, tp_ctr=tp_ctr,
+            fp_ctr=fp_ctr, fp_time=fp_time,
+        )
+        if has_migration:
+            state["ep_ft"] = jnp.full_like(horizon, jnp.nan)
+            state["ep_fctr"] = neg1
+            state["cancel0"] = neg1
+            state["cancel1"] = neg1
+            state["cancel2"] = neg1
 
     n_it, final = lax.while_loop(cond, step, (jnp.int32(0), state))
     final = dict(final); final["_iters"] = n_it
@@ -503,18 +893,19 @@ def _resolve_devices(devices, mesh) -> list:
 
 def _get_runner(
     use_pallas: bool, interpret: bool, max_iters: int, eps: float,
-    has_migration: bool, devs,
+    has_migration: bool, devs, gen=None,
 ):
     import jax
 
     key = (
         use_pallas, interpret, max_iters, eps, has_migration,
-        tuple(d.id for d in devs),
+        tuple(d.id for d in devs), gen,
     )
     if key not in _RUN_CACHE:
         step = partial(
             _jit_run, use_pallas=use_pallas, interpret=interpret,
             max_iters=max_iters, eps=eps, has_migration=has_migration,
+            gen=gen,
         )
         if len(devs) == 1:
             _RUN_CACHE[key] = jax.jit(step, donate_argnums=(1,))
@@ -534,28 +925,18 @@ def _get_runner(
 _OUT_KEYS = ("t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase")
 
 
-def _pack_chunk(
-    has_migration: bool, sl: slice, n_dev: int, n_pad: int, fdt, idt,
-    W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
+def _pack_scalar_chunk(
+    sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
 ):
-    """Host-side packing of one lane chunk into engine pytrees.
-
-    Pure NumPy — no device work — so the async pipeline can pack chunk
-    ``k+1`` while chunk ``k`` runs on the devices.  ``n_pad`` is the
-    total padded lane count (``n_dev`` equal shards); sharded arrays gain
-    a leading device axis for the pmap dispatch."""
+    """Shared scalar packing of one lane chunk (pure NumPy): the
+    per-lane engine constants and zeroed lane state common to both trace
+    modes.  Returns ``(lanes, fvec, consts, state)`` — the layout
+    helpers so callers can append their mode-specific arrays."""
     shard = n_pad // n_dev
 
     def lanes(a):  # (n_pad,) -> (n_pad,) | (n_dev, shard)
         return a if n_dev == 1 else a.reshape(n_dev, shard)
-
-    def events(a):  # (n_pad, E) -> (E, n_pad) | (n_dev, E, shard)
-        # (events, lanes) device layout — see the gather note in _jit_run
-        if n_dev == 1:
-            return np.ascontiguousarray(a.T)
-        return np.ascontiguousarray(
-            a.reshape(n_dev, shard, a.shape[1]).transpose(0, 2, 1)
-        )
 
     def fvec(x, fill=0.0):
         return lanes(pad_lane_axis(x[sl], n_pad, fill).astype(fdt))
@@ -572,14 +953,11 @@ def _pack_chunk(
         "T_R": T_Rh,
         "T_P": fvec(T_P, np.nan),
         "mode": modeh,
-        "horizon": fvec(horizon, np.inf),
+        "horizon": fvec(horizon, horizon_fill),
         "window": windowh,
         "wpp": np.maximum(T_Rh - Ch, 1e-9),
         "lead_act": np.where(modeh == B._M_MIGRATION, Mh, Ch),
         "tp_eff_default": np.maximum(Ch, windowh),
-        "F": events(pad_lane_axis(F[sl], n_pad, np.inf).astype(fdt)),
-        "P0": events(pad_lane_axis(P0[sl], n_pad, np.inf).astype(fdt)),
-        "Pft": events(pad_lane_axis(Pft[sl], n_pad, np.nan).astype(fdt)),
     }
     n_real = sl.stop - sl.start
     phase = np.full(n_pad, B._PH_MAIN, np.int32)
@@ -589,15 +967,83 @@ def _pack_chunk(
     state = {
         "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
         "na_saved": zf, "ep_t0": zf, "ep_end": zf,
-        "fi": lanes(np.zeros(n_pad, np.int32)),
-        "pi": lanes(np.zeros(n_pad, np.int32)),
         "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
         "phase": lanes(phase),
         "exhausted": lanes(np.zeros(n_pad, bool)),
     }
+    return lanes, fvec, consts, state
+
+
+def _pack_chunk(
+    has_migration: bool, sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
+):
+    """Host-side packing of one lane chunk into engine pytrees.
+
+    Pure NumPy — no device work — so the async pipeline can pack chunk
+    ``k+1`` while chunk ``k`` runs on the devices.  ``n_pad`` is the
+    total padded lane count (``n_dev`` equal shards); sharded arrays gain
+    a leading device axis for the pmap dispatch."""
+    shard = n_pad // n_dev
+    lanes, fvec, consts, state = _pack_scalar_chunk(
+        sl, n_dev, n_pad, fdt, idt,
+        W, C, D, R, M, T_R, T_P, mode, horizon, window, np.inf,
+    )
+
+    def events(a):  # (n_pad, E) -> (E, n_pad) | (n_dev, E, shard)
+        # (events, lanes) device layout — see the gather note in _jit_run
+        if n_dev == 1:
+            return np.ascontiguousarray(a.T)
+        return np.ascontiguousarray(
+            a.reshape(n_dev, shard, a.shape[1]).transpose(0, 2, 1)
+        )
+
+    consts.update(
+        F=events(pad_lane_axis(F[sl], n_pad, np.inf).astype(fdt)),
+        P0=events(pad_lane_axis(P0[sl], n_pad, np.inf).astype(fdt)),
+        Pft=events(pad_lane_axis(Pft[sl], n_pad, np.nan).astype(fdt)),
+    )
+    state["fi"] = lanes(np.zeros(n_pad, np.int32))
+    state["pi"] = lanes(np.zeros(n_pad, np.int32))
     if has_migration:
         state["ep_ft"] = lanes(np.full(n_pad, np.nan, fdt))
         state["Fcancel"] = np.zeros(consts["F"].shape, bool)
+    return consts, state
+
+
+def _pack_chunk_spec(
+    spec: TraceSpec, fp_mean, q_eff, sl: slice, n_dev: int, n_pad: int,
+    fdt, idt, W, C, D, R, M, T_R, T_P, mode,
+):
+    """Host-side packing of one lane chunk of a :class:`TraceSpec`.
+
+    O(lanes) scalars only — no event arrays, no transpose, no
+    O(events x lanes) host->device copy; the cursors are primed inside
+    the jitted program from the per-lane stream ids, so the async
+    pipeline's packing leg is essentially free in device trace mode.
+    Padding lanes get horizon -1: every stream dies on its first draw
+    (gaps are >= 1e-9), so inert lanes never sample."""
+    lanes, fvec, consts, state = _pack_scalar_chunk(
+        sl, n_dev, n_pad, fdt, idt,
+        W, C, D, R, M, T_R, T_P, mode, spec.horizon, spec.window, -1.0,
+    )
+
+    def uvec(x, fill=0):  # operates on already-sliced (chunk-local) arrays
+        return lanes(pad_lane_axis(x, n_pad, fill).astype(np.uint32))
+
+    stream = spec.stream[sl]
+    consts.update(
+        mtbf=fvec(spec.mtbf, 1.0),
+        fp_mean=fvec(fp_mean, np.inf),
+        recall=fvec(spec.recall),
+        q_eff=fvec(q_eff),
+        s0=uvec(np.full(stream.shape, spec.seed & 0xFFFFFFFF, np.int64)),
+        s1=uvec(
+            np.full(stream.shape, (spec.seed >> 32) & 0xFFFFFFFF, np.int64)
+        ),
+        sid_lo=uvec(stream & 0xFFFFFFFF),
+        sid_hi=uvec((stream >> 32) & 0xFFFFFFFF),
+    )
     return consts, state
 
 
@@ -644,7 +1090,7 @@ def simulate_batch_jax(
     work,
     platform: Union[Platform, Sequence[Platform]],
     strategy: Union[Strategy, Sequence[Strategy]],
-    traces: BatchTraces,
+    traces: Union[BatchTraces, TraceSpec],
     rng: Optional[np.random.Generator] = None,
     max_iters: int = 5_000_000,
     chunk: Union[int, str, None] = "auto",
@@ -656,11 +1102,19 @@ def simulate_batch_jax(
 ) -> BatchResult:
     """Device-resident :func:`repro.core.batch_sim.simulate_batch`.
 
+    ``traces`` is either host-materialized :class:`BatchTraces` (the host
+    trace mode) or a :class:`TraceSpec` (device trace mode): events are
+    then sampled *inside* the engine from per-lane counter-based RNG
+    streams — see the module docstring for the stream layout — and
+    ``rng`` is ignored (fractional trust coins come from the lane's own
+    trust streams, so results stay chunk- and device-count invariant).
+
     Parameters beyond the NumPy engine's:
 
     chunk       total lanes resident across the device(s) at once
                 ("auto": 5120-10240 on CPU — cache-sized chunks beat one
-                giant batch there — 16384 per device on accelerators;
+                giant batch there, and device trace mode fits twice the
+                lanes per chunk — 16384 per device on accelerators;
                 None: the whole batch).
                 Chunks share one compiled executable (lane counts are
                 padded to the Pallas tile and event widths rounded to
@@ -685,9 +1139,12 @@ def simulate_batch_jax(
                 its (flattened) device set.  Mutually exclusive with
                 ``devices=``.
     """
+    import time as _time
+
     import jax
 
     _maybe_enable_cache_from_env()
+    is_spec = isinstance(traces, TraceSpec)
     L = traces.n_lanes
     W, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
         work, platform, strategy, L
@@ -696,15 +1153,34 @@ def simulate_batch_jax(
         z = np.zeros(0)
         zi = np.zeros(0, np.int64)
         return BatchResult(z, z, zi, zi, zi, zi, np.zeros(0, bool))
-    p_t0, p_ft, _ = B._filter_trusted(traces, q, mode, rng)
-    # pow2-rounded sentinel widths: chunks (and similarly-sized batches)
-    # hit the same compiled executable
-    F = pad_sentinel(traces.fault_times, traces.n_faults, np.inf,
-                     round_pow2=True, min_width=8)
-    P0 = pad_sentinel(p_t0, traces.n_preds, np.inf,
-                      round_pow2=True, min_width=8)
-    Pft = pad_sentinel(p_ft, traces.n_preds, np.nan,
-                       round_pow2=True, min_width=8)
+    t_pack = t_dispatch = t_fetch = 0.0
+    t0 = _time.monotonic()
+    if is_spec:
+        for d in (traces.fault_dist, traces.false_pred_dist):
+            E.require_inverse_cdf(d)
+        # engine-side trust: mode "none" / q<=0 sees no predictions,
+        # fractional q thins both prediction streams via trust coins
+        q_eff = np.where(mode == B._M_NONE, 0.0, np.clip(q, 0.0, 1.0))
+        frac_q = bool(((q_eff > 0.0) & (q_eff < 1.0)).any())
+        gen = (
+            traces.fault_dist.kind, float(traces.fault_dist.param),
+            traces.false_pred_dist.kind, float(traces.false_pred_dist.param),
+            frac_q,
+        )
+        fp_mean = traces.fp_mean
+        F = P0 = Pft = None
+    else:
+        gen = None
+        p_t0, p_ft, _ = B._filter_trusted(traces, q, mode, rng)
+        # pow2-rounded sentinel widths: chunks (and similarly-sized
+        # batches) hit the same compiled executable
+        F = pad_sentinel(traces.fault_times, traces.n_faults, np.inf,
+                         round_pow2=True, min_width=8)
+        P0 = pad_sentinel(p_t0, traces.n_preds, np.inf,
+                          round_pow2=True, min_width=8)
+        Pft = pad_sentinel(p_ft, traces.n_preds, np.nan,
+                           round_pow2=True, min_width=8)
+    t_pack += _time.monotonic() - t0
 
     devs = _resolve_devices(devices, mesh)
     n_dev = len(devs)
@@ -721,7 +1197,8 @@ def simulate_batch_jax(
             # resident lanes rather than scaling per device; x2 leaves the
             # async pipeline a second chunk in flight (measured optimum
             # across 1-8 forced host devices, see benchmarks/jax_engine)
-            chunk = _DEFAULT_CHUNK_CPU * min(n_dev, 2)
+            base = _DEFAULT_CHUNK_CPU_SPEC if is_spec else _DEFAULT_CHUNK_CPU
+            chunk = base * min(n_dev, 2)
         else:
             chunk = _DEFAULT_CHUNK_DEV * n_dev
     chunk = L if chunk is None else min(int(chunk), L)
@@ -744,24 +1221,47 @@ def simulate_batch_jax(
         idt = np.int64 if x64 else np.int32
         outs = []
         pend = None  # the chunk in flight: (dispatched pytree, n_real)
+        n_chunks = 0
         for lo in range(0, L, chunk):
             sl = slice(lo, min(lo + chunk, L))
+            n_chunks += 1
             # migration-free chunks compile a specialized step with no
             # fault-cancellation state (most sweeps; much less traffic)
             has_mig = bool((mode[sl] == B._M_MIGRATION).any())
             runner = _get_runner(
-                use_pallas, interpret, max_iters, float(_EPS), has_mig, devs
+                use_pallas, interpret, max_iters, float(_EPS), has_mig,
+                devs, gen,
             )
-            consts, state = _pack_chunk(
-                has_mig, sl, n_dev, n_pad, fdt, idt,
-                W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
-                traces.horizon, traces.window,
-            )
+            t0 = _time.monotonic()
+            if is_spec:
+                consts, state = _pack_chunk_spec(
+                    traces, fp_mean, q_eff, sl, n_dev, n_pad, fdt, idt,
+                    W, C, D, R, M, T_R, T_P, mode,
+                )
+            else:
+                consts, state = _pack_chunk(
+                    has_mig, sl, n_dev, n_pad, fdt, idt,
+                    W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
+                    traces.horizon, traces.window,
+                )
+            t_pack += _time.monotonic() - t0
+            t0 = _time.monotonic()
             disp = _dispatch(runner, devs, consts, state)
+            t_dispatch += _time.monotonic() - t0
             if pend is not None:  # fetch one chunk behind the dispatch
+                t0 = _time.monotonic()
                 outs.append(_fetch(*pend))
+                t_fetch += _time.monotonic() - t0
             pend = (disp, sl.stop - sl.start)
+        t0 = _time.monotonic()
         outs.append(_fetch(*pend))
+        t_fetch += _time.monotonic() - t0
+    LAST_TIMINGS.clear()
+    LAST_TIMINGS.update(
+        trace_mode="device" if is_spec else "host",
+        pack_s=t_pack, dispatch_s=t_dispatch, fetch_s=t_fetch,
+        n_chunks=n_chunks,
+    )
     cat = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
     return BatchResult(
         makespan=cat["t"].astype(np.float64),
@@ -772,3 +1272,37 @@ def simulate_batch_jax(
         n_migrations=cat["n_mig"].astype(np.int64),
         trace_exhausted=cat["exhausted"],
     )
+
+
+def device_interarrival_samples(
+    dist, mean: float, n: int, seed: int = 0, stream: int = 0
+) -> np.ndarray:
+    """Draw ``n`` inter-arrival samples through the *device* sampling path
+    (jnp threefry + inverse-CDF transform, counters ``0..n-1`` of the
+    lane's fault-gap stream) — the exact per-draw function the engine's
+    cursors evaluate.  Used by the statistical-fidelity tests (KS against
+    the host :class:`~repro.core.events.Distribution` law) and fully
+    deterministic in ``(seed, stream)``."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.sim_step import gap_transform, splitmix64
+
+    E.require_inverse_cdf(dist)
+    if not jax.config.jax_enable_x64:
+        from jax.experimental import enable_x64
+
+        ctx = enable_x64()
+    else:
+        ctx = contextlib.nullcontext()
+    with ctx:
+        key = E.stream_key64_np(
+            seed, np.asarray([stream], np.int64), E.STREAM_FAULT_GAP
+        )
+        ctr = jnp.arange(n, dtype=jnp.int64)  # event i <-> draw counter i
+        x0, x1 = splitmix64(jnp.uint64(int(key[0])), ctr)
+        g = gap_transform(
+            dist.kind, float(dist.param), jnp.asarray(mean, jnp.float64),
+            x0, x1, jnp.float64,
+        )
+        return np.asarray(g)

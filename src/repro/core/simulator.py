@@ -428,6 +428,7 @@ def simulate_many(
     engine: str = "batch",
     devices=None,
     mesh=None,
+    trace_mode: str = "host",
 ) -> List[SimResult]:
     """Average behaviour over ``n_runs`` random traces (paper: 100 runs).
 
@@ -441,15 +442,50 @@ def simulate_many(
     engine over the *same* traces — useful as an oracle and for
     benchmarking the vectorization itself.
 
+    ``trace_mode="device"`` skips host generation entirely: a
+    :class:`~repro.core.events.TraceSpec` of counter-based RNG streams is
+    built instead, which the JAX engine samples lazily *on the device*
+    (O(1) cursor state per lane, no event arrays — see
+    :mod:`repro.core.jax_sim`); the batch/scalar engines replay the same
+    streams on the host via :meth:`TraceSpec.materialize`.  Device traces
+    are statistically equivalent (same laws) but not draw-identical to
+    host traces, and require an inverse-CDF-capable distribution
+    (exp/Weibull/lognormal/uniform) without ``n_components``.
+
     ``n_components`` switches the fault trace from a single renewal stream
     to the superposition of per-component renewals (see events.py)."""
     if engine != "jax" and (devices is not None or mesh is not None):
         raise ValueError("devices=/mesh= require engine='jax'")
+    if trace_mode not in ("host", "device"):
+        raise ValueError(
+            f"unknown trace_mode {trace_mode!r} (expected 'host' or 'device')"
+        )
     rng = np.random.default_rng(seed)
-    traces = _traces_for(
-        work, platform, strategy, pred, n_runs, rng, fault_dist,
-        false_pred_dist, horizon_factor, n_components, stationary,
-    )
+    if trace_mode == "device":
+        if n_components:
+            raise ValueError(
+                "trace_mode='device' does not support superposed component "
+                "traces (n_components); use trace_mode='host'"
+            )
+        from .events import make_trace_spec
+
+        traces = make_trace_spec(
+            n_runs,
+            horizon=horizon_factor * work,
+            mtbf=platform.mu,
+            recall=pred.recall if strategy.mode != "none" else 0.0,
+            precision=pred.precision,
+            window=pred.window,
+            lead=pred.lead,
+            fault_dist=fault_dist,
+            false_pred_dist=false_pred_dist,
+            seed=seed,
+        )
+    else:
+        traces = _traces_for(
+            work, platform, strategy, pred, n_runs, rng, fault_dist,
+            false_pred_dist, horizon_factor, n_components, stationary,
+        )
     if engine == "batch":
         from .batch_sim import simulate_batch
 
@@ -462,6 +498,8 @@ def simulate_many(
             devices=devices, mesh=mesh,
         ).to_results()
     if engine == "scalar":
+        if trace_mode == "device":
+            traces = traces.materialize()
         return [
             simulate(
                 work, platform, strategy, traces.lane(i),

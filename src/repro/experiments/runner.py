@@ -35,7 +35,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.batch_sim import simulate_batch
-from ..core.events import BatchTraces, make_event_trace, make_event_traces_batch
+from ..core.events import (
+    BatchTraces,
+    TraceSpec,
+    make_event_trace,
+    make_event_traces_batch,
+    make_trace_spec,
+)
 from ..core.simulator import simulate
 from .grid import CellResult, ExperimentCell, GridSpec, SweepResult
 
@@ -104,6 +110,53 @@ def _group_traces(grid: GridSpec, cell_idx: List[int], group_no: int) -> BatchTr
     return traces.take(rows)
 
 
+def _group_trace_spec(
+    grid: GridSpec, cell_idx: List[int], stream_base: int
+) -> Tuple[TraceSpec, int]:
+    """Device-generation counterpart of :func:`_group_traces`: build the
+    group's :class:`TraceSpec` with *globally unique* stream ids per
+    unique (trace-parameters, run) pair — cells sharing trace parameters
+    share stream ids (paired design), and stream ids are stable across
+    engines, chunk sizes and device counts.  Returns the expanded spec
+    and the next free stream id."""
+    cells = [grid.cells[ci] for ci in cell_idx]
+    n_runs = grid.n_runs
+    proto = cells[0]
+    if proto.n_components:
+        raise ValueError(
+            "trace_mode='device' does not support superposed component "
+            "traces (n_components); use trace_mode='host'"
+        )
+    uniq: Dict[Tuple, int] = {}
+    cell_slot = []
+    for c in cells:
+        cell_slot.append(uniq.setdefault(_trace_key(c), len(uniq)))
+    uniq_cells = [None] * len(uniq)
+    for c, slot in zip(cells, cell_slot):
+        if uniq_cells[slot] is None:
+            uniq_cells[slot] = c
+
+    rep = lambda vals: np.repeat(np.asarray(vals, dtype=np.float64), n_runs)
+    n_uniq_lanes = len(uniq_cells) * n_runs
+    spec = make_trace_spec(
+        n_uniq_lanes,
+        horizon=rep([c.horizon_factor * c.work for c in uniq_cells]),
+        mtbf=rep([c.platform.mu for c in uniq_cells]),
+        recall=rep([c.predictor.recall for c in uniq_cells]),
+        precision=rep([c.predictor.precision for c in uniq_cells]),
+        window=rep([c.predictor.window for c in uniq_cells]),
+        lead=rep([c.predictor.lead for c in uniq_cells]),
+        fault_dist=proto.dist,
+        false_pred_dist=proto.false_pred_dist,
+        seed=grid.seed,
+        stream=stream_base + np.arange(n_uniq_lanes, dtype=np.int64),
+    )
+    rows = np.concatenate(
+        [slot * n_runs + np.arange(n_runs) for slot in cell_slot]
+    )
+    return spec.take(rows), stream_base + n_uniq_lanes
+
+
 def _run_legacy(grid: GridSpec) -> List[List]:
     """The seed repository's exact pipeline: per-run object-based trace
     generation + scalar engine, one trace per (cell, run)."""
@@ -132,7 +185,7 @@ def _run_legacy(grid: GridSpec) -> List[List]:
 
 def run_grid(
     grid: GridSpec, engine: str = "batch", chunk_lanes="auto",
-    devices=None, mesh=None,
+    devices=None, mesh=None, trace_mode: str = "host",
 ) -> SweepResult:
     """Execute every cell of ``grid`` and aggregate per-cell statistics.
 
@@ -141,7 +194,17 @@ def run_grid(
     an int forces one, None runs the whole grid in a single call.
     ``devices`` / ``mesh`` (jax engine only) shard each chunk's lanes
     across a device set (:func:`repro.core.jax_sim.simulate_batch_jax`);
-    per-lane results are identical for any device count."""
+    per-lane results are identical for any device count.
+
+    ``trace_mode="device"`` replaces host trace generation with per-lane
+    counter-based RNG streams (:class:`~repro.core.events.TraceSpec`):
+    the JAX engine samples events lazily on the device (one engine
+    dispatch per trace-compatibility group, since the failure law
+    specializes the compiled sampler), while the batch/scalar engines
+    replay the identical streams host-side.  The paired design is
+    preserved (cells sharing trace parameters share stream ids), and
+    results are chunk-size and device-count invariant.  Not supported
+    for the legacy engine or superposed (``n_components``) traces."""
     if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
             f"unknown engine {engine!r} "
@@ -149,6 +212,12 @@ def run_grid(
         )
     if engine != "jax" and (devices is not None or mesh is not None):
         raise ValueError("devices=/mesh= require engine='jax'")
+    if trace_mode not in ("host", "device"):
+        raise ValueError(
+            f"unknown trace_mode {trace_mode!r} (expected 'host' or 'device')"
+        )
+    if trace_mode == "device" and engine == "legacy":
+        raise ValueError("trace_mode='device' requires a batched engine")
     t0 = time.monotonic()
     if engine == "legacy":
         cells = []
@@ -172,20 +241,57 @@ def run_grid(
     n_runs = grid.n_runs
     groups = _group_cells(grid)
     cell_order: List[int] = [ci for _, idx in groups for ci in idx]
-    # per-group batched generation, then one engine call over all groups:
-    # with zero-copy sentinel adoption the width padding of concat costs
-    # less than the extra iterations of per-group engine calls
-    traces = BatchTraces.concat(
-        [_group_traces(grid, idx, gno) for gno, (_, idx) in enumerate(groups)]
-    )
+    specs: List[TraceSpec] = []
+    if trace_mode == "device":
+        base = 0
+        for _, idx in groups:
+            spec, base = _group_trace_spec(grid, idx, base)
+            specs.append(spec)
+        traces = None
+    else:
+        # per-group batched generation, then one engine call over all
+        # groups: with zero-copy sentinel adoption the width padding of
+        # concat costs less than the extra iterations of per-group calls
+        traces = BatchTraces.concat(
+            [
+                _group_traces(grid, idx, gno)
+                for gno, (_, idx) in enumerate(groups)
+            ]
+        )
     work = np.repeat(
         np.asarray([grid.cells[ci].work for ci in cell_order], dtype=np.float64),
         n_runs,
     )
     platforms = [grid.cells[ci].platform for ci in cell_order for _ in range(n_runs)]
     strategies = [grid.cells[ci].strategy for ci in cell_order for _ in range(n_runs)]
+    if trace_mode == "device" and engine != "jax":
+        # host engines replay the device streams via materialize()
+        traces = BatchTraces.concat([s.materialize() for s in specs])
 
-    if engine in ("batch", "jax"):
+    if engine == "jax" and trace_mode == "device":
+        # one dispatch per trace-compatibility group: the failure law is
+        # a static specialization of the compiled on-device sampler
+        from ..core.jax_sim import simulate_batch_jax
+
+        parts = []
+        lo = 0
+        for (_, idx), spec in zip(groups, specs):
+            hi = lo + len(idx) * n_runs
+            parts.append(
+                simulate_batch_jax(
+                    work[lo:hi], platforms[lo:hi], strategies[lo:hi], spec,
+                    chunk=chunk_lanes, devices=devices, mesh=mesh,
+                )
+            )
+            lo = hi
+        waste = np.concatenate([p.waste for p in parts])
+        makespan = np.concatenate([p.makespan for p in parts])
+        n_faults = np.concatenate([p.n_faults for p in parts])
+        n_pro = np.concatenate([p.n_proactive_ckpts for p in parts])
+        n_reg = np.concatenate([p.n_regular_ckpts for p in parts])
+        n_mig = np.concatenate([p.n_migrations for p in parts])
+        exhausted = np.concatenate([p.trace_exhausted for p in parts])
+    elif engine in ("batch", "jax"):
         if engine == "jax":
             from ..core.jax_sim import simulate_batch_jax
 
@@ -247,6 +353,7 @@ def run_cells(
     chunk_lanes="auto",
     devices=None,
     mesh=None,
+    trace_mode: str = "host",
 ) -> SweepResult:
     """Convenience wrapper: build a :class:`GridSpec` and run it."""
     return run_grid(
@@ -255,4 +362,5 @@ def run_cells(
         chunk_lanes=chunk_lanes,
         devices=devices,
         mesh=mesh,
+        trace_mode=trace_mode,
     )

@@ -23,15 +23,31 @@ Primitive codes extend ``repro.core.batch_sim``'s 0 noop / 1 work /
 2 idle / 3 checkpoint with 4 = work *not* credited toward the regular
 period (the device engine folds the NumPy engine's separate ``credit``
 flag into the primitive code — one less lane array per iteration).
+
+The module also hosts the *sampling step* of the device trace generator
+(``trace_mode="device"``): a counter-based Threefry-2x32 stream cipher
+(bit-identical to the NumPy reference in :mod:`repro.core.events`),
+inverse-CDF inter-arrival transforms for the exponential / Weibull /
+lognormal / uniform families, and :func:`stream_advance` — the fused
+"draw the next event of a renewal stream" update.  Like the primitive
+update it has a Pallas entry (:func:`masked_stream_advance`) whose body
+is the pure-jnp function itself, so the two paths are bit-identical.
 """
 
 from __future__ import annotations
 
 from functools import partial
+from math import gamma as _gamma
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+import numpy as np
+
+from ..core.events import (
+    _SM_GAMMA, _SM_MIX1, _SM_MIX2, _TF_PARITY, _TF_ROTATIONS, THREEFRY_ROUNDS,
+)
 
 __all__ = [
     "PRIM_NOOP",
@@ -46,6 +62,16 @@ __all__ = [
     "FLAG_REG",
     "primitive_update",
     "masked_primitive_update",
+    "threefry2x32",
+    "splitmix64",
+    "stream_key",
+    "counter_words",
+    "uniform24",
+    "counter_uniform",
+    "counter_uniform2",
+    "gap_transform",
+    "stream_advance",
+    "masked_stream_advance",
 ]
 
 #: primitive kinds (0-3 shared with repro.core.batch_sim's _PR_* codes;
@@ -62,7 +88,7 @@ FLAG_REG = 16  # ... and it was a *regular* (period-resetting) checkpoint
 
 def primitive_update(
     prim, cont, target, ckend, nf, t, saved, unsaved, pw, W, DR,
-    *, eps: float, reg_cont: int,
+    *, eps: float, reg_cont: int, stream=None, gap=None,
 ):
     """One masked primitive execution; mirrors the NumPy engine's
     execute-one-primitive-per-lane block statement for statement.
@@ -72,6 +98,14 @@ def primitive_update(
     scalar oracle's order of operations); ``nf`` is each lane's next
     pending fault after stale-fault resolution.  Returns
     ``(t, saved, unsaved, period_work, flags)``.
+
+    Device trace mode fuses the generation step in: ``stream`` carries
+    the strike cursor ``(key, ctr, tm, mean, horizon)`` (with ``nf ==
+    tm``) and ``gap`` the static ``(kind, param)`` of the fault law; the
+    consumed fault is then refilled by one counter draw where the
+    primitive faulted, and the advanced ``(ctr, tm)`` pair is appended to
+    the return tuple — sampling happens inside the (Pallas) hot step
+    instead of a second kernel launch per iteration.
     """
     creditb = prim == PRIM_WORK
     workm = creditb | (prim == PRIM_WORK_NC)
@@ -110,7 +144,197 @@ def primitive_update(
         + cok.astype(jnp.int32) * FLAG_CKPT_OK
         + reg.astype(jnp.int32) * FLAG_REG
     )
-    return t4, saved2, unsaved3, pw3, flags
+    if stream is None:
+        return t4, saved2, unsaved3, pw3, flags
+    skey, sctr, stm, smean, shorizon = stream
+    sctr, stm = stream_advance(
+        faulted, sctr, stm, skey, smean, shorizon,
+        kind=gap[0], param=gap[1],
+    )
+    return t4, saved2, unsaved3, pw3, flags, sctr, stm
+
+
+# --------------------------------------------------------------------------- #
+# Counter-based RNG sampling step (device trace generation)
+# --------------------------------------------------------------------------- #
+def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
+    """Threefry-2x32 over uint32 arrays; the jnp twin of
+    :func:`repro.core.events.threefry2x32` (bit-identical by the shared
+    rotation/key-schedule constants; pinned by a known-answer test)."""
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    x0 = jnp.asarray(c0, jnp.uint32)
+    x1 = jnp.asarray(c1, jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_TF_PARITY))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(rounds):
+        r = _TF_ROTATIONS[(i // 4) % 2][i % 4]
+        x0 = x0 + x1
+        x1 = (x1 << r) | (x1 >> (32 - r))
+        x1 = x1 ^ x0
+        if i % 4 == 3:
+            s = i // 4 + 1
+            x0 = x0 + ks[s % 3]
+            x1 = x1 + ks[(s + 1) % 3] + jnp.uint32(s)
+    return x0, x1
+
+
+def uniform24(bits, dtype):
+    """uint32 words -> uniforms in the open interval (0, 1) (top 24 bits,
+    half-ulp centered); see the NumPy twin in ``core.events``."""
+    return (
+        (bits >> 8).astype(dtype) + jnp.asarray(0.5, dtype)
+    ) * jnp.asarray(2.0**-24, dtype)
+
+
+def splitmix64(key64, ctr):
+    """Counter-indexed SplitMix64 draw (jnp twin of
+    ``core.events.splitmix64``): 64 output bits as (high, low) uint32
+    words.  The per-event hot path — ~10 integer ops against the ~80 of a
+    full Threefry evaluation, with BigCrush-level stream quality."""
+    z = jnp.asarray(key64, jnp.uint64) + (
+        ctr.astype(jnp.uint64) + jnp.uint64(1)
+    ) * jnp.uint64(_SM_GAMMA)
+    z = (z ^ (z >> 30)) * jnp.uint64(_SM_MIX1)
+    z = (z ^ (z >> 27)) * jnp.uint64(_SM_MIX2)
+    z = z ^ (z >> 31)
+    return (z >> 32).astype(jnp.uint32), z.astype(jnp.uint32)
+
+
+def stream_key(k0, k1):
+    """Pack a Threefry subkey pair into the per-draw key representation:
+    a single uint64 (SplitMix64 draws) when 64-bit integers are enabled
+    — the CPU/GPU x64 path, matching :meth:`TraceSpec.materialize` — or
+    the uint32 pair itself (Threefry draws) on x32/TPU, where uint64 is
+    unavailable."""
+    if jnp.zeros((), jnp.uint64).dtype == np.dtype("uint64"):
+        return ((k0.astype(jnp.uint64) << 32) | k1.astype(jnp.uint64),)
+    return (k0, k1)
+
+
+def counter_words(key, ctr):
+    """Output words of draw ``ctr`` for a :func:`stream_key` key."""
+    if len(key) == 1:
+        return splitmix64(key[0], ctr)
+    return threefry2x32(key[0], key[1], ctr.astype(jnp.uint32), jnp.uint32(0))
+
+
+def counter_uniform(key, ctr, dtype):
+    """Draw ``ctr``'s uniform from the stream keyed ``key``."""
+    x0, _ = counter_words(key, ctr)
+    return uniform24(x0, dtype)
+
+
+def counter_uniform2(key, ctr, dtype):
+    """Both uniforms of one draw (e.g. the TP coin stream: word 0 is the
+    predicted coin, word 1 the window-offset fraction)."""
+    x0, x1 = counter_words(key, ctr)
+    return uniform24(x0, dtype), uniform24(x1, dtype)
+
+
+def gap_transform(kind: str, param: float, mean, x0, x1, dtype):
+    """Inverse-CDF inter-arrival transform of one counter draw (jnp twin
+    of ``core.events.gap_transform_np``; ``kind`` is compile-time static).
+    Only the lognormal family consumes the second cipher word (Box–Muller
+    phase).  Clamped to the host generator's ``1e-9`` zero-gap guard."""
+    u = uniform24(x0, dtype)
+    if kind == "exponential":
+        g = -jnp.log1p(-u) * mean
+    elif kind == "weibull":
+        scale = 1.0 / _gamma(1.0 + 1.0 / param)
+        g = (mean * scale) * (-jnp.log1p(-u)) ** (1.0 / param)
+    elif kind == "lognormal":
+        z = jnp.sqrt(-2.0 * jnp.log(u)) * jnp.cos(
+            jnp.asarray(2.0 * 3.141592653589793, dtype) * uniform24(x1, dtype)
+        )
+        g = jnp.exp(jnp.log(mean) - 0.5 * param * param + param * z)
+    elif kind == "uniform":
+        g = 2.0 * mean * u
+    else:  # pragma: no cover - validated at TraceSpec construction
+        raise ValueError(f"unsupported gap kind {kind!r}")
+    return jnp.maximum(g, 1e-9)
+
+
+def stream_advance(mask, ctr, tm, key, mean, horizon, *, kind, param):
+    """Advance a renewal-stream cursor by one event where ``mask``.
+
+    Draws gap ``ctr + 1`` from the counter stream, accumulates the event
+    date, and retires the stream (``+inf``) once it crosses the lane's
+    generation horizon — the O(1)-state replacement for a materialized,
+    sentinel-padded event row.  Lanes outside ``mask`` are untouched, and
+    a draw is a pure function of ``(key, counter)``, so cursor replays
+    (e.g. the strike cursor re-walking the lookahead cursor's fault
+    stream) observe bit-identical dates."""
+    c2 = ctr + 1
+    x0, x1 = counter_words(key, c2)
+    g = gap_transform(kind, param, mean, x0, x1, tm.dtype)
+    t2 = tm + g
+    t2 = jnp.where(t2 > horizon, jnp.asarray(jnp.inf, tm.dtype), t2)
+    return jnp.where(mask, c2, ctr), jnp.where(mask, t2, tm)
+
+
+def _advance_kernel(*refs, kind: str, param: float, nkey: int):
+    mask_ref, ctr_ref, tm_ref = refs[:3]
+    key = tuple(r[...] for r in refs[3:3 + nkey])
+    mean_ref, horizon_ref, ctr_out, tm_out = refs[3 + nkey:]
+    ctr, tm = stream_advance(
+        mask_ref[...] != 0, ctr_ref[...], tm_ref[...], key,
+        mean_ref[...], horizon_ref[...], kind=kind, param=param,
+    )
+    ctr_out[...] = ctr
+    tm_out[...] = tm
+
+
+def masked_stream_advance(
+    mask, ctr, tm, key, mean, horizon, *, kind: str, param: float,
+    interpret: bool | None = None, tile: int = 8,
+):
+    """Pallas entry of :func:`stream_advance` over flat ``(L,)`` lanes
+    (L % 128 == 0), same layout/tiling contract as
+    :func:`masked_primitive_update`; the kernel body *is* the jnp
+    function, so both paths are bit-identical."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L = tm.shape[0]
+    if L % 128:
+        raise ValueError(f"lane count {L} not a multiple of 128")
+    rows = L // 128
+    if interpret:
+        tile = rows
+    tile = max(1, min(tile, rows))
+    while rows % tile:
+        tile //= 2
+    fdt = tm.dtype
+
+    def as2d(x, dtype=None):
+        x = jnp.asarray(x) if dtype is None else jnp.asarray(x, dtype)
+        return x.reshape(rows, 128)
+
+    ins = [
+        as2d(mask, jnp.int32),
+        as2d(ctr, jnp.int32),
+        as2d(tm, fdt),
+        *[as2d(k) for k in key],
+        as2d(mean, fdt),
+        as2d(horizon, fdt),
+    ]
+    spec = pl.BlockSpec((tile, 128), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+        jax.ShapeDtypeStruct((rows, 128), fdt),
+    ]
+    outs = pl.pallas_call(
+        partial(_advance_kernel, kind=kind, param=param, nkey=len(key)),
+        grid=(rows // tile,),
+        in_specs=[spec] * len(ins),
+        out_specs=[spec] * len(out_shape),
+        out_shape=out_shape,
+        # the cursor pair is loop-carried state: update it in place
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(*ins)
+    return tuple(o.reshape(L) for o in outs)
 
 
 def _step_kernel(
@@ -132,16 +356,47 @@ def _step_kernel(
     flags_out[...] = flags
 
 
+def _step_gen_kernel(*refs, eps: float, reg_cont: int, gap, nkey: int):
+    # device trace mode: the strike time IS nf, so the stream tuple
+    # reuses nf_ref and the consumed fault is refilled in-kernel
+    (prim_ref, cont_ref, target_ref, ckend_ref, nf_ref,
+     t_ref, saved_ref, unsaved_ref, pw_ref, w_ref, dr_ref) = refs[:11]
+    key = tuple(r[...] for r in refs[11:11 + nkey])
+    sctr_ref, mean_ref, horizon_ref = refs[11 + nkey:14 + nkey]
+    (t_out, saved_out, unsaved_out, pw_out, flags_out,
+     sctr_out, stm_out) = refs[14 + nkey:]
+    t, saved, unsaved, pw, flags, sctr, stm = primitive_update(
+        prim_ref[...], cont_ref[...], target_ref[...],
+        ckend_ref[...], nf_ref[...], t_ref[...], saved_ref[...],
+        unsaved_ref[...], pw_ref[...], w_ref[...], dr_ref[...],
+        eps=eps, reg_cont=reg_cont,
+        stream=(key, sctr_ref[...], nf_ref[...],
+                mean_ref[...], horizon_ref[...]),
+        gap=gap,
+    )
+    t_out[...] = t
+    saved_out[...] = saved
+    unsaved_out[...] = unsaved
+    pw_out[...] = pw
+    flags_out[...] = flags
+    sctr_out[...] = sctr
+    stm_out[...] = stm
+
+
 def masked_primitive_update(
     prim, cont, target, ckend, nf, t, saved, unsaved, pw, W, DR,
     *, eps: float, reg_cont: int, interpret: bool | None = None,
-    tile: int = 8,
+    tile: int = 8, stream=None, gap=None,
 ):
     """Pallas entry point over flat ``(L,)`` lane vectors, L % 128 == 0.
 
     The lane axis is viewed as ``(L // 128, 128)`` and tiled ``tile`` rows
     per grid step (8 rows = the f32 sublane tile).  ``interpret`` defaults
     to True off-TPU (the repo-wide kernel idiom, see kernels/ops.py).
+
+    With ``stream``/``gap`` (device trace mode; ``stream[3]`` must be the
+    same array as ``nf``) the sampling step is fused into the kernel and
+    the advanced strike cursor is appended to the outputs.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -177,17 +432,37 @@ def masked_primitive_update(
     out_shape = [jax.ShapeDtypeStruct((rows, 128), fdt)] * 4 + [
         jax.ShapeDtypeStruct((rows, 128), jnp.int32)
     ]
+    # the float lane-state slabs (t/saved/unsaved/pw, inputs 5-8) are
+    # loop-carried intermediates: alias them onto the corresponding
+    # outputs so the step updates state in place instead of streaming
+    # four fresh (rows, 128) buffers per iteration
+    aliases = {5: 0, 6: 1, 7: 2, 8: 3}
+    if stream is None:
+        kernel = partial(_step_kernel, eps=eps, reg_cont=reg_cont)
+    else:
+        skey, sctr, _, smean, shorizon = stream
+        ins += [
+            *[jnp.asarray(k).reshape(rows, 128) for k in skey],
+            as2d(sctr, jnp.int32),
+            as2d(smean, fdt),
+            as2d(shorizon, fdt),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+            jax.ShapeDtypeStruct((rows, 128), fdt),
+        ]
+        aliases[11 + len(skey)] = 5  # the strike counter is loop-carried
+        kernel = partial(
+            _step_gen_kernel, eps=eps, reg_cont=reg_cont, gap=gap,
+            nkey=len(skey),
+        )
     outs = pl.pallas_call(
-        partial(_step_kernel, eps=eps, reg_cont=reg_cont),
+        kernel,
         grid=(rows // tile,),
         in_specs=[spec] * len(ins),
         out_specs=[spec] * len(out_shape),
         out_shape=out_shape,
-        # the float lane-state slabs (t/saved/unsaved/pw, inputs 5-8) are
-        # loop-carried intermediates: alias them onto the corresponding
-        # outputs so the step updates state in place instead of streaming
-        # four fresh (rows, 128) buffers per iteration
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3},
+        input_output_aliases=aliases,
         interpret=interpret,
     )(*ins)
     return tuple(o.reshape(L) for o in outs)

@@ -63,4 +63,28 @@ for strat, pred in [(S.instant(PLAT, PREDW), PREDW),
             )
     print(f"  {strat.name}: 1/2/8-device results identical", flush=True)
 
+# device trace generation: the counter-based RNG streams must also be
+# device-count and chunk invariant (stream ids travel with the lanes)
+from repro.core.events import make_trace_spec  # noqa: E402
+
+for strat, pred in [(S.instant(PLAT, PREDW), PREDW),
+                    (S.migration(PLAT, PRED), PRED)]:
+    spec = make_trace_spec(
+        9, horizon=12 * WORK, mtbf=PLAT.mu,
+        recall=pred.recall, precision=pred.precision,
+        window=pred.window, lead=pred.lead, seed=5,
+    )
+    ref = simulate_batch_jax(WORK, PLAT, strat, spec, devices=1)
+    for devices, chunk in [(2, "auto"), (8, "auto"), (8, 4)]:
+        got = simulate_batch_jax(
+            WORK, PLAT, strat, spec, devices=devices, chunk=chunk
+        )
+        np.testing.assert_array_equal(
+            got.makespan, ref.makespan,
+            err_msg=f"device-gen {strat.name} devices={devices} chunk={chunk}",
+        )
+        np.testing.assert_array_equal(got.n_faults, ref.n_faults)
+    print(f"  device-gen {strat.name}: 1/2/8-device results identical",
+          flush=True)
+
 print("JAX_SHARDED_OK")

@@ -130,3 +130,23 @@ def test_check_regression_cli_passes_on_committed_baselines(tmp_path):
     )
     fresh = json.loads((out / "BENCH_sim.waste_curves.json").read_text())
     assert fresh["benchmarks"], "no fresh waste_curves records written"
+
+
+def test_run_profile_help_and_unknown_name_precedence():
+    """--profile parses; --only validation still fails fast before any
+    module import even when --profile is passed."""
+    proc = _run_cli("--only", "nope", "--profile")
+    assert proc.returncode != 0
+    assert "nope" in proc.stderr + proc.stdout
+
+
+def test_compare_flags_device_trace_floor():
+    from benchmarks.check_regression import compare
+
+    base = [_rec("jax_engine/device_trace_lanes40960",
+                 jax_dev_lanes_per_s=20000.0)]
+    fresh = [_rec("jax_engine/device_trace_lanes40960",
+                  jax_dev_lanes_per_s=10000.0)]
+    fails = compare(base, fresh, perf_tol=0.30)
+    assert len(fails) == 1 and "jax_dev_lanes_per_s" in fails[0]
+    assert compare(base, fresh, perf_tol=0.0) == []

@@ -385,3 +385,288 @@ else:
     )
     def test_three_way_makespan_agreement(mu_mn, c_mn, law, mode, q, seed):
         _check_three_way(mu_mn, c_mn, law, mode, q, seed)
+
+
+# ---------------------------------------------------------------------- #
+# device trace generation (trace_mode="device" / TraceSpec)
+# ---------------------------------------------------------------------- #
+def _spec_for(strat, pred, dist, n=4, seed=42, window=None):
+    return E.make_trace_spec(
+        n,
+        horizon=12 * WORK,
+        mtbf=PLAT.mu,
+        recall=pred.recall if strat.mode != "none" else 0.0,
+        precision=pred.precision,
+        window=pred.window if window is None else window,
+        lead=pred.lead,
+        fault_dist=dist,
+        seed=seed,
+    )
+
+
+@pytest.mark.parametrize(
+    "dist",
+    [E.exponential(), E.weibull(0.7), E.lognormal(1.0)],
+    ids=["exp", "weibull0.7", "lognormal"],
+)
+def test_device_gen_matches_host_engines_exact(dist):
+    """Exact-date predictions (window=0): the device-generated run and
+    the NumPy engine on the *materialized* replay of the same counter
+    streams agree to float rounding — fault dates are bit-identical and
+    the TP merge order coincides, so this pins the whole generation
+    pipeline (keys, counters, transforms, trust, migration cancel)."""
+    for strat, pred in [
+        (S.young(PLAT), PRED0),
+        (S.exact_prediction(PLAT, PRED), PRED),
+        (S.migration(PLAT, PRED), PRED),
+    ]:
+        spec = _spec_for(strat, pred, dist, window=0.0)
+        bn = simulate_batch(WORK, PLAT, strat, spec.materialize())
+        bj = simulate_batch_jax(WORK, PLAT, strat, spec)
+        np.testing.assert_allclose(
+            bj.makespan, bn.makespan, rtol=1e-12, atol=1e-6,
+            err_msg=f"{strat.name}/{dist.name}",
+        )
+        np.testing.assert_array_equal(bj.n_faults, bn.n_faults)
+        np.testing.assert_array_equal(bj.n_regular_ckpts, bn.n_regular_ckpts)
+        np.testing.assert_array_equal(
+            bj.n_proactive_ckpts, bn.n_proactive_ckpts
+        )
+        np.testing.assert_array_equal(bj.n_migrations, bn.n_migrations)
+
+
+def test_device_gen_window_statistical():
+    """Prediction windows: the device cursor consumes true positives in
+    fault order while the host replay time-sorts them, so individual
+    makespans may differ where two windows overlap — but only at the
+    episode scale (<< makespan), and the waste means agree tightly."""
+    for strat in (S.instant(PLAT, PREDW), S.nockpt(PLAT, PREDW),
+                  S.withckpt(PLAT, PREDW)):
+        spec = _spec_for(strat, PREDW, E.exponential(), n=6, seed=13)
+        bn = simulate_batch(WORK, PLAT, strat, spec.materialize())
+        bj = simulate_batch_jax(WORK, PLAT, strat, spec)
+        np.testing.assert_allclose(
+            bj.makespan, bn.makespan, rtol=5e-3, err_msg=strat.name
+        )
+        assert abs(bj.waste.mean() - bn.waste.mean()) < 1e-3, strat.name
+        np.testing.assert_array_equal(bj.n_faults, bn.n_faults)
+
+
+def test_device_gen_chunk_invariance():
+    """Stream ids travel with the lanes, so chunk boundaries are
+    invisible: byte-identical results for any chunk size — including
+    with fractional trust (coins are counter-indexed, not sequential)."""
+    strat = S.instant(PLAT, PREDW)
+    spec = _spec_for(strat, PREDW, E.weibull(0.7), n=7, seed=3)
+    whole = simulate_batch_jax(WORK, PLAT, strat, spec, chunk=None)
+    for chunk in (2, 3):
+        got = simulate_batch_jax(WORK, PLAT, strat, spec, chunk=chunk)
+        np.testing.assert_array_equal(whole.makespan, got.makespan)
+        np.testing.assert_array_equal(whole.n_faults, got.n_faults)
+    frac = Strategy("Frac", strat.T_R, q=0.5, mode="exact")
+    f1 = simulate_batch_jax(WORK, PLAT, frac, spec, chunk=None)
+    f2 = simulate_batch_jax(WORK, PLAT, frac, spec, chunk=2)
+    np.testing.assert_array_equal(f1.makespan, f2.makespan)
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_device_gen_device_count_invariance(devices):
+    """Device-generated streams are sharding-invariant: per-lane results
+    identical for any device count (the CI multi-device job forces 8
+    host devices so both counts run)."""
+    if devices > _n_devices():
+        pytest.skip(f"needs {devices} devices, have {_n_devices()}")
+    strat = S.instant(PLAT, PREDW)
+    spec = _spec_for(strat, PREDW, E.exponential(), n=13, seed=29)
+    ref = simulate_batch_jax(WORK, PLAT, strat, spec, devices=1)
+    got = simulate_batch_jax(WORK, PLAT, strat, spec, devices=devices)
+    np.testing.assert_array_equal(got.makespan, ref.makespan)
+    np.testing.assert_array_equal(got.n_faults, ref.n_faults)
+    np.testing.assert_array_equal(got.n_proactive_ckpts, ref.n_proactive_ckpts)
+
+
+def test_device_gen_pallas_and_jnp_agree():
+    """The fused sampling hot step (Pallas, interpret on CPU) and the
+    pure-jnp fallback share one body: identical results."""
+    strat = S.withckpt(PLAT, PREDW)
+    spec = _spec_for(strat, PREDW, E.weibull(0.7), n=4, seed=11)
+    a = simulate_batch_jax(WORK, PLAT, strat, spec, use_pallas=True)
+    b = simulate_batch_jax(WORK, PLAT, strat, spec, use_pallas=False)
+    np.testing.assert_array_equal(a.makespan, b.makespan)
+    np.testing.assert_array_equal(a.n_regular_ckpts, b.n_regular_ckpts)
+
+
+def test_device_gen_trust_filter():
+    """mode='none' / q=0 hide every prediction (identical to a Young
+    baseline on the same fault stream); fractional q lands between."""
+    spec = _spec_for(S.instant(PLAT, PREDW), PREDW, E.exponential(), n=6,
+                     seed=21)
+    t_r = S.young(PLAT).T_R
+    none = simulate_batch_jax(
+        WORK, PLAT, Strategy("Y", t_r, q=0.0, mode="none"), spec
+    )
+    distrust = simulate_batch_jax(
+        WORK, PLAT, Strategy("D", t_r, q=0.0, mode="exact"), spec
+    )
+    np.testing.assert_array_equal(none.makespan, distrust.makespan)
+    trust = simulate_batch_jax(
+        WORK, PLAT, Strategy("T", t_r, q=1.0, mode="exact"), spec
+    )
+    assert not np.array_equal(none.makespan, trust.makespan)
+
+
+def test_device_gen_take_pairing():
+    """Lanes sharing a stream id face identical traces (paired design),
+    and take() reorders results consistently."""
+    strat = S.exact_prediction(PLAT, PRED)
+    spec = _spec_for(strat, PRED, E.exponential(), n=4, seed=8)
+    paired = spec.take([2, 2, 0, 1])
+    res = simulate_batch_jax(WORK, PLAT, strat, paired)
+    base = simulate_batch_jax(WORK, PLAT, strat, spec)
+    assert res.makespan[0] == res.makespan[1] == base.makespan[2]
+    assert res.makespan[2] == base.makespan[0]
+
+
+# ---------------------------------------------------------------------- #
+# device-RNG statistical fidelity (fixed keys: fully deterministic)
+# ---------------------------------------------------------------------- #
+def _cdf(dist, mean, x):
+    if dist.kind == "exponential":
+        return 1.0 - np.exp(-x / mean)
+    if dist.kind == "weibull":
+        scale = mean / math.gamma(1.0 + 1.0 / dist.param)
+        return 1.0 - np.exp(-((x / scale) ** dist.param))
+    if dist.kind == "lognormal":
+        mu = math.log(mean) - dist.param**2 / 2.0
+        z = (np.log(x) - mu) / (dist.param * math.sqrt(2.0))
+        return 0.5 * (1.0 + np.vectorize(math.erf)(z))
+    if dist.kind == "uniform":
+        return np.clip(x / (2.0 * mean), 0.0, 1.0)
+    raise ValueError(dist.kind)
+
+
+@pytest.mark.parametrize(
+    "dist",
+    [E.exponential(), E.weibull(0.7), E.lognormal(1.0), E.uniform()],
+    ids=["exp", "weibull0.7", "lognormal", "uniform"],
+)
+def test_device_gen_rng_ks_interarrival(dist):
+    """KS test: inter-arrival samples drawn through the device sampling
+    path match the host Distribution's law (alpha = 0.01; deterministic
+    via fixed keys)."""
+    from repro.core.jax_sim import device_interarrival_samples
+
+    n, mean = 4000, 6.0e4
+    g = device_interarrival_samples(dist, mean, n, seed=123, stream=5)
+    assert g.shape == (n,) and (g > 0).all()
+    # mean sanity (lognormal sigma=1 has heavy tails: generous bound)
+    assert abs(g.mean() / mean - 1.0) < 0.15
+    xs = np.sort(g)
+    ecdf = np.arange(1, n + 1) / n
+    cdf = _cdf(dist, mean, xs)
+    d = np.abs(ecdf - cdf).max()
+    assert d < 1.63 / math.sqrt(n), f"KS D={d:.4f} for {dist.name}"
+
+
+def test_device_gen_recall_precision_accounting():
+    """Empirical recall/precision of the generated streams match the
+    configured (r, p) within CI, and the materialized accounting is
+    exact (every prediction is a TP with a matching fault or an FP)."""
+    spec = E.make_trace_spec(
+        8, horizon=3e7, mtbf=6e4, recall=0.7, precision=0.4, window=300.0,
+        seed=31,
+    )
+    traces = spec.materialize()
+    tp = fp = fn = 0
+    for i in range(spec.n_lanes):
+        tr = traces.lane(i)
+        tp += tr.n_true_positive
+        fp += tr.n_false_positive
+        fn += tr.n_false_negative
+        for p in tr.predictions:
+            if p.fault_time is not None:
+                assert p.t0 <= p.fault_time <= p.t0 + p.window + 1e-9
+    assert abs(tp / (tp + fn) - 0.7) < 0.03
+    assert abs(tp / (tp + fp) - 0.4) < 0.03
+
+
+def test_device_gen_simulate_many_and_run_grid():
+    """trace_mode='device' plumbing: simulate_many and run_grid accept
+    it for every batched engine; the jax (device sampling) and batch
+    (host replay of the same streams) paths agree statistically; the
+    legacy engine and superposed traces are rejected."""
+    from repro.experiments import ExperimentCell, GridSpec, run_grid
+
+    strat = S.exact_prediction(PLAT, PRED)
+    rj = S.simulate_many(
+        WORK, PLAT, strat, PRED, n_runs=4, seed=3, engine="jax",
+        trace_mode="device",
+    )
+    rb = S.simulate_many(
+        WORK, PLAT, strat, PRED, n_runs=4, seed=3, engine="batch",
+        trace_mode="device",
+    )
+    for j, b in zip(rj, rb):
+        assert j.makespan == pytest.approx(b.makespan, abs=1e-6)
+        assert j.n_faults == b.n_faults
+
+    cells = [
+        ExperimentCell(
+            label=f"m{k}", work=6 * 86400.0, platform=PLAT,
+            predictor=PREDW, strategy=s,
+        )
+        for k, s in enumerate([S.young(PLAT), S.instant(PLAT, PREDW)])
+    ]
+    grid = GridSpec(tuple(cells), n_runs=6, seed=5)
+    sj = run_grid(grid, engine="jax", trace_mode="device")
+    sb = run_grid(grid, engine="batch", trace_mode="device")
+    for cj, cb in zip(sj.cells, sb.cells):
+        assert abs(cj.mean_waste - cb.mean_waste) < 1e-3, cj.cell.label
+
+    with pytest.raises(ValueError, match="trace_mode"):
+        run_grid(grid, engine="legacy", trace_mode="device")
+    with pytest.raises(ValueError, match="trace_mode"):
+        S.simulate_many(WORK, PLAT, strat, PRED, n_runs=2,
+                        trace_mode="nope")
+    with pytest.raises(ValueError, match="superposed|n_components"):
+        S.simulate_many(WORK, PLAT, strat, PRED, n_runs=2,
+                        trace_mode="device", n_components=16)
+    with pytest.raises(ValueError, match="kind"):
+        E.make_trace_spec(
+            2, horizon=1e6, mtbf=6e4, recall=0.5, precision=0.5,
+            fault_dist=E.Distribution("custom", lambda r, m, n: r.exponential(m, n)),
+        )
+
+
+def test_device_gen_migration_cancel_slots_dense():
+    """Adversarial migration density (M comparable to the fault gaps,
+    recall ~1): several migration episodes can pend cancellations
+    simultaneously; the 3-slot counter-indexed cancel tracking must
+    still bit-match the NumPy engine's per-fault mask at window=0."""
+    plat = Platform(mu=100 * MN, C=2 * MN, D=0.5 * MN, R=2 * MN, M=30 * MN)
+    work = 4 * 86400.0
+    strat = S.migration(plat, PredictorModel(0.95, 0.9))
+    for seed in (0, 2, 7, 13):  # seeds that diverged with one slot
+        spec = E.make_trace_spec(
+            16, horizon=12 * work, mtbf=plat.mu, recall=0.95,
+            precision=0.9, window=0.0, seed=seed,
+        )
+        bn = simulate_batch(work, plat, strat, spec.materialize())
+        bj = simulate_batch_jax(work, plat, strat, spec)
+        np.testing.assert_allclose(
+            bj.makespan, bn.makespan, rtol=1e-12, atol=1e-6,
+            err_msg=f"seed {seed}",
+        )
+        np.testing.assert_array_equal(bj.n_faults, bn.n_faults)
+        np.testing.assert_array_equal(bj.n_migrations, bn.n_migrations)
+
+
+def test_device_gen_empty_spec():
+    """A 0-lane TraceSpec round-trips through every engine entry."""
+    spec = E.make_trace_spec(
+        0, horizon=1e6, mtbf=6e4, recall=0.5, precision=0.5
+    )
+    assert spec.materialize().n_lanes == 0
+    strat = S.young(PLAT)
+    assert simulate_batch(WORK, [], [], spec).n_lanes == 0
+    assert simulate_batch_jax(WORK, [], [], spec).n_lanes == 0
