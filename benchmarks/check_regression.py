@@ -8,8 +8,9 @@ Figures 4-7 cells: analytic waste vs simulated waste) and ``jax_engine``
   from the committed baseline (the sweep is seeded, so a drift means the
   engine's semantics changed) or leaves the analytic-model envelope, or
   the jax-vs-numpy engine disagreement exceeds float-rounding level; or
-* the *performance* signal regresses: an engine's lanes/sec falls more
-  than ``--perf-tol`` (default 30%) below the committed
+* the *performance* signal regresses: an engine's lanes/sec — or the
+  fused paper-grid sweep's cells/sec (``fused_cells_per_s``) — falls
+  more than ``--perf-tol`` (default 30%) below the committed
   ``BENCH_*.json`` baseline.
 
 Fresh records are written to ``--out-dir`` so the CI workflow can upload
@@ -91,11 +92,25 @@ def compare(
                 f"{d['max_abs_waste_diff']:.2e} > {agree_tol:.0e}"
             )
 
-        # performance: lanes/sec within perf_tol of the baseline (the
-        # jax_dev floor gates the device-generation trace mode)
+        # correctness: fused and per-cell sweep dispatch consume the
+        # same counter streams, so their per-cell results are exact
+        if (
+            "fused_vs_percell_max_diff" in d
+            and d["fused_vs_percell_max_diff"] > agree_tol
+        ):
+            failures.append(
+                f"{rec['name']}: fused-vs-percell waste diff "
+                f"{d['fused_vs_percell_max_diff']:.2e} > {agree_tol:.0e}"
+            )
+
+        # performance: lanes/sec (and the fused sweep's cells/sec)
+        # within perf_tol of the baseline (the jax_dev floor gates the
+        # device-generation trace mode, fused_cells_per_s the fused
+        # experiment dispatch)
         if perf_tol:
             for key in (
-                "jax_lanes_per_s", "numpy_lanes_per_s", "jax_dev_lanes_per_s"
+                "jax_lanes_per_s", "numpy_lanes_per_s",
+                "jax_dev_lanes_per_s", "fused_cells_per_s",
             ):
                 if key in d and key in bd and bd[key] > 0:
                     floor = (1.0 - perf_tol) * bd[key]

@@ -1,6 +1,7 @@
 """Lanes-throughput curve: JAX device engine vs the NumPy batch engine,
-the host-vs-device *trace-mode* comparison, and the multi-device scaling
-curve of the sharded dispatch.
+the host-vs-device *trace-mode* comparison, the multi-device scaling
+curve of the sharded dispatch, and the fused-vs-per-cell paper-grid
+sweep comparison.
 
 One representative paper cell (Instant strategy, exponential faults,
 accurate predictor) swept over lane counts; both engines consume the same
@@ -23,6 +24,18 @@ engine on 1/2/4/8 devices at a >= 10k lane count.  It runs in a child
 process with ``--xla_force_host_platform_device_count=8`` so the parent
 benchmark process keeps its real device topology; on actual accelerator
 fleets pass ``--devices`` to use the local devices directly.
+
+``jax_engine/fused_grid_cells{n}`` is the experiment-sweep acceptance
+record: the paper grid (``repro.experiments.paper_grid``, every platform
+size x both predictors x all six strategies, device trace mode) run as
+one fused cell-multiplexed dispatch (``run_grid(dispatch="fused")`` —
+per-cell parameter tables broadcast on device by the lane -> cell index,
+one compiled executable for the whole exponential family) vs one engine
+call per cell (``dispatch="percell"``) at equal lanes per cell.  The
+record carries ``speedup_fused_vs_percell`` (acceptance: >= 3x),
+``fused_cells_per_s`` (the regression-gate floor), the device-reduced
+``collect="stats"`` timing, and the fused-vs-percell per-cell equality
+check (must be 0.0 — both paths consume identical counter streams).
 
 Acceptance trajectory: jax lanes/s >= numpy lanes/s at 10k lanes on CPU,
 device trace mode >= 2x the host-trace path end-to-end at 40960 lanes,
@@ -63,6 +76,10 @@ DEVICES_LANES = 40960
 
 #: lane count of the trace-mode acceptance comparison
 TRACE_MODE_LANES = 40960
+
+#: lanes per cell of the fused-grid sweep comparison (equal for both
+#: dispatch granularities — the acceptance condition)
+FUSED_GRID_RUNS = 16
 
 
 def _cell():
@@ -173,7 +190,68 @@ def run(quick: bool = True, devices=None) -> None:
                 ),
             },
         )
+    _run_fused_grid(reps=reps)
     _run_devices_curve(reps=reps)
+
+
+def _run_fused_grid(reps: int = 3) -> None:
+    """Time the paper grid end-to-end: fused cell-multiplexed dispatch
+    (lanes + device-reduced stats collection) vs per-cell dispatch."""
+    from repro.experiments import GridSpec, paper_grid_cells, run_grid
+
+    cells = paper_grid_cells("bench")
+    grid = GridSpec(tuple(cells), n_runs=FUSED_GRID_RUNS, seed=3)
+    n_cells = len(cells)
+
+    # warm the fused executable at the *full* cell-table shape (the
+    # table length is a static of the compiled program) and the percell
+    # executables on a 4-cell subgrid that covers both the plain and the
+    # migration-specialized variants — per-cell chunk shapes are
+    # cell-count independent, so the subgrid warms them all
+    sweep_f = run_grid(grid, engine="jax", trace_mode="device")
+    sub = GridSpec(tuple(cells[:4]), n_runs=FUSED_GRID_RUNS, seed=3)
+    assert any(c.strategy.mode == "migration" for c in sub.cells)
+    run_grid(sub, engine="jax", trace_mode="device", dispatch="percell")
+
+    fused_s = stats_s = percell_s = float("inf")
+    fused_split = {}
+    for _ in range(reps):
+        t = _timed(lambda: run_grid(grid, engine="jax", trace_mode="device"))
+        if t < fused_s:
+            fused_s, fused_split = t, _split()
+        stats_s = min(stats_s, _timed(lambda: run_grid(
+            grid, engine="jax", trace_mode="device", collect="stats"
+        )))
+    for _ in range(max(1, reps - 1)):  # the slow leg: fewer reps
+        t0 = time.monotonic()
+        sweep_p = run_grid(
+            grid, engine="jax", trace_mode="device", dispatch="percell"
+        )
+        percell_s = min(percell_s, time.monotonic() - t0)
+
+    # both dispatches consume identical counter streams: exact equality
+    diff = max(
+        abs(a.mean_waste - b.mean_waste)
+        for a, b in zip(sweep_f.cells, sweep_p.cells)
+    )
+    emit(
+        f"jax_engine/fused_grid_cells{n_cells}",
+        fused_s * 1e6 / n_cells,
+        {
+            "n_cells": n_cells,
+            "lanes_per_cell": FUSED_GRID_RUNS,
+            "n_lanes": grid.n_lanes,
+            "fused_s": round(fused_s, 3),
+            "fused_stats_s": round(stats_s, 3),
+            "percell_s": round(percell_s, 3),
+            "speedup_fused_vs_percell": round(percell_s / fused_s, 2),
+            "speedup_stats_vs_percell": round(percell_s / stats_s, 2),
+            "fused_cells_per_s": round(n_cells / fused_s, 1),
+            "fused_lanes_per_s": round(grid.n_lanes / fused_s, 1),
+            "fused_vs_percell_max_diff": diff,
+            **fused_split,
+        },
+    )
 
 
 def _run_devices_curve(reps: int = 3) -> None:

@@ -968,29 +968,75 @@ class TraceSpec:
 
     Lanes sharing a ``stream`` id face identical faults and predictions
     (the paired experiment design); ``take``/``tile`` preserve that by
-    carrying the ids."""
+    carrying the ids.
 
-    horizon: np.ndarray  # (L,)
-    mtbf: np.ndarray  # (L,)
-    recall: np.ndarray  # (L,)
-    precision: np.ndarray  # (L,)
-    window: np.ndarray  # (L,)
-    lead: np.ndarray  # (L,)
+    **Cell-indexed layout** (the fused experiment sweep): with
+    ``cell_index`` set, the six parameter arrays hold one row per *cell*
+    (shape ``(n_cells,)``) and ``cell_index[i]`` names lane ``i``'s cell
+    — only ``stream`` (and ``cell_index`` itself) stay per-lane, so a
+    grid of hundreds of cells ships O(cells) parameters + O(lanes) int32
+    to the device instead of O(lanes) float64 per parameter.  Lane
+    semantics are *identical* to :meth:`expand`'s per-lane view; host
+    consumers go through ``expand()``, the device engine gathers rows by
+    ``cell_index`` on device."""
+
+    horizon: np.ndarray  # (L,) — or (n_cells,) when cell-indexed
+    mtbf: np.ndarray  # (L,) | (n_cells,)
+    recall: np.ndarray  # (L,) | (n_cells,)
+    precision: np.ndarray  # (L,) | (n_cells,)
+    window: np.ndarray  # (L,) | (n_cells,)
+    lead: np.ndarray  # (L,) | (n_cells,)
     fault_dist: Distribution
     false_pred_dist: Distribution
     seed: int
     stream: np.ndarray  # (L,) int64 global RNG stream ids
+    cell_index: Optional[np.ndarray] = None  # (L,) int32 lane -> cell row
 
     @property
     def n_lanes(self) -> int:
+        return int(self.stream.shape[0])
+
+    @property
+    def n_cells(self) -> Optional[int]:
+        """Cell-table row count (``None`` for the per-lane layout)."""
+        if self.cell_index is None:
+            return None
         return int(self.horizon.shape[0])
 
     @property
     def fp_mean(self) -> np.ndarray:
+        """False-prediction mean inter-arrival; aligned with the parameter
+        arrays (per-cell in the cell-indexed layout)."""
         return false_prediction_mtbf_batch(self.mtbf, self.recall, self.precision)
+
+    def expand(self) -> "TraceSpec":
+        """Per-lane view of a cell-indexed spec (identity otherwise):
+        parameter rows gathered by ``cell_index``, same streams — the
+        reference layout every host consumer sees."""
+        if self.cell_index is None:
+            return self
+        ci = self.cell_index
+        return TraceSpec(
+            horizon=self.horizon[ci], mtbf=self.mtbf[ci],
+            recall=self.recall[ci], precision=self.precision[ci],
+            window=self.window[ci], lead=self.lead[ci],
+            fault_dist=self.fault_dist, false_pred_dist=self.false_pred_dist,
+            seed=self.seed, stream=self.stream,
+        )
 
     def take(self, rows) -> "TraceSpec":
         rows = np.asarray(rows)
+        if self.cell_index is not None:
+            # lane selection: the cell table is untouched, lanes re-map
+            return TraceSpec(
+                horizon=self.horizon, mtbf=self.mtbf,
+                recall=self.recall, precision=self.precision,
+                window=self.window, lead=self.lead,
+                fault_dist=self.fault_dist,
+                false_pred_dist=self.false_pred_dist,
+                seed=self.seed, stream=self.stream[rows],
+                cell_index=self.cell_index[rows],
+            )
         return TraceSpec(
             horizon=self.horizon[rows], mtbf=self.mtbf[rows],
             recall=self.recall[rows], precision=self.precision[rows],
@@ -1062,6 +1108,8 @@ class TraceSpec:
         engines draw trust from their own RNG, so fractional-``q`` runs
         agree with the device path only in distribution.  ``q`` in
         {0, 1} — every paper strategy — is filter-exact."""
+        if self.cell_index is not None:
+            return self.expand().materialize(max_events=max_events)
         L = self.n_lanes
         fault_times, valid, n_faults = self._grow_stream(
             STREAM_FAULT_GAP, self.mtbf, max_events
@@ -1130,6 +1178,7 @@ def make_trace_spec(
     false_pred_dist: Distribution | None = None,
     seed: int = 0,
     stream=None,
+    cell_index=None,
 ) -> TraceSpec:
     """Counter-RNG counterpart of :func:`make_event_traces_batch`: same
     broadcastable per-lane parameters, but returns the O(lanes)
@@ -1139,7 +1188,12 @@ def make_trace_spec(
     ``arange(n_traces)``); pass disjoint ranges to make several specs
     independent under one seed, or repeated ids to pair lanes on
     identical traces.  Superposed component traces (``n_components``) are
-    host-generation only."""
+    host-generation only.
+
+    ``cell_index`` switches to the cell-indexed layout: the trace
+    parameters then describe *cells* (broadcast to the cell-table length
+    ``max(cell_index) + 1``) and ``n_traces`` lanes are mapped onto them
+    by ``cell_index[i]`` — see :class:`TraceSpec`."""
     L = int(n_traces)
     fault_dist = fault_dist or exponential()
     false_pred_dist = false_pred_dist or fault_dist
@@ -1151,15 +1205,26 @@ def make_trace_spec(
         stream = np.asarray(stream, dtype=np.int64)
         if stream.shape != (L,):
             raise ValueError(f"stream must have shape ({L},), got {stream.shape}")
+    n_par = L
+    if cell_index is not None:
+        cell_index = np.asarray(cell_index, dtype=np.int32)
+        if cell_index.shape != (L,):
+            raise ValueError(
+                f"cell_index must have shape ({L},), got {cell_index.shape}"
+            )
+        if L and cell_index.min() < 0:
+            raise ValueError("cell_index entries must be >= 0")
+        n_par = int(cell_index.max()) + 1 if L else 0
     return TraceSpec(
-        horizon=_bc(horizon, L),
-        mtbf=_bc(mtbf, L),
-        recall=_bc(recall, L),
-        precision=_bc(precision, L),
-        window=_bc(window, L),
-        lead=_bc(lead, L),
+        horizon=_bc(horizon, n_par),
+        mtbf=_bc(mtbf, n_par),
+        recall=_bc(recall, n_par),
+        precision=_bc(precision, n_par),
+        window=_bc(window, n_par),
+        lead=_bc(lead, n_par),
         fault_dist=fault_dist,
         false_pred_dist=false_pred_dist,
         seed=int(seed),
         stream=stream,
+        cell_index=cell_index,
     )

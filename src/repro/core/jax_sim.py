@@ -127,6 +127,7 @@ from __future__ import annotations
 import contextlib
 import os
 import warnings
+from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Sequence, Union
 
@@ -141,6 +142,7 @@ from .waste import Platform
 
 __all__ = [
     "simulate_batch_jax",
+    "CellSums",
     "device_interarrival_samples",
     "enable_compilation_cache",
     "LAST_TIMINGS",
@@ -180,17 +182,24 @@ _DEFAULT_CHUNK_DEV = 16384
 
 
 def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
-             has_migration, gen=None):
+             has_migration, gen=None, gathered=(), n_seg=0):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
     from ..kernels.sim_step import (
         FLAG_CKPT_OK, FLAG_FAULTED, FLAG_FIN, FLAG_OK, FLAG_REG,
-        PRIM_WORK_NC, counter_uniform, counter_uniform2,
-        masked_primitive_update, primitive_update, stream_advance,
-        stream_key, threefry2x32,
+        PRIM_WORK_NC, cell_gather, counter_uniform, counter_uniform2,
+        masked_primitive_update, primitive_update, segment_cell_sums,
+        stream_advance, stream_key, threefry2x32,
     )
+
+    # cell multiplexing (fused sweeps): per-cell parameter tables are
+    # broadcast to per-lane arrays by the lane -> cell index once per
+    # chunk; everything downstream runs the ordinary per-lane program
+    cidx = consts.get("cidx")
+    if gathered:
+        consts = cell_gather(consts, cidx, gathered)
 
     CONT2PH = jnp.asarray(B._CONT2PH, jnp.int32)
     MODE2PH = jnp.asarray(B._MODE2PH, jnp.int32)
@@ -808,6 +817,28 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
 
     n_it, final = lax.while_loop(cond, step, (jnp.int32(0), state))
     final = dict(final); final["_iters"] = n_it
+    if n_seg:
+        # per-cell segment reduction on device: one (n_seg, 11) matrix of
+        # Monte-Carlo sums per chunk instead of O(lanes) result fetches.
+        # Padding lanes carry the sacrificial pad-row index, so their
+        # degenerate waste (t = 0) lands in rows the host drops.
+        ft = final["t"]
+        fdt2 = ft.dtype
+        waste = 1.0 - W / ft
+        final["cell_sums"] = segment_cell_sums(
+            [
+                jnp.ones_like(ft),  # lane count
+                ft, ft * ft,  # makespan moments
+                waste, waste * waste,  # waste moments
+                final["n_faults"].astype(fdt2),
+                final["n_pro"].astype(fdt2),
+                final["n_reg"].astype(fdt2),
+                final["n_mig"].astype(fdt2),
+                final["exhausted"].astype(fdt2),
+                (final["phase"] != B._PH_DONE).astype(fdt2),  # convergence
+            ],
+            cidx, n_seg,
+        )
     return final
 
 
@@ -893,19 +924,19 @@ def _resolve_devices(devices, mesh) -> list:
 
 def _get_runner(
     use_pallas: bool, interpret: bool, max_iters: int, eps: float,
-    has_migration: bool, devs, gen=None,
+    has_migration: bool, devs, gen=None, gathered=(), n_seg=0,
 ):
     import jax
 
     key = (
         use_pallas, interpret, max_iters, eps, has_migration,
-        tuple(d.id for d in devs), gen,
+        tuple(d.id for d in devs), gen, gathered, n_seg,
     )
     if key not in _RUN_CACHE:
         step = partial(
             _jit_run, use_pallas=use_pallas, interpret=interpret,
             max_iters=max_iters, eps=eps, has_migration=has_migration,
-            gen=gen,
+            gen=gen, gathered=gathered, n_seg=n_seg,
         )
         if len(devs) == 1:
             _RUN_CACHE[key] = jax.jit(step, donate_argnums=(1,))
@@ -925,18 +956,46 @@ def _get_runner(
 _OUT_KEYS = ("t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase")
 
 
-def _pack_scalar_chunk(
-    sl: slice, n_dev: int, n_pad: int, fdt, idt,
-    W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
-):
-    """Shared scalar packing of one lane chunk (pure NumPy): the
-    per-lane engine constants and zeroed lane state common to both trace
-    modes.  Returns ``(lanes, fvec, consts, state)`` — the layout
-    helpers so callers can append their mode-specific arrays."""
+def _chunk_state(sl: slice, n_dev: int, n_pad: int, fdt, idt):
+    """Zeroed per-lane engine state of one chunk (padding lanes inert).
+
+    Returns ``(lanes, state)`` where ``lanes`` reshapes a packed
+    ``(n_pad,)`` array into the dispatch layout (a leading device axis
+    when sharded)."""
     shard = n_pad // n_dev
 
     def lanes(a):  # (n_pad,) -> (n_pad,) | (n_dev, shard)
         return a if n_dev == 1 else a.reshape(n_dev, shard)
+
+    n_real = sl.stop - sl.start
+    phase = np.full(n_pad, B._PH_MAIN, np.int32)
+    phase[n_real:] = B._PH_DONE  # padding lanes start inert
+    zf = lanes(np.zeros(n_pad, fdt))
+    zi = lanes(np.zeros(n_pad, idt))
+    state = {
+        "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
+        "na_saved": zf, "ep_t0": zf, "ep_end": zf,
+        "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
+        "phase": lanes(phase),
+        "exhausted": lanes(np.zeros(n_pad, bool)),
+    }
+    return lanes, state
+
+
+def _pack_scalar_chunk(
+    sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
+    cidx=None, pad_cell=0,
+):
+    """Shared scalar packing of one lane chunk (pure NumPy): the
+    per-lane engine constants and zeroed lane state common to both trace
+    modes.  Returns ``(lanes, fvec, consts, state)`` — the layout
+    helpers so callers can append their mode-specific arrays.
+
+    ``cidx`` (fused sweeps, per-lane trace layouts) appends the lane ->
+    cell index used by the device-side per-cell segment reduction;
+    padding lanes map to the sacrificial ``pad_cell`` row."""
+    lanes, state = _chunk_state(sl, n_dev, n_pad, fdt, idt)
 
     def fvec(x, fill=0.0):
         return lanes(pad_lane_axis(x[sl], n_pad, fill).astype(fdt))
@@ -959,24 +1018,118 @@ def _pack_scalar_chunk(
         "lead_act": np.where(modeh == B._M_MIGRATION, Mh, Ch),
         "tp_eff_default": np.maximum(Ch, windowh),
     }
-    n_real = sl.stop - sl.start
-    phase = np.full(n_pad, B._PH_MAIN, np.int32)
-    phase[n_real:] = B._PH_DONE  # padding lanes start inert
-    zf = lanes(np.zeros(n_pad, fdt))
-    zi = lanes(np.zeros(n_pad, idt))
-    state = {
-        "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
-        "na_saved": zf, "ep_t0": zf, "ep_end": zf,
-        "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
-        "phase": lanes(phase),
-        "exhausted": lanes(np.zeros(n_pad, bool)),
-    }
+    if cidx is not None:
+        consts["cidx"] = lanes(
+            pad_lane_axis(cidx[sl].astype(np.int32), n_pad, pad_cell)
+        )
     return lanes, fvec, consts, state
+
+
+def _rep(a: np.ndarray, n_dev: int) -> np.ndarray:
+    """Replicate a cell table across the device axis of a sharded
+    dispatch (every device reads the full table)."""
+    return a if n_dev == 1 else np.broadcast_to(a, (n_dev,) + a.shape)
+
+
+def _stream_consts(spec: TraceSpec, sl: slice, lanes, n_pad: int) -> dict:
+    """Per-lane RNG stream identity of one chunk: the two seed words and
+    the two halves of the 64-bit stream id.  This layout is *the*
+    invariant that makes device-generated results chunk-, device-count-
+    and dispatch-invariant, so both spec packers share this one
+    implementation."""
+
+    def uvec(x):
+        return lanes(pad_lane_axis(x, n_pad, 0).astype(np.uint32))
+
+    stream = spec.stream[sl]
+    return dict(
+        s0=uvec(np.full(stream.shape, spec.seed & 0xFFFFFFFF, np.int64)),
+        s1=uvec(
+            np.full(stream.shape, (spec.seed >> 32) & 0xFFFFFFFF, np.int64)
+        ),
+        sid_lo=uvec(stream & 0xFFFFFFFF),
+        sid_hi=uvec((stream >> 32) & 0xFFFFFFFF),
+    )
+
+
+#: consts keys shipped as per-cell tables (and device-gathered by the
+#: lane -> cell index) in the fused TraceSpec dispatch
+_CELL_TABLE_KEYS = (
+    "W", "C", "DR", "T_R", "T_P", "mode", "horizon", "window",
+    "wpp", "lead_act", "tp_eff_default", "mtbf", "fp_mean", "recall", "q_eff",
+)
+
+
+def _cell_tables(
+    n_cells: int, n_tab: int, fdt,
+    W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
+    mtbf=None, fp_mean=None, recall=None, q_eff=None,
+) -> dict:
+    """Per-cell engine-parameter tables of a fused sweep (pure NumPy).
+
+    One row per experiment cell plus ``n_tab - n_cells`` benign padding
+    rows carrying exactly the per-lane packing fills (row ``n_cells`` is
+    the sacrificial row padding lanes index), so the device-side gather
+    reproduces the unfused per-lane packing bit for bit.  ``n_tab`` is
+    rounded up by the caller so grids of similar size share compiled
+    executables."""
+
+    def tab(x, fill=0.0, dt=None):
+        a = np.full(n_tab, fill, dt or fdt)
+        a[:n_cells] = np.asarray(x)
+        return a
+
+    Ch = tab(C, 1.0)
+    Mh = tab(M, 1.0)
+    modeh = tab(mode, 0, np.int32)
+    T_Rh = tab(T_R, 2.0)
+    windowh = tab(window)
+    tables = {
+        "W": tab(W, 1.0),
+        "C": Ch,
+        "DR": tab(np.asarray(D) + np.asarray(R)),
+        "T_R": T_Rh,
+        "T_P": tab(T_P, np.nan),
+        "mode": modeh,
+        "horizon": tab(horizon, horizon_fill),
+        "window": windowh,
+        "wpp": np.maximum(T_Rh - Ch, 1e-9).astype(fdt),
+        "lead_act": np.where(modeh == B._M_MIGRATION, Mh, Ch).astype(fdt),
+        "tp_eff_default": np.maximum(Ch, windowh).astype(fdt),
+    }
+    if mtbf is not None:
+        tables.update(
+            mtbf=tab(mtbf, 1.0),
+            fp_mean=tab(fp_mean, np.inf),
+            recall=tab(recall),
+            q_eff=tab(q_eff),
+        )
+    return tables
+
+
+def _pack_chunk_spec_cells(
+    tables: dict, spec: TraceSpec, cidx, pad_cell: int,
+    sl: slice, n_dev: int, n_pad: int, fdt, idt,
+):
+    """Chunk packing of the fused (cell-indexed) TraceSpec dispatch.
+
+    The engine parameters travel as O(cells) tables (replicated per
+    device); the only per-lane payload is the int32 cell index plus the
+    RNG stream identity — the leanest possible packing, which is what
+    lets one dispatch carry an entire paper grid."""
+    lanes, state = _chunk_state(sl, n_dev, n_pad, fdt, idt)
+    consts = {k: _rep(v, n_dev) for k, v in tables.items()}
+    consts["cidx"] = lanes(
+        pad_lane_axis(cidx[sl].astype(np.int32), n_pad, pad_cell)
+    )
+    consts.update(_stream_consts(spec, sl, lanes, n_pad))
+    return consts, state
 
 
 def _pack_chunk(
     has_migration: bool, sl: slice, n_dev: int, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
+    cidx=None, pad_cell=0,
 ):
     """Host-side packing of one lane chunk into engine pytrees.
 
@@ -988,6 +1141,7 @@ def _pack_chunk(
     lanes, fvec, consts, state = _pack_scalar_chunk(
         sl, n_dev, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, horizon, window, np.inf,
+        cidx=cidx, pad_cell=pad_cell,
     )
 
     def events(a):  # (n_pad, E) -> (E, n_pad) | (n_dev, E, shard)
@@ -1013,9 +1167,9 @@ def _pack_chunk(
 
 def _pack_chunk_spec(
     spec: TraceSpec, fp_mean, q_eff, sl: slice, n_dev: int, n_pad: int,
-    fdt, idt, W, C, D, R, M, T_R, T_P, mode,
+    fdt, idt, W, C, D, R, M, T_R, T_P, mode, cidx=None, pad_cell=0,
 ):
-    """Host-side packing of one lane chunk of a :class:`TraceSpec`.
+    """Host-side packing of one lane chunk of a per-lane :class:`TraceSpec`.
 
     O(lanes) scalars only — no event arrays, no transpose, no
     O(events x lanes) host->device copy; the cursors are primed inside
@@ -1026,24 +1180,16 @@ def _pack_chunk_spec(
     lanes, fvec, consts, state = _pack_scalar_chunk(
         sl, n_dev, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, spec.horizon, spec.window, -1.0,
+        cidx=cidx, pad_cell=pad_cell,
     )
 
-    def uvec(x, fill=0):  # operates on already-sliced (chunk-local) arrays
-        return lanes(pad_lane_axis(x, n_pad, fill).astype(np.uint32))
-
-    stream = spec.stream[sl]
     consts.update(
         mtbf=fvec(spec.mtbf, 1.0),
         fp_mean=fvec(fp_mean, np.inf),
         recall=fvec(spec.recall),
         q_eff=fvec(q_eff),
-        s0=uvec(np.full(stream.shape, spec.seed & 0xFFFFFFFF, np.int64)),
-        s1=uvec(
-            np.full(stream.shape, (spec.seed >> 32) & 0xFFFFFFFF, np.int64)
-        ),
-        sid_lo=uvec(stream & 0xFFFFFFFF),
-        sid_hi=uvec((stream >> 32) & 0xFFFFFFFF),
     )
+    consts.update(_stream_consts(spec, sl, lanes, n_pad))
     return consts, state
 
 
@@ -1076,14 +1222,98 @@ def _dispatch(runner, devs, consts, state):
         return runner(consts, state)
 
 
-def _fetch(final, n_real: int):
-    """Pull one dispatched chunk's per-lane results back to the host."""
-    for k in _OUT_KEYS:  # overlap the D2H copies across arrays
+def _fetch(final, n_real: int, want_lanes: bool = True):
+    """Pull one dispatched chunk's results back to the host.
+
+    ``want_lanes=False`` (the ``collect="stats"`` path) fetches only the
+    per-cell segment sums — O(cells) D2H traffic per chunk instead of
+    O(lanes); convergence is then checked from the reduced
+    phase-not-done column."""
+    keys = _OUT_KEYS if want_lanes else ()
+    for k in keys:  # overlap the D2H copies across arrays
         final[k].copy_to_host_async()
-    out = {k: np.asarray(final[k]).reshape(-1)[:n_real] for k in _OUT_KEYS}
-    if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
+    if not want_lanes:
+        final["cell_sums"].copy_to_host_async()
+    out = {k: np.asarray(final[k]).reshape(-1)[:n_real] for k in keys}
+    if want_lanes:
+        if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
+            raise RuntimeError("jax batch simulator did not converge")
+        return out
+    cs = np.asarray(final["cell_sums"], np.float64)
+    if cs.ndim == 3:  # sharded dispatch: per-device partial sums
+        cs = cs.sum(axis=0)
+    if cs[:, _CS_NOTDONE].sum() != 0.0:  # pragma: no cover
         raise RuntimeError("jax batch simulator did not converge")
-    return out
+    return {"cell_sums": cs}
+
+
+#: column order of the device-side per-cell segment reduction
+(
+    _CS_N, _CS_T, _CS_T2, _CS_WASTE, _CS_WASTE2, _CS_NF, _CS_NPRO,
+    _CS_NREG, _CS_NMIG, _CS_EXH, _CS_NOTDONE,
+) = range(11)
+
+
+@dataclass
+class CellSums:
+    """Device-reduced per-cell Monte-Carlo sums of a fused sweep
+    (``collect="stats"``): every field is an ``(n_cells,)`` array of
+    sums over the cell's lanes, reduced on device and fetched as
+    O(cells) scalars.  ``mean_*``/``ci95_*`` derive the usual summary
+    statistics (CI via the ddof=1 sample variance)."""
+
+    n: np.ndarray
+    makespan_sum: np.ndarray
+    makespan_sumsq: np.ndarray
+    waste_sum: np.ndarray
+    waste_sumsq: np.ndarray
+    n_faults: np.ndarray
+    n_proactive_ckpts: np.ndarray
+    n_regular_ckpts: np.ndarray
+    n_migrations: np.ndarray
+    n_exhausted: np.ndarray
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.n.shape[0])
+
+    @staticmethod
+    def _mean(s, n):
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return s / n
+
+    @staticmethod
+    def _ci95(s, s2, n):
+        with np.errstate(invalid="ignore", divide="ignore"):
+            var = np.maximum(s2 - s * s / n, 0.0) / np.maximum(n - 1.0, 1.0)
+            return np.where(n >= 2, 1.96 * np.sqrt(var / n), np.nan)
+
+    @property
+    def mean_waste(self) -> np.ndarray:
+        return self._mean(self.waste_sum, self.n)
+
+    @property
+    def ci95_waste(self) -> np.ndarray:
+        return self._ci95(self.waste_sum, self.waste_sumsq, self.n)
+
+    @property
+    def mean_makespan(self) -> np.ndarray:
+        return self._mean(self.makespan_sum, self.n)
+
+    @property
+    def ci95_makespan(self) -> np.ndarray:
+        return self._ci95(self.makespan_sum, self.makespan_sumsq, self.n)
+
+    @classmethod
+    def from_matrix(cls, cs: np.ndarray) -> "CellSums":
+        return cls(
+            n=cs[:, _CS_N], makespan_sum=cs[:, _CS_T],
+            makespan_sumsq=cs[:, _CS_T2], waste_sum=cs[:, _CS_WASTE],
+            waste_sumsq=cs[:, _CS_WASTE2], n_faults=cs[:, _CS_NF],
+            n_proactive_ckpts=cs[:, _CS_NPRO],
+            n_regular_ckpts=cs[:, _CS_NREG], n_migrations=cs[:, _CS_NMIG],
+            n_exhausted=cs[:, _CS_EXH],
+        )
 
 
 def simulate_batch_jax(
@@ -1099,7 +1329,9 @@ def simulate_batch_jax(
     interpret: Optional[bool] = None,
     devices=None,
     mesh=None,
-) -> BatchResult:
+    cell_index=None,
+    collect: str = "lanes",
+) -> Union[BatchResult, "CellSums"]:
     """Device-resident :func:`repro.core.batch_sim.simulate_batch`.
 
     ``traces`` is either host-materialized :class:`BatchTraces` (the host
@@ -1108,6 +1340,20 @@ def simulate_batch_jax(
     streams — see the module docstring for the stream layout — and
     ``rng`` is ignored (fractional trust coins come from the lane's own
     trust streams, so results stay chunk- and device-count invariant).
+
+    **Cell multiplexing** (fused experiment sweeps): ``cell_index`` maps
+    every lane to one of ``n_cells`` experiment cells, and ``work`` /
+    ``platform`` / ``strategy`` then describe *cells* (length
+    ``n_cells``) instead of lanes.  With a cell-indexed
+    :class:`TraceSpec` (required in device trace mode; defaulting
+    ``cell_index`` from the spec) the engine parameters ship as O(cells)
+    tables gathered on device, so one dispatch — and one compiled
+    executable per failure-law family — can run an entire paper grid
+    with lanes from many cells interleaved across chunks and shards.
+    Per-lane results are bit-identical to the equivalent per-lane call.
+    ``collect="stats"`` additionally segment-reduces per-cell
+    Monte-Carlo sums on device and returns a :class:`CellSums` (O(cells)
+    fetch) instead of per-lane arrays.
 
     Parameters beyond the NumPy engine's:
 
@@ -1138,6 +1384,13 @@ def simulate_batch_jax(
     mesh        a ``jax.sharding.Mesh``; shorthand for ``devices=`` over
                 its (flattened) device set.  Mutually exclusive with
                 ``devices=``.
+    cell_index  (L,) int lane -> cell map; work/platform/strategy then
+                have one entry per cell.  Defaults to the spec's own
+                ``cell_index`` for cell-indexed :class:`TraceSpec`
+                traces.
+    collect     "lanes" (default): per-lane :class:`BatchResult`;
+                "stats" (requires ``cell_index``): device-reduced
+                per-cell :class:`CellSums`.
     """
     import time as _time
 
@@ -1145,11 +1398,61 @@ def simulate_batch_jax(
 
     _maybe_enable_cache_from_env()
     is_spec = isinstance(traces, TraceSpec)
+    spec_celled = is_spec and traces.cell_index is not None
     L = traces.n_lanes
+    if collect not in ("lanes", "stats"):
+        raise ValueError(
+            f"unknown collect {collect!r} (expected 'lanes' or 'stats')"
+        )
+    if cell_index is None and spec_celled:
+        cell_index = traces.cell_index
+    celled = cell_index is not None
+    if collect == "stats" and not celled:
+        raise ValueError("collect='stats' requires cell_index")
+    if celled and is_spec and not spec_celled:
+        raise ValueError(
+            "cell_index with a TraceSpec requires the cell-indexed "
+            "layout (TraceSpec.cell_index)"
+        )
+    n_cells = 0
+    if celled:
+        cidx_g = np.asarray(cell_index, np.int32)
+        if cidx_g.shape != (L,):
+            raise ValueError(
+                f"cell_index must have shape ({L},), got {cidx_g.shape}"
+            )
+        if spec_celled:
+            n_cells = traces.n_cells
+            if traces.cell_index is not cell_index and not np.array_equal(
+                traces.cell_index, cidx_g
+            ):
+                raise ValueError(
+                    "cell_index does not match traces.cell_index"
+                )
+        else:
+            for arg in (platform, strategy):
+                if not isinstance(arg, (Platform, Strategy)):
+                    n_cells = len(arg)
+                    break
+            else:
+                n_cells = int(cidx_g.max()) + 1 if L else 0
+        if L and (cidx_g.min() < 0 or cidx_g.max() >= n_cells):
+            raise ValueError(
+                f"cell_index entries must be in [0, {n_cells})"
+            )
     W, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
-        work, platform, strategy, L
+        work, platform, strategy, n_cells if celled else L
     )
+    if celled and not is_spec:
+        # host event arrays are inherently per-lane: broadcast the cell
+        # table host-side (cheap NumPy gathers) and keep only the
+        # lane -> cell index for the device-side per-cell reduction
+        W, C, D, R, M, T_R, T_P, mode, q = (
+            a[cidx_g] for a in (W, C, D, R, M, T_R, T_P, mode, q)
+        )
     if L == 0:
+        if collect == "stats":
+            return CellSums.from_matrix(np.zeros((n_cells, 11)))
         z = np.zeros(0)
         zi = np.zeros(0, np.int64)
         return BatchResult(z, z, zi, zi, zi, zi, np.zeros(0, bool))
@@ -1160,6 +1463,8 @@ def simulate_batch_jax(
             E.require_inverse_cdf(d)
         # engine-side trust: mode "none" / q<=0 sees no predictions,
         # fractional q thins both prediction streams via trust coins
+        # (per-cell arrays in the fused layout — the gathered per-lane
+        # values are identical, so is the compiled program)
         q_eff = np.where(mode == B._M_NONE, 0.0, np.clip(q, 0.0, 1.0))
         frac_q = bool(((q_eff > 0.0) & (q_eff < 1.0)).any())
         gen = (
@@ -1216,9 +1521,30 @@ def simulate_batch_jax(
         ctx = enable_x64()
     else:
         ctx = contextlib.nullcontext()
+    # fused sweeps: pad the cell table with benign rows to a power of two
+    # (row n_cells is the sacrificial row padding lanes point at), so
+    # similarly-sized grids share compiled executables
+    want_lanes = collect != "stats"
+    if celled:
+        n_tab = max(8, 1 << int(n_cells).bit_length())
+        gathered = _CELL_TABLE_KEYS if spec_celled else ()
+        n_seg = n_tab
+    else:
+        n_tab = 0
+        gathered, n_seg = (), 0
+
     with ctx:
         fdt = np.float64 if x64 else np.float32
         idt = np.int64 if x64 else np.int32
+        tables = None
+        if spec_celled:
+            tables = _cell_tables(
+                n_cells, n_tab, fdt,
+                W, C, D, R, M, T_R, T_P, mode,
+                traces.horizon, traces.window, -1.0,
+                mtbf=traces.mtbf, fp_mean=fp_mean,
+                recall=traces.recall, q_eff=q_eff,
+            )
         outs = []
         pend = None  # the chunk in flight: (dispatched pytree, n_real)
         n_chunks = 0
@@ -1227,13 +1553,23 @@ def simulate_batch_jax(
             n_chunks += 1
             # migration-free chunks compile a specialized step with no
             # fault-cancellation state (most sweeps; much less traffic)
-            has_mig = bool((mode[sl] == B._M_MIGRATION).any())
+            if spec_celled:
+                has_mig = bool(
+                    (mode[cidx_g[sl]] == B._M_MIGRATION).any()
+                )
+            else:
+                has_mig = bool((mode[sl] == B._M_MIGRATION).any())
             runner = _get_runner(
                 use_pallas, interpret, max_iters, float(_EPS), has_mig,
-                devs, gen,
+                devs, gen, gathered, n_seg,
             )
             t0 = _time.monotonic()
-            if is_spec:
+            if spec_celled:
+                consts, state = _pack_chunk_spec_cells(
+                    tables, traces, cidx_g, n_cells,
+                    sl, n_dev, n_pad, fdt, idt,
+                )
+            elif is_spec:
                 consts, state = _pack_chunk_spec(
                     traces, fp_mean, q_eff, sl, n_dev, n_pad, fdt, idt,
                     W, C, D, R, M, T_R, T_P, mode,
@@ -1243,6 +1579,7 @@ def simulate_batch_jax(
                     has_mig, sl, n_dev, n_pad, fdt, idt,
                     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
                     traces.horizon, traces.window,
+                    cidx=cidx_g if celled else None, pad_cell=n_cells,
                 )
             t_pack += _time.monotonic() - t0
             t0 = _time.monotonic()
@@ -1250,11 +1587,11 @@ def simulate_batch_jax(
             t_dispatch += _time.monotonic() - t0
             if pend is not None:  # fetch one chunk behind the dispatch
                 t0 = _time.monotonic()
-                outs.append(_fetch(*pend))
+                outs.append(_fetch(*pend, want_lanes=want_lanes))
                 t_fetch += _time.monotonic() - t0
             pend = (disp, sl.stop - sl.start)
         t0 = _time.monotonic()
-        outs.append(_fetch(*pend))
+        outs.append(_fetch(*pend, want_lanes=want_lanes))
         t_fetch += _time.monotonic() - t0
     LAST_TIMINGS.clear()
     LAST_TIMINGS.update(
@@ -1262,10 +1599,17 @@ def simulate_batch_jax(
         pack_s=t_pack, dispatch_s=t_dispatch, fetch_s=t_fetch,
         n_chunks=n_chunks,
     )
+    if not want_lanes:
+        # per-cell sums accumulate across chunks (a cell's lanes may
+        # straddle chunk boundaries); the pad rows are dropped here
+        cs = np.zeros_like(outs[0]["cell_sums"])
+        for o in outs:
+            cs += o["cell_sums"]
+        return CellSums.from_matrix(cs[:n_cells])
     cat = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
     return BatchResult(
         makespan=cat["t"].astype(np.float64),
-        work=W,
+        work=W[cidx_g] if spec_celled else W,
         n_faults=cat["n_faults"].astype(np.int64),
         n_proactive_ckpts=cat["n_pro"].astype(np.int64),
         n_regular_ckpts=cat["n_reg"].astype(np.int64),

@@ -19,7 +19,15 @@ the scalar reference engine for equivalence checks and speedup baselines.
 """
 
 from .grid import CellResult, ExperimentCell, GridSpec, SweepResult
+from .paper_grid import PAPER_PREDICTORS, paper_grid_cells
 from .runner import run_cells, run_grid
+from .validation import (
+    analytic_waste,
+    cell_z_rows,
+    holm_bonferroni,
+    validate_sweep,
+    write_z_table,
+)
 
 __all__ = [
     "CellResult",
@@ -28,4 +36,11 @@ __all__ = [
     "SweepResult",
     "run_cells",
     "run_grid",
+    "PAPER_PREDICTORS",
+    "paper_grid_cells",
+    "analytic_waste",
+    "cell_z_rows",
+    "holm_bonferroni",
+    "validate_sweep",
+    "write_z_table",
 ]

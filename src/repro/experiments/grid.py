@@ -26,7 +26,11 @@ __all__ = ["ExperimentCell", "GridSpec", "CellResult", "SweepResult"]
 
 @dataclass(frozen=True)
 class ExperimentCell:
-    """One grid cell: a (platform, predictor, strategy, failure-law) point."""
+    """One grid cell: a (platform, predictor, strategy, failure-law) point.
+
+    ``n_runs`` overrides the grid-wide Monte-Carlo repetition count for
+    this cell (heterogeneous grids: spend lanes where the variance is);
+    ``None`` inherits :attr:`GridSpec.n_runs`."""
 
     label: str
     work: float
@@ -38,6 +42,7 @@ class ExperimentCell:
     n_components: Optional[int] = None
     stationary: bool = False
     horizon_factor: float = 12.0
+    n_runs: Optional[int] = None
 
     @property
     def dist(self) -> Distribution:
@@ -67,7 +72,8 @@ class ExperimentCell:
 
 @dataclass(frozen=True)
 class GridSpec:
-    """A full sweep: cells x ``n_runs`` Monte-Carlo repetitions."""
+    """A full sweep: cells x ``n_runs`` Monte-Carlo repetitions (cells
+    may override their own run count via :attr:`ExperimentCell.n_runs`)."""
 
     cells: Tuple[ExperimentCell, ...]
     n_runs: int = 100
@@ -78,24 +84,63 @@ class GridSpec:
         if len(set(labels)) != len(labels):
             dupes = sorted({l for l in labels if labels.count(l) > 1})
             raise ValueError(f"duplicate cell labels: {dupes}")
+        if any(r < 1 for r in self.cell_n_runs):
+            raise ValueError("every cell needs n_runs >= 1")
+
+    def cell_runs(self, ci: int) -> int:
+        """Monte-Carlo repetition count of cell ``ci``."""
+        r = self.cells[ci].n_runs
+        return self.n_runs if r is None else int(r)
+
+    @property
+    def cell_n_runs(self) -> Tuple[int, ...]:
+        return tuple(self.cell_runs(ci) for ci in range(len(self.cells)))
 
     @property
     def n_lanes(self) -> int:
-        return len(self.cells) * self.n_runs
+        return sum(self.cell_n_runs)
 
 
 @dataclass
 class CellResult:
-    """Aggregated Monte-Carlo statistics of one cell (mean +- 95% CI)."""
+    """Aggregated Monte-Carlo statistics of one cell (mean +- 95% CI).
+
+    Two backing layouts share one interface:
+
+    * **per-run arrays** (the default ``collect="lanes"`` sweep): every
+      field holds the raw ``(n_runs,)`` samples and the summary
+      properties reduce them on demand;
+    * **device-reduced stats** (``collect="stats"``): the arrays are
+      ``None`` and :attr:`stats` carries the summary moments segment-
+      reduced on the device — O(cells) fetched, no per-run data.
+    """
 
     cell: ExperimentCell
-    waste: np.ndarray  # (n_runs,) per-run empirical waste
-    makespan: np.ndarray  # (n_runs,)
-    n_faults: np.ndarray
-    n_proactive_ckpts: np.ndarray
-    n_regular_ckpts: np.ndarray
-    n_migrations: np.ndarray
-    n_exhausted: int
+    waste: Optional[np.ndarray] = None  # (n_runs,) per-run empirical waste
+    makespan: Optional[np.ndarray] = None  # (n_runs,)
+    n_faults: Optional[np.ndarray] = None
+    n_proactive_ckpts: Optional[np.ndarray] = None
+    n_regular_ckpts: Optional[np.ndarray] = None
+    n_migrations: Optional[np.ndarray] = None
+    n_exhausted: int = 0
+    stats: Optional[Dict[str, float]] = None
+
+    #: stats keys (from_stats argument order)
+    _STAT_KEYS = (
+        "n", "mean_waste", "ci95_waste", "mean_makespan", "ci95_makespan",
+        "mean_faults", "mean_proactive_ckpts", "mean_regular_ckpts",
+        "mean_migrations",
+    )
+
+    @classmethod
+    def from_stats(cls, cell: ExperimentCell, n_exhausted: int, *moments
+                   ) -> "CellResult":
+        """Build a stats-backed result from device-reduced summary
+        moments (``_STAT_KEYS`` order)."""
+        return cls(
+            cell=cell, n_exhausted=int(n_exhausted),
+            stats=dict(zip(cls._STAT_KEYS, (float(m) for m in moments))),
+        )
 
     @staticmethod
     def _ci95(x: np.ndarray) -> float:
@@ -105,20 +150,54 @@ class CellResult:
         return 1.96 * float(x.std(ddof=1)) / math.sqrt(n)
 
     @property
+    def n_runs(self) -> int:
+        if self.waste is None:
+            return int(self.stats["n"])
+        return int(self.waste.shape[0])
+
+    def _stat(self, key: str, arr_name: str, reduce):
+        if self.stats is not None and getattr(self, arr_name) is None:
+            return self.stats[key]
+        return reduce(getattr(self, arr_name))
+
+    @property
     def mean_waste(self) -> float:
-        return float(self.waste.mean())
+        return self._stat("mean_waste", "waste", lambda a: float(a.mean()))
 
     @property
     def ci95_waste(self) -> float:
-        return self._ci95(self.waste)
+        return self._stat("ci95_waste", "waste", self._ci95)
 
     @property
     def mean_makespan(self) -> float:
-        return float(self.makespan.mean())
+        return self._stat("mean_makespan", "makespan", lambda a: float(a.mean()))
 
     @property
     def ci95_makespan(self) -> float:
-        return self._ci95(self.makespan)
+        return self._stat("ci95_makespan", "makespan", self._ci95)
+
+    @property
+    def mean_faults(self) -> float:
+        return self._stat("mean_faults", "n_faults", lambda a: float(a.mean()))
+
+    @property
+    def mean_proactive_ckpts(self) -> float:
+        return self._stat(
+            "mean_proactive_ckpts", "n_proactive_ckpts",
+            lambda a: float(a.mean()),
+        )
+
+    @property
+    def mean_regular_ckpts(self) -> float:
+        return self._stat(
+            "mean_regular_ckpts", "n_regular_ckpts", lambda a: float(a.mean())
+        )
+
+    @property
+    def mean_migrations(self) -> float:
+        return self._stat(
+            "mean_migrations", "n_migrations", lambda a: float(a.mean())
+        )
 
     def to_row(self) -> Dict:
         c = self.cell
@@ -136,15 +215,15 @@ class CellResult:
             "window": c.predictor.window,
             "dist": c.dist.name,
             "work": c.work,
-            "n_runs": int(self.waste.shape[0]),
+            "n_runs": self.n_runs,
             "mean_waste": self.mean_waste,
             "ci95_waste": fin(self.ci95_waste),
             "mean_makespan": self.mean_makespan,
             "ci95_makespan": fin(self.ci95_makespan),
-            "mean_faults": float(self.n_faults.mean()),
-            "mean_proactive_ckpts": float(self.n_proactive_ckpts.mean()),
-            "mean_regular_ckpts": float(self.n_regular_ckpts.mean()),
-            "mean_migrations": float(self.n_migrations.mean()),
+            "mean_faults": self.mean_faults,
+            "mean_proactive_ckpts": self.mean_proactive_ckpts,
+            "mean_regular_ckpts": self.mean_regular_ckpts,
+            "mean_migrations": self.mean_migrations,
             "n_exhausted": self.n_exhausted,
         }
 
@@ -160,12 +239,19 @@ _CSV_FIELDS = [
 
 @dataclass
 class SweepResult:
-    """Structured result of a grid sweep, with CSV/JSON serialization."""
+    """Structured result of a grid sweep, with CSV/JSON serialization.
+
+    ``dispatch`` records the engine-call granularity ("fused": the grid
+    rode cell-multiplexed megabatch dispatches; "percell": one call per
+    cell) and ``collect`` the result layout ("lanes": per-run arrays;
+    "stats": device-reduced summary moments)."""
 
     grid: GridSpec
     cells: List[CellResult]
     engine: str
     wall_time_s: float
+    dispatch: str = "fused"
+    collect: str = "lanes"
 
     def __getitem__(self, label: str) -> CellResult:
         for c in self.cells:
@@ -191,6 +277,8 @@ class SweepResult:
     def write_json(self, path) -> None:
         payload = {
             "engine": self.engine,
+            "dispatch": self.dispatch,
+            "collect": self.collect,
             "wall_time_s": self.wall_time_s,
             "n_runs": self.grid.n_runs,
             "seed": self.grid.seed,

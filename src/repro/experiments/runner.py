@@ -2,7 +2,7 @@
 
 The runner flattens a :class:`~repro.experiments.grid.GridSpec` into engine
 lanes — one lane per (cell, run) pair — and advances the *entire grid* in a
-single vectorized engine call:
+handful of vectorized engine calls:
 
 1. cells are grouped by trace-generation compatibility (failure-law family,
    superposition settings), and within a group cells with identical trace
@@ -25,6 +25,30 @@ for equivalence checks.  ``engine="legacy"`` reproduces the pre-batching
 pipeline exactly (per-run Python-object trace generation via
 :func:`make_event_trace` + scalar engine, per-run seeds ``seed + 1000 i +
 17``) — the wall-clock baseline the vectorized path is measured against.
+
+Fused vs per-cell dispatch
+==========================
+
+``dispatch="fused"`` (the default for the batched engines) makes the
+experiment cell a *lane-level axis* of the engine: strategy, period,
+checkpoint costs, predictor parameters and trust ship as per-cell tables
+broadcast on device through an int32 per-lane cell index
+(``simulate_batch_jax(cell_index=...)``), so one device dispatch — one
+compiled executable per failure-law family, since the distribution branch
+specializes compilation — runs the entire grid with lanes from many cells
+interleaved across chunks and shards.  ``dispatch="percell"`` launches one
+engine call per cell instead (the pre-fusion baseline the fused-sweep
+benchmark is measured against, and a differential-validation path: paired
+per-lane RNG streams make both dispatches bit-identical in device trace
+mode and for the deterministic trust settings ``q in {0, 1}`` in host
+mode; fractional-``q`` host-mode trust coins are drawn per engine call and
+agree only in distribution).
+
+``collect="stats"`` (jax engine) segment-reduces each cell's waste /
+makespan / event-counter moments *on device* and fetches O(cells) sums
+instead of O(lanes) per-run arrays; the resulting
+:class:`~repro.experiments.grid.CellResult` rows carry identical summary
+statistics (to float rounding) without the raw samples.
 """
 
 from __future__ import annotations
@@ -73,26 +97,48 @@ def _trace_key(cell: ExperimentCell) -> Tuple:
     )
 
 
+def _trace_slots(grid: GridSpec, cell_idx: List[int]):
+    """Shared-trace layout of one group: cells mapping to the same
+    :func:`_trace_key` share one *slot* of unique traces.  A slot is as
+    wide as its widest cell (per-cell ``n_runs`` heterogeneity): every
+    cell consumes the slot's first ``n_runs`` lanes, so pairing holds on
+    the common prefix.  Returns ``(uniq_cells, cell_slot, slot_runs,
+    slot_off, rows)`` where ``rows[lane]`` indexes the unique-lane pool.
+    """
+    cells = [grid.cells[ci] for ci in cell_idx]
+    runs = [grid.cell_runs(ci) for ci in cell_idx]
+    uniq: Dict[Tuple, int] = {}
+    cell_slot = [uniq.setdefault(_trace_key(c), len(uniq)) for c in cells]
+    uniq_cells: List[Optional[ExperimentCell]] = [None] * len(uniq)
+    slot_runs = np.zeros(len(uniq), dtype=np.int64)
+    for c, slot, r in zip(cells, cell_slot, runs):
+        if uniq_cells[slot] is None:
+            uniq_cells[slot] = c
+        slot_runs[slot] = max(slot_runs[slot], r)
+    slot_off = np.concatenate([[0], np.cumsum(slot_runs)])
+    rows = (
+        np.concatenate(
+            [
+                slot_off[slot] + np.arange(r)
+                for slot, r in zip(cell_slot, runs)
+            ]
+        )
+        if cells
+        else np.zeros(0, dtype=np.int64)
+    )
+    return uniq_cells, cell_slot, slot_runs, slot_off, rows
+
+
 def _group_traces(grid: GridSpec, cell_idx: List[int], group_no: int) -> BatchTraces:
     """Generate one group's traces: one batched pass over the group's
     *unique* trace parameters, then row-expansion to per-cell lanes."""
-    cells = [grid.cells[ci] for ci in cell_idx]
-    n_runs = grid.n_runs
-    uniq: Dict[Tuple, int] = {}
-    cell_slot = []
-    for c in cells:
-        cell_slot.append(uniq.setdefault(_trace_key(c), len(uniq)))
-    uniq_cells = [None] * len(uniq)
-    for c, slot in zip(cells, cell_slot):
-        if uniq_cells[slot] is None:
-            uniq_cells[slot] = c
-
-    rep = lambda vals: np.repeat(np.asarray(vals, dtype=np.float64), n_runs)
+    uniq_cells, _, slot_runs, slot_off, rows = _trace_slots(grid, cell_idx)
+    rep = lambda vals: np.repeat(np.asarray(vals, dtype=np.float64), slot_runs)
     rng = np.random.default_rng([grid.seed, group_no])
-    proto = cells[0]
+    proto = grid.cells[cell_idx[0]]
     traces = make_event_traces_batch(
         rng,
-        len(uniq_cells) * n_runs,
+        int(slot_off[-1]),
         horizon=rep([c.horizon_factor * c.work for c in uniq_cells]),
         mtbf=rep([c.platform.mu for c in uniq_cells]),
         recall=rep([c.predictor.recall for c in uniq_cells]),
@@ -104,9 +150,6 @@ def _group_traces(grid: GridSpec, cell_idx: List[int], group_no: int) -> BatchTr
         n_components=proto.n_components,
         stationary=proto.stationary,
     )
-    rows = np.concatenate(
-        [slot * n_runs + np.arange(n_runs) for slot in cell_slot]
-    )
     return traces.take(rows)
 
 
@@ -114,56 +157,52 @@ def _group_trace_spec(
     grid: GridSpec, cell_idx: List[int], stream_base: int
 ) -> Tuple[TraceSpec, int]:
     """Device-generation counterpart of :func:`_group_traces`: build the
-    group's :class:`TraceSpec` with *globally unique* stream ids per
-    unique (trace-parameters, run) pair — cells sharing trace parameters
+    group's *cell-indexed* :class:`TraceSpec` — one parameter row per
+    cell, O(lanes) stream ids — with *globally unique* stream ids per
+    unique (trace-parameters, run) pair: cells sharing trace parameters
     share stream ids (paired design), and stream ids are stable across
-    engines, chunk sizes and device counts.  Returns the expanded spec
-    and the next free stream id."""
+    engines, dispatch granularities, chunk sizes and device counts.
+    Returns the spec and the next free stream id."""
     cells = [grid.cells[ci] for ci in cell_idx]
-    n_runs = grid.n_runs
+    runs = [grid.cell_runs(ci) for ci in cell_idx]
     proto = cells[0]
     if proto.n_components:
         raise ValueError(
             "trace_mode='device' does not support superposed component "
             "traces (n_components); use trace_mode='host'"
         )
-    uniq: Dict[Tuple, int] = {}
-    cell_slot = []
-    for c in cells:
-        cell_slot.append(uniq.setdefault(_trace_key(c), len(uniq)))
-    uniq_cells = [None] * len(uniq)
-    for c, slot in zip(cells, cell_slot):
-        if uniq_cells[slot] is None:
-            uniq_cells[slot] = c
-
-    rep = lambda vals: np.repeat(np.asarray(vals, dtype=np.float64), n_runs)
-    n_uniq_lanes = len(uniq_cells) * n_runs
+    _, cell_slot, _, slot_off, _ = _trace_slots(grid, cell_idx)
+    stream = np.concatenate(
+        [
+            stream_base + slot_off[slot] + np.arange(r, dtype=np.int64)
+            for slot, r in zip(cell_slot, runs)
+        ]
+    )
+    cidx = np.repeat(np.arange(len(cells), dtype=np.int32), runs)
     spec = make_trace_spec(
-        n_uniq_lanes,
-        horizon=rep([c.horizon_factor * c.work for c in uniq_cells]),
-        mtbf=rep([c.platform.mu for c in uniq_cells]),
-        recall=rep([c.predictor.recall for c in uniq_cells]),
-        precision=rep([c.predictor.precision for c in uniq_cells]),
-        window=rep([c.predictor.window for c in uniq_cells]),
-        lead=rep([c.predictor.lead for c in uniq_cells]),
+        stream.shape[0],
+        horizon=[c.horizon_factor * c.work for c in cells],
+        mtbf=[c.platform.mu for c in cells],
+        recall=[c.predictor.recall for c in cells],
+        precision=[c.predictor.precision for c in cells],
+        window=[c.predictor.window for c in cells],
+        lead=[c.predictor.lead for c in cells],
         fault_dist=proto.dist,
         false_pred_dist=proto.false_pred_dist,
         seed=grid.seed,
-        stream=stream_base + np.arange(n_uniq_lanes, dtype=np.int64),
+        stream=stream,
+        cell_index=cidx,
     )
-    rows = np.concatenate(
-        [slot * n_runs + np.arange(n_runs) for slot in cell_slot]
-    )
-    return spec.take(rows), stream_base + n_uniq_lanes
+    return spec, stream_base + int(slot_off[-1])
 
 
 def _run_legacy(grid: GridSpec) -> List[List]:
     """The seed repository's exact pipeline: per-run object-based trace
     generation + scalar engine, one trace per (cell, run)."""
     out = []
-    for cell in grid.cells:
+    for ci, cell in enumerate(grid.cells):
         runs = []
-        for i in range(grid.n_runs):
+        for i in range(grid.cell_runs(ci)):
             rng = np.random.default_rng(grid.seed + 1000 * i + 17)
             trace = make_event_trace(
                 rng,
@@ -183,9 +222,52 @@ def _run_legacy(grid: GridSpec) -> List[List]:
     return out
 
 
+#: per-lane result fields assembled into CellResult arrays
+_LANE_FIELDS = (
+    "waste", "makespan", "n_faults", "n_proactive_ckpts",
+    "n_regular_ckpts", "n_migrations", "trace_exhausted",
+)
+
+
+def _lane_arrays(res) -> Dict[str, np.ndarray]:
+    return {k: getattr(res, k) for k in _LANE_FIELDS}
+
+
+def _scalar_lane_arrays(outs) -> Dict[str, np.ndarray]:
+    return {
+        "waste": np.array([r.waste for r in outs]),
+        "makespan": np.array([r.makespan for r in outs]),
+        "n_faults": np.array([r.n_faults for r in outs]),
+        "n_proactive_ckpts": np.array([r.n_proactive_ckpts for r in outs]),
+        "n_regular_ckpts": np.array([r.n_regular_ckpts for r in outs]),
+        "n_migrations": np.array([r.n_migrations for r in outs]),
+        "trace_exhausted": np.array([r.trace_exhausted for r in outs]),
+    }
+
+
+def _cat_lane_arrays(parts: List[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    return {k: np.concatenate([p[k] for p in parts]) for k in _LANE_FIELDS}
+
+
+def _stats_cell_result(cell: ExperimentCell, sums, i: int) -> CellResult:
+    """One stats-backed CellResult row from device-reduced CellSums."""
+    return CellResult.from_stats(
+        cell,
+        int(sums.n_exhausted[i]),
+        sums.n[i],
+        sums.mean_waste[i], sums.ci95_waste[i],
+        sums.mean_makespan[i], sums.ci95_makespan[i],
+        sums.n_faults[i] / sums.n[i],
+        sums.n_proactive_ckpts[i] / sums.n[i],
+        sums.n_regular_ckpts[i] / sums.n[i],
+        sums.n_migrations[i] / sums.n[i],
+    )
+
+
 def run_grid(
     grid: GridSpec, engine: str = "batch", chunk_lanes="auto",
     devices=None, mesh=None, trace_mode: str = "host",
+    dispatch: Optional[str] = None, collect: str = "lanes",
 ) -> SweepResult:
     """Execute every cell of ``grid`` and aggregate per-cell statistics.
 
@@ -204,7 +286,15 @@ def run_grid(
     replay the identical streams host-side.  The paired design is
     preserved (cells sharing trace parameters share stream ids), and
     results are chunk-size and device-count invariant.  Not supported
-    for the legacy engine or superposed (``n_components``) traces."""
+    for the legacy engine or superposed (``n_components``) traces.
+
+    ``dispatch`` selects "fused" (default for batched engines: the whole
+    grid rides one cell-multiplexed engine call per failure-law family)
+    or "percell" (one engine call per cell — the pre-fusion baseline;
+    identical per-cell results, see the module docstring).  The legacy
+    engine is inherently per-cell.  ``collect="stats"`` (jax only)
+    fetches device-reduced per-cell statistics instead of per-run
+    arrays."""
     if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
             f"unknown engine {engine!r} "
@@ -218,6 +308,22 @@ def run_grid(
         )
     if trace_mode == "device" and engine == "legacy":
         raise ValueError("trace_mode='device' requires a batched engine")
+    if dispatch is None:
+        dispatch = "percell" if engine == "legacy" else "fused"
+    if dispatch not in ("fused", "percell"):
+        raise ValueError(
+            f"unknown dispatch {dispatch!r} (expected 'fused' or 'percell')"
+        )
+    if engine == "legacy" and dispatch == "fused":
+        raise ValueError("engine='legacy' is inherently per-cell")
+    if collect not in ("lanes", "stats"):
+        raise ValueError(
+            f"unknown collect {collect!r} (expected 'lanes' or 'stats')"
+        )
+    if collect == "stats" and engine != "jax":
+        raise ValueError("collect='stats' requires engine='jax'")
+    if collect == "stats" and dispatch == "percell":
+        raise ValueError("collect='stats' requires dispatch='fused'")
     t0 = time.monotonic()
     if engine == "legacy":
         cells = []
@@ -236,11 +342,12 @@ def run_grid(
             )
         return SweepResult(
             grid=grid, cells=cells, engine=engine,
-            wall_time_s=time.monotonic() - t0,
+            wall_time_s=time.monotonic() - t0, dispatch=dispatch,
         )
-    n_runs = grid.n_runs
     groups = _group_cells(grid)
     cell_order: List[int] = [ci for _, idx in groups for ci in idx]
+    runs_o = np.array([grid.cell_runs(ci) for ci in cell_order], np.int64)
+    offs = np.concatenate([[0], np.cumsum(runs_o)])
     specs: List[TraceSpec] = []
     if trace_mode == "device":
         base = 0
@@ -258,90 +365,163 @@ def run_grid(
                 for gno, (_, idx) in enumerate(groups)
             ]
         )
-    work = np.repeat(
-        np.asarray([grid.cells[ci].work for ci in cell_order], dtype=np.float64),
-        n_runs,
+    # per-cell tables in cell_order (the fused dispatch's cell axis)
+    work_c = np.asarray(
+        [grid.cells[ci].work for ci in cell_order], dtype=np.float64
     )
-    platforms = [grid.cells[ci].platform for ci in cell_order for _ in range(n_runs)]
-    strategies = [grid.cells[ci].strategy for ci in cell_order for _ in range(n_runs)]
+    plats_c = [grid.cells[ci].platform for ci in cell_order]
+    strats_c = [grid.cells[ci].strategy for ci in cell_order]
+    cidx = np.repeat(np.arange(len(cell_order), dtype=np.int32), runs_o)
     if trace_mode == "device" and engine != "jax":
         # host engines replay the device streams via materialize()
         traces = BatchTraces.concat([s.materialize() for s in specs])
 
-    if engine == "jax" and trace_mode == "device":
-        # one dispatch per trace-compatibility group: the failure law is
-        # a static specialization of the compiled on-device sampler
-        from ..core.jax_sim import simulate_batch_jax
+    lane_parts: List[Dict[str, np.ndarray]] = []
+    stats_rows: List[CellResult] = []
 
-        parts = []
-        lo = 0
-        for (_, idx), spec in zip(groups, specs):
-            hi = lo + len(idx) * n_runs
-            parts.append(
-                simulate_batch_jax(
-                    work[lo:hi], platforms[lo:hi], strategies[lo:hi], spec,
-                    chunk=chunk_lanes, devices=devices, mesh=mesh,
-                )
-            )
-            lo = hi
-        waste = np.concatenate([p.waste for p in parts])
-        makespan = np.concatenate([p.makespan for p in parts])
-        n_faults = np.concatenate([p.n_faults for p in parts])
-        n_pro = np.concatenate([p.n_proactive_ckpts for p in parts])
-        n_reg = np.concatenate([p.n_regular_ckpts for p in parts])
-        n_mig = np.concatenate([p.n_migrations for p in parts])
-        exhausted = np.concatenate([p.trace_exhausted for p in parts])
-    elif engine in ("batch", "jax"):
+    def _stats_from(sums, first_pos: int):
+        for i in range(sums.n_cells):
+            ci = cell_order[first_pos + i]
+            stats_rows.append(_stats_cell_result(grid.cells[ci], sums, i))
+
+    if dispatch == "percell":
+        # one engine call per cell: same traces/streams as the fused
+        # path, so per-cell results match it (bit-identically for the
+        # deterministic trust settings; see module docstring)
         if engine == "jax":
             from ..core.jax_sim import simulate_batch_jax
 
+        # cell position -> (owning group, group's first lane offset)
+        group_of: List[int] = []
+        group_lane0: List[int] = []
+        p = 0
+        for g, (_, idx) in enumerate(groups):
+            group_of.extend([g] * len(idx))
+            group_lane0.extend([int(offs[p])] * len(idx))
+            p += len(idx)
+        expanded: List[Optional[TraceSpec]] = [None] * len(specs)
+        for k in range(len(cell_order)):
+            sl = slice(int(offs[k]), int(offs[k + 1]))
+            n_k = int(runs_o[k])
+            wk = np.full(n_k, work_c[k])
+            pk, sk = [plats_c[k]] * n_k, [strats_c[k]] * n_k
+            if trace_mode == "device" and engine == "jax":
+                g = group_of[k]
+                if expanded[g] is None:
+                    expanded[g] = specs[g].expand()
+                glo = group_lane0[k]
+                sub = expanded[g].take(
+                    np.arange(sl.start - glo, sl.stop - glo)
+                )
+            else:
+                sub = traces.take(np.arange(sl.start, sl.stop))
+            if engine == "jax":
+                res = simulate_batch_jax(
+                    wk, pk, sk, sub,
+                    rng=np.random.default_rng([grid.seed, len(groups), k]),
+                    chunk=chunk_lanes, devices=devices, mesh=mesh,
+                )
+                lane_parts.append(_lane_arrays(res))
+            elif engine == "batch":
+                res = simulate_batch(
+                    wk, pk, sk, sub,
+                    rng=np.random.default_rng([grid.seed, len(groups), k]),
+                )
+                lane_parts.append(_lane_arrays(res))
+            else:  # scalar: per-lane rng seeds match the fused path
+                outs = [
+                    simulate(
+                        float(work_c[k]), plats_c[k], strats_c[k],
+                        sub.lane(j),
+                        np.random.default_rng(
+                            [grid.seed, len(groups), sl.start + j]
+                        ),
+                    )
+                    for j in range(n_k)
+                ]
+                lane_parts.append(_scalar_lane_arrays(outs))
+    elif engine == "jax" and trace_mode == "device":
+        # fused: one dispatch per trace-compatibility group — the
+        # failure law is a static specialization of the compiled
+        # on-device sampler; within a group the whole cell table rides
+        # one cell-multiplexed engine call
+        from ..core.jax_sim import simulate_batch_jax
+
+        pos = 0
+        for (_, idx), spec in zip(groups, specs):
+            a, b = pos, pos + len(idx)
             res = simulate_batch_jax(
-                work, platforms, strategies, traces,
-                rng=np.random.default_rng([grid.seed, len(groups)]),
+                work_c[a:b], plats_c[a:b], strats_c[a:b], spec,
                 chunk=chunk_lanes, devices=devices, mesh=mesh,
+                collect=collect,
             )
+            if collect == "stats":
+                _stats_from(res, a)
+            else:
+                lane_parts.append(_lane_arrays(res))
+            pos = b
+    elif engine == "jax":
+        # fused host-trace dispatch: per-cell engine tables + the lane ->
+        # cell index (event arrays stay per-lane)
+        from ..core.jax_sim import simulate_batch_jax
+
+        res = simulate_batch_jax(
+            work_c, plats_c, strats_c, traces,
+            rng=np.random.default_rng([grid.seed, len(groups)]),
+            chunk=chunk_lanes, devices=devices, mesh=mesh,
+            cell_index=cidx, collect=collect,
+        )
+        if collect == "stats":
+            _stats_from(res, 0)
         else:
-            res = simulate_batch(
-                work, platforms, strategies, traces,
-                rng=np.random.default_rng([grid.seed, len(groups)]),
-            )
-        waste = res.waste
-        makespan = res.makespan
-        n_faults, n_pro = res.n_faults, res.n_proactive_ckpts
-        n_reg, n_mig = res.n_regular_ckpts, res.n_migrations
-        exhausted = res.trace_exhausted
-    else:
+            lane_parts.append(_lane_arrays(res))
+    elif engine == "batch":
+        res = simulate_batch(
+            np.repeat(work_c, runs_o),
+            [plats_c[k] for k in range(len(cell_order)) for _ in range(runs_o[k])],
+            [strats_c[k] for k in range(len(cell_order)) for _ in range(runs_o[k])],
+            traces,
+            rng=np.random.default_rng([grid.seed, len(groups)]),
+        )
+        lane_parts.append(_lane_arrays(res))
+    else:  # scalar
+        work_l = np.repeat(work_c, runs_o)
+        plats_l = [
+            plats_c[k] for k in range(len(cell_order)) for _ in range(runs_o[k])
+        ]
+        strats_l = [
+            strats_c[k] for k in range(len(cell_order)) for _ in range(runs_o[k])
+        ]
         outs = [
             simulate(
-                float(work[i]), platforms[i], strategies[i], traces.lane(i),
+                float(work_l[i]), plats_l[i], strats_l[i], traces.lane(i),
                 np.random.default_rng([grid.seed, len(groups), i]),
             )
             for i in range(traces.n_lanes)
         ]
-        waste = np.array([r.waste for r in outs])
-        makespan = np.array([r.makespan for r in outs])
-        n_faults = np.array([r.n_faults for r in outs])
-        n_pro = np.array([r.n_proactive_ckpts for r in outs])
-        n_reg = np.array([r.n_regular_ckpts for r in outs])
-        n_mig = np.array([r.n_migrations for r in outs])
-        exhausted = np.array([r.trace_exhausted for r in outs])
+        lane_parts.append(_scalar_lane_arrays(outs))
 
-    cells: List[CellResult] = [None] * len(grid.cells)
-    for k, ci in enumerate(cell_order):
-        sl = slice(k * n_runs, (k + 1) * n_runs)
-        cells[ci] = CellResult(
-            cell=grid.cells[ci],
-            waste=waste[sl],
-            makespan=makespan[sl],
-            n_faults=n_faults[sl],
-            n_proactive_ckpts=n_pro[sl],
-            n_regular_ckpts=n_reg[sl],
-            n_migrations=n_mig[sl],
-            n_exhausted=int(np.count_nonzero(exhausted[sl])),
-        )
+    cells: List[Optional[CellResult]] = [None] * len(grid.cells)
+    if collect == "stats":
+        for k, cr in enumerate(stats_rows):
+            cells[cell_order[k]] = cr
+    else:
+        lanes = _cat_lane_arrays(lane_parts)
+        for k, ci in enumerate(cell_order):
+            sl = slice(int(offs[k]), int(offs[k + 1]))
+            cells[ci] = CellResult(
+                cell=grid.cells[ci],
+                waste=lanes["waste"][sl],
+                makespan=lanes["makespan"][sl],
+                n_faults=lanes["n_faults"][sl],
+                n_proactive_ckpts=lanes["n_proactive_ckpts"][sl],
+                n_regular_ckpts=lanes["n_regular_ckpts"][sl],
+                n_migrations=lanes["n_migrations"][sl],
+                n_exhausted=int(np.count_nonzero(lanes["trace_exhausted"][sl])),
+            )
     return SweepResult(
         grid=grid, cells=cells, engine=engine,
-        wall_time_s=time.monotonic() - t0,
+        wall_time_s=time.monotonic() - t0, dispatch=dispatch, collect=collect,
     )
 
 
@@ -354,6 +534,8 @@ def run_cells(
     devices=None,
     mesh=None,
     trace_mode: str = "host",
+    dispatch: Optional[str] = None,
+    collect: str = "lanes",
 ) -> SweepResult:
     """Convenience wrapper: build a :class:`GridSpec` and run it."""
     return run_grid(
@@ -363,4 +545,6 @@ def run_cells(
         devices=devices,
         mesh=mesh,
         trace_mode=trace_mode,
+        dispatch=dispatch,
+        collect=collect,
     )

@@ -72,6 +72,8 @@ __all__ = [
     "gap_transform",
     "stream_advance",
     "masked_stream_advance",
+    "cell_gather",
+    "segment_cell_sums",
 ]
 
 #: primitive kinds (0-3 shared with repro.core.batch_sim's _PR_* codes;
@@ -272,6 +274,44 @@ def stream_advance(mask, ctr, tm, key, mean, horizon, *, kind, param):
     t2 = tm + g
     t2 = jnp.where(t2 > horizon, jnp.asarray(jnp.inf, tm.dtype), t2)
     return jnp.where(mask, c2, ctr), jnp.where(mask, t2, tm)
+
+
+# --------------------------------------------------------------------------- #
+# Cell multiplexing (fused experiment sweeps)
+# --------------------------------------------------------------------------- #
+def cell_gather(consts: dict, cidx, keys) -> dict:
+    """Broadcast per-cell table rows to per-lane arrays.
+
+    The fused sweep ships each engine parameter as a compact ``(n_cells,)``
+    table plus one ``(lanes,)`` int32 ``cidx``; this gather — one fused
+    ``take`` per parameter at the top of the jitted program — recovers the
+    per-lane layout the lane machine runs on, so lanes from many
+    experiment cells interleave freely across chunks and shards.  Returns
+    a copy of ``consts`` with every key in ``keys`` gathered (keys absent
+    from ``consts`` are skipped: trace-mode-specific tables)."""
+    out = dict(consts)
+    for k in keys:
+        if k in consts:
+            out[k] = jnp.take(consts[k], cidx, axis=0)
+    return out
+
+
+def segment_cell_sums(values, cidx, num_cells: int):
+    """Per-cell sums of per-lane columns in one segment reduction.
+
+    ``values`` is a sequence of ``(L,)`` arrays (clock, waste, event
+    counters, ...); the result is a ``(num_cells, len(values))`` float
+    matrix whose row ``c`` sums the lanes with ``cidx == c`` — the
+    device-side reduction of per-cell Monte-Carlo moments, so a fused
+    sweep can fetch O(cells) statistics instead of O(lanes) results.
+    Counters are exact in f64 (and up to 2^24 lanes in the f32/TPU
+    path); callers route padding lanes to a sacrificial trailing cell
+    row and drop it host-side."""
+    import jax
+
+    fdt = values[0].dtype
+    x = jnp.stack([v.astype(fdt) for v in values], axis=-1)
+    return jax.ops.segment_sum(x, cidx, num_segments=num_cells)
 
 
 def _advance_kernel(*refs, kind: str, param: float, nkey: int):

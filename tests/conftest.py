@@ -5,3 +5,8 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end / subprocess tests"
     )
+    config.addinivalue_line(
+        "markers",
+        "fuzz: randomized differential engine fuzz "
+        "(REPRO_FUZZ_EXAMPLES scales the example budget)",
+    )

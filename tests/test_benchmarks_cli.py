@@ -150,3 +150,24 @@ def test_compare_flags_device_trace_floor():
     fails = compare(base, fresh, perf_tol=0.30)
     assert len(fails) == 1 and "jax_dev_lanes_per_s" in fails[0]
     assert compare(base, fresh, perf_tol=0.0) == []
+
+
+def test_compare_flags_fused_grid_floor_and_equality():
+    """The fused-sweep record is gated on both axes: cells/sec within
+    the perf tolerance of the baseline (and the tolerance flags apply),
+    and exact fused-vs-percell per-cell agreement."""
+    from benchmarks.check_regression import compare
+
+    base = [_rec("jax_engine/fused_grid_cells72",
+                 fused_cells_per_s=50.0, fused_vs_percell_max_diff=0.0)]
+    slow = [_rec("jax_engine/fused_grid_cells72",
+                 fused_cells_per_s=20.0, fused_vs_percell_max_diff=0.0)]
+    fails = compare(base, slow, perf_tol=0.30)
+    assert len(fails) == 1 and "fused_cells_per_s" in fails[0]
+    assert compare(base, slow, perf_tol=0.0) == []  # tolerance flag applies
+    assert compare(base, slow, perf_tol=0.70) == []
+    split = [_rec("jax_engine/fused_grid_cells72",
+                  fused_cells_per_s=50.0, fused_vs_percell_max_diff=1e-4)]
+    fails = compare(base, split, perf_tol=0.30)
+    assert len(fails) == 1 and "fused-vs-percell" in fails[0]
+    assert compare(base, split, agree_tol=1e-3) == []

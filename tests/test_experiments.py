@@ -162,6 +162,211 @@ def test_legacy_engine_runs():
     grid = _small_grid(n_platforms=1)
     sweep = run_grid(grid, engine="legacy")
     assert sweep.engine == "legacy"
+    assert sweep.dispatch == "percell"  # inherently per-cell
     for cr in sweep.cells:
         assert cr.waste.shape == (grid.n_runs,)
         assert 0.0 < cr.mean_waste < 1.0
+
+
+# ---------------------------------------------------------------------- #
+# fused dispatch, per-cell dispatch, stats collection, edge cases
+# ---------------------------------------------------------------------- #
+def _sweep_lanes_equal(a, b, exact=True):
+    assert a.labels() == b.labels()
+    for ca, cb in zip(a.cells, b.cells):
+        if exact:
+            np.testing.assert_array_equal(
+                ca.makespan, cb.makespan, err_msg=ca.cell.label
+            )
+            np.testing.assert_array_equal(ca.waste, cb.waste)
+        else:
+            np.testing.assert_allclose(
+                ca.makespan, cb.makespan, rtol=1e-12, err_msg=ca.cell.label
+            )
+        np.testing.assert_array_equal(ca.n_faults, cb.n_faults)
+        np.testing.assert_array_equal(
+            ca.n_proactive_ckpts, cb.n_proactive_ckpts
+        )
+        assert ca.n_exhausted == cb.n_exhausted
+
+
+@pytest.mark.parametrize("trace_mode", ["host", "device"])
+def test_fused_vs_percell_sweepresult_equality(trace_mode):
+    """Acceptance gate: the fused cell-multiplexed dispatch and the
+    per-cell dispatch produce identical SweepResults (per-lane arrays,
+    counters, exhaustion counts) for the jax engine in both trace
+    modes."""
+    grid = _small_grid()
+    fused = run_grid(grid, engine="jax", trace_mode=trace_mode)
+    percell = run_grid(
+        grid, engine="jax", trace_mode=trace_mode, dispatch="percell"
+    )
+    assert fused.dispatch == "fused" and percell.dispatch == "percell"
+    _sweep_lanes_equal(fused, percell)
+    if trace_mode == "host":  # the oracle too: per-lane rng seeds match
+        sf = run_grid(grid, engine="scalar")
+        sp = run_grid(grid, engine="scalar", dispatch="percell")
+        _sweep_lanes_equal(sf, sp)
+
+
+def test_fused_chunk_size_invariance():
+    """Fused device-mode results are invariant to the chunk size (cell
+    tables ride every chunk; stream ids travel with the lanes)."""
+    grid = _small_grid()
+    ref = run_grid(grid, engine="jax", trace_mode="device", chunk_lanes=None)
+    for chunk in (4, 7):
+        got = run_grid(
+            grid, engine="jax", trace_mode="device", chunk_lanes=chunk
+        )
+        _sweep_lanes_equal(ref, got)
+
+
+def test_single_cell_group():
+    """A grid whose groups are all singletons (every cell its own
+    failure law) exercises the one-cell megabatch path."""
+    plat = Platform(mu=800 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82)
+    cells = tuple(
+        ExperimentCell(
+            label=f"d{i}", work=WORK, platform=plat, predictor=pred,
+            strategy=S.exact_prediction(plat, pred), fault_dist=dist,
+        )
+        for i, dist in enumerate(
+            [E.exponential(), E.weibull(0.7), E.lognormal(1.0)]
+        )
+    )
+    grid = GridSpec(cells, n_runs=3, seed=5)
+    sj = run_grid(grid, engine="jax", trace_mode="device")
+    sb = run_grid(grid, engine="batch", trace_mode="device")
+    assert len(sj.cells) == 3
+    for cj, cb in zip(sj.cells, sb.cells):
+        np.testing.assert_allclose(cj.makespan, cb.makespan, rtol=1e-12)
+
+
+def test_mixed_failure_law_grid_fused():
+    """Mixed exponential/Weibull grids split into per-family megabatches
+    (compilation specializes on the law); per-cell results still match
+    the per-cell dispatch bit for bit."""
+    grid = _small_grid()  # k0 exponential + k1 weibull
+    laws = {c.dist.name for c in grid.cells}
+    assert len(laws) == 2
+    fused = run_grid(grid, engine="jax", trace_mode="device")
+    percell = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="percell"
+    )
+    _sweep_lanes_equal(fused, percell)
+
+
+def test_per_cell_n_runs_heterogeneity():
+    """Cells may override the grid's n_runs; every engine (legacy
+    included) sizes its per-cell arrays accordingly, pairing holds on
+    the shared-run prefix, and fused == percell."""
+    plat = Platform(mu=700 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+    cells = (
+        ExperimentCell("young", WORK, plat, pred, S.young(plat), n_runs=3),
+        ExperimentCell("inst", WORK, plat, pred, S.instant(plat, pred)),
+        ExperimentCell(
+            "nock", WORK, plat, pred, S.nockpt(plat, pred), n_runs=7
+        ),
+    )
+    grid = GridSpec(cells, n_runs=5, seed=9)
+    assert grid.cell_n_runs == (3, 5, 7)
+    assert grid.n_lanes == 15
+    for engine, kw in [
+        ("batch", {}), ("legacy", {}),
+        ("jax", dict(trace_mode="device")),
+    ]:
+        sweep = run_grid(grid, engine=engine, **kw)
+        assert [c.waste.shape[0] for c in sweep.cells] == [3, 5, 7]
+        for cr in sweep.cells:
+            assert cr.to_row()["n_runs"] == cr.waste.shape[0]
+    fused = run_grid(grid, engine="jax", trace_mode="device")
+    percell = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="percell"
+    )
+    _sweep_lanes_equal(fused, percell)
+    # paired design on the shared prefix: the 3 Young lanes face the
+    # same fault stream as the first 3 lanes of both window strategies
+    from repro.experiments.runner import _group_cells, _group_traces
+
+    (_, idx), = _group_cells(grid)
+    tr = _group_traces(grid, idx, 0)
+    np.testing.assert_array_equal(tr.fault_times[0:3], tr.fault_times[3:6])
+    np.testing.assert_array_equal(tr.fault_times[3:6], tr.fault_times[8:11])
+
+
+def test_grid_rejects_bad_n_runs():
+    plat = Platform(mu=500 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
+    pred = PredictorModel(0.85, 0.82)
+    cell = ExperimentCell(
+        "x", WORK, plat, pred, S.young(plat), n_runs=0
+    )
+    with pytest.raises(ValueError, match="n_runs"):
+        GridSpec((cell,), n_runs=2)
+
+
+def test_stats_collect_matches_lanes_collect():
+    """collect='stats' (device-reduced per-cell moments) reproduces the
+    lanes-collect summary statistics to float rounding, round-trips
+    through CSV/JSON, and refuses invalid combinations."""
+    grid = _small_grid()
+    lanes = run_grid(grid, engine="jax", trace_mode="device")
+    stats = run_grid(
+        grid, engine="jax", trace_mode="device", collect="stats"
+    )
+    assert stats.collect == "stats"
+    for cl, cs in zip(lanes.cells, stats.cells):
+        assert cs.waste is None and cs.stats is not None
+        assert cs.n_runs == cl.n_runs
+        assert cs.mean_waste == pytest.approx(cl.mean_waste, rel=1e-12)
+        assert cs.ci95_waste == pytest.approx(cl.ci95_waste, rel=1e-9)
+        assert cs.mean_makespan == pytest.approx(cl.mean_makespan, rel=1e-12)
+        assert cs.mean_faults == pytest.approx(cl.mean_faults, rel=1e-12)
+        assert cs.n_exhausted == cl.n_exhausted
+        rl, rs = cl.to_row(), cs.to_row()
+        for k in rl:
+            if isinstance(rl[k], float) and rl[k] is not None:
+                assert rs[k] == pytest.approx(rl[k], rel=1e-9, abs=1e-12), k
+            else:
+                assert rs[k] == rl[k], k
+    with pytest.raises(ValueError, match="stats"):
+        run_grid(grid, engine="batch", collect="stats")
+    with pytest.raises(ValueError, match="dispatch"):
+        run_grid(grid, engine="jax", collect="stats", dispatch="percell")
+    with pytest.raises(ValueError, match="collect"):
+        run_grid(grid, engine="jax", collect="everything")
+    with pytest.raises(ValueError, match="dispatch"):
+        run_grid(grid, engine="jax", dispatch="warp")
+    with pytest.raises(ValueError, match="per-cell"):
+        run_grid(grid, engine="legacy", dispatch="fused")
+
+
+def test_fused_stats_csv_json_roundtrip(tmp_path):
+    """Fused-sweep results (stats collect) serialize like any sweep and
+    agree with a lanes-collect sweep row for row after the round-trip."""
+    grid = _small_grid(n_platforms=1)
+    stats = run_grid(grid, engine="jax", trace_mode="device", collect="stats")
+    lanes = run_grid(grid, engine="jax", trace_mode="device")
+    csv_path = tmp_path / "fused.csv"
+    json_path = tmp_path / "fused.json"
+    stats.write_csv(csv_path)
+    stats.write_json(json_path)
+    import csv as _csv
+
+    with open(csv_path) as f:
+        rows = {r["label"]: r for r in _csv.DictReader(f)}
+    payload = json.loads(json_path.read_text())
+    assert payload["engine"] == "jax"
+    assert payload["dispatch"] == "fused"
+    assert payload["collect"] == "stats"
+    jrows = {r["label"]: r for r in payload["cells"]}
+    for cr in lanes.cells:
+        lab = cr.cell.label
+        assert float(rows[lab]["mean_waste"]) == pytest.approx(
+            cr.mean_waste, rel=1e-9
+        )
+        assert jrows[lab]["mean_waste"] == pytest.approx(
+            cr.mean_waste, rel=1e-9
+        )
+        assert int(rows[lab]["n_runs"]) == cr.n_runs

@@ -1,0 +1,217 @@
+"""Differential engine fuzz: random experiment cells through every engine.
+
+Each example draws a random cell (failure law, strategy mode, window,
+trust, recall/precision, platform scale), pairs it with a Young baseline
+on the same traces, and runs the grid through scalar vs batch vs jax —
+host *and* device trace modes, fused *and* per-cell dispatch — asserting
+the engine-equivalence contracts:
+
+* host trace mode: batch and jax consume identical event arrays, so
+  per-lane makespans agree to float rounding; the scalar oracle agrees
+  to the fast-forward tolerance; fused and per-cell dispatch are
+  bit-identical (deterministic trust);
+* device trace mode: fused and per-cell dispatch are bit-identical
+  (counter streams travel with the lanes); the batch engine replaying
+  the materialized streams matches exactly for exact-date predictions
+  and statistically (TP merge order) for windows.
+
+Uses hypothesis when available (the ``fuzz`` marker lets CI run a larger
+budget nightly via ``REPRO_FUZZ_EXAMPLES``); falls back to a fixed-seed
+parameter sweep otherwise so the differential coverage never silently
+disappears.
+"""
+
+import dataclasses
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Platform, PredictorModel
+from repro.core import events as E
+from repro.core import simulator as S
+from repro.experiments import ExperimentCell, GridSpec, run_grid
+
+pytestmark = pytest.mark.fuzz
+
+MN = 60.0
+N_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "6"))
+
+#: fixed distribution instances — the failure law statically specializes
+#: the compiled device sampler, so a bounded set keeps the fuzz budget in
+#: executables small while still crossing every family
+LAWS = {
+    "exp": E.exponential(),
+    "weibull0.7": E.weibull(0.7),
+    "weibull0.5": E.weibull(0.5),
+    "lognormal": E.lognormal(1.0),
+}
+MODES = ["none", "exact", "nockpt", "withckpt", "migration"]
+
+#: scalar-vs-vectorized tolerance (fast-forward float fusion)
+MK_TOL = 1e-3
+
+
+def _make_grid(mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed):
+    plat = Platform(
+        mu=mu_mn * MN, C=c_mn * MN, D=1 * MN, R=c_mn * MN, M=3 * MN
+    )
+    work = 5 * 86400.0
+    pred = PredictorModel(recall, precision, window=window, lead=3600.0)
+    if mode == "none":
+        strat = S.young(plat)
+    elif mode == "exact":
+        strat = S.instant(plat, pred) if window > 0 else S.exact_prediction(plat, pred)
+    elif mode == "nockpt":
+        strat = S.nockpt(plat, pred)
+    elif mode == "withckpt":
+        strat = S.withckpt(plat, pred)
+    else:
+        strat = S.migration(plat, pred)
+    if q != strat.q and strat.mode != "none":
+        strat = dataclasses.replace(strat, q=q)
+    cells = (
+        ExperimentCell(
+            "base/Young", work, plat, pred, S.young(plat),
+            fault_dist=LAWS[law_key],
+        ),
+        ExperimentCell(
+            f"rand/{strat.name}", work, plat, pred, strat,
+            fault_dist=LAWS[law_key],
+        ),
+    )
+    return GridSpec(cells, n_runs=3, seed=seed)
+
+
+def _assert_lanes_equal(a, b, exact=True, context=""):
+    for ca, cb in zip(a.cells, b.cells):
+        if exact:
+            np.testing.assert_array_equal(
+                ca.makespan, cb.makespan, err_msg=f"{context}:{ca.cell.label}"
+            )
+        else:
+            np.testing.assert_allclose(
+                ca.makespan, cb.makespan, rtol=1e-12, atol=1e-6,
+                err_msg=f"{context}:{ca.cell.label}",
+            )
+        np.testing.assert_array_equal(
+            ca.n_faults, cb.n_faults, err_msg=f"{context}:{ca.cell.label}"
+        )
+
+
+def _check_differential(mu_mn, c_mn, law_key, mode, window, q, recall,
+                        precision, seed):
+    grid = _make_grid(
+        mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed
+    )
+    # ---- host trace mode: three engines, two dispatch granularities --- #
+    sb = run_grid(grid, engine="batch")
+    sj = run_grid(grid, engine="jax")
+    _assert_lanes_equal(sj, sb, exact=False, context="jax-vs-batch")
+    sjp = run_grid(grid, engine="jax", dispatch="percell")
+    sbp = run_grid(grid, engine="batch", dispatch="percell")
+    if q in (0.0, 1.0):  # deterministic trust: dispatch is invisible
+        _assert_lanes_equal(sjp, sj, context="jax-percell-vs-fused")
+        _assert_lanes_equal(sbp, sb, context="batch-percell-vs-fused")
+        ss = run_grid(grid, engine="scalar")
+        for cs, cb in zip(ss.cells, sb.cells):
+            np.testing.assert_allclose(
+                cs.makespan, cb.makespan, atol=MK_TOL,
+                err_msg=f"scalar-vs-batch:{cs.cell.label}",
+            )
+            np.testing.assert_array_equal(cs.n_faults, cb.n_faults)
+
+    # ---- device trace mode (counter streams) -------------------------- #
+    sjd = run_grid(grid, engine="jax", trace_mode="device")
+    sjdp = run_grid(grid, engine="jax", trace_mode="device", dispatch="percell")
+    _assert_lanes_equal(sjdp, sjd, context="device-percell-vs-fused")
+    sbd = run_grid(grid, engine="batch", trace_mode="device")
+    if window == 0.0:
+        # exact-date predictions: the materialized replay is the same
+        # event sequence — float-rounding agreement
+        _assert_lanes_equal(sjd, sbd, exact=False, context="device-jax-vs-batch")
+    else:
+        # window TP merge order differs (fault order vs time sort):
+        # agreement is at the episode scale, not bit-exact
+        for ca, cb in zip(sjd.cells, sbd.cells):
+            np.testing.assert_allclose(
+                ca.makespan, cb.makespan, rtol=5e-3,
+                err_msg=f"device-window:{ca.cell.label}",
+            )
+    # per-cell mean waste is engine-invariant within MC resolution
+    for ca, cb in zip(sjd.cells, sbd.cells):
+        assert abs(ca.mean_waste - cb.mean_waste) < 2e-3, ca.cell.label
+
+
+def _params_from_seed(i: int):
+    rng = np.random.default_rng(1000 + i)
+    return dict(
+        mu_mn=float(rng.uniform(400.0, 2000.0)),
+        c_mn=float(rng.uniform(3.0, 15.0)),
+        law_key=sorted(LAWS)[i % len(LAWS)],
+        mode=MODES[i % len(MODES)],
+        window=[0.0, 1500.0, 4000.0][i % 3],
+        q=float(i % 2),
+        recall=float(rng.uniform(0.3, 0.95)),
+        precision=float(rng.uniform(0.3, 0.95)),
+        seed=int(rng.integers(0, 10_000)),
+    )
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+
+    @pytest.mark.parametrize("i", range(N_EXAMPLES))
+    def test_differential_engines(i):
+        _check_differential(**_params_from_seed(i))
+
+else:
+
+    # derandomize: the window-mode device-vs-host agreement bounds are
+    # statistical (empirically calibrated), so the example set must be
+    # deterministic per budget — same contract as the fixed-seed
+    # fallback, and no irreproducible CI-only failures
+    @settings(max_examples=N_EXAMPLES, deadline=None, derandomize=True)
+    @given(
+        mu_mn=st.floats(400.0, 2000.0),
+        c_mn=st.floats(3.0, 15.0),
+        law_key=st.sampled_from(sorted(LAWS)),
+        mode=st.sampled_from(MODES),
+        window=st.sampled_from([0.0, 1500.0, 4000.0]),
+        q=st.sampled_from([0.0, 1.0]),
+        recall=st.floats(0.3, 0.95),
+        precision=st.floats(0.3, 0.95),
+        seed=st.integers(0, 10_000),
+    )
+    def test_differential_engines(
+        mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed
+    ):
+        _check_differential(
+            mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed
+        )
+
+
+def test_fractional_trust_dispatch_invariance():
+    """Device trace mode draws trust coins from per-event counter
+    streams, so even fractional q is bit-identical between fused and
+    per-cell dispatch (host mode only promises distributional agreement
+    there)."""
+    grid = _make_grid(
+        mu_mn=800.0, c_mn=8.0, law_key="exp", mode="exact", window=0.0,
+        q=0.5, recall=0.8, precision=0.6, seed=77,
+    )
+    fused = run_grid(grid, engine="jax", trace_mode="device")
+    percell = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="percell"
+    )
+    _assert_lanes_equal(percell, fused, context="frac-q-device")
+    # and the trusted cell actually acts on some predictions
+    assert sum(c.mean_proactive_ckpts for c in fused.cells) > 0
+
+
+def test_fuzz_examples_budget_env():
+    """The nightly knob is wired: the example budget follows the env."""
+    assert N_EXAMPLES >= 1
+    assert math.isfinite(N_EXAMPLES)

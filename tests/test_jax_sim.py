@@ -670,3 +670,190 @@ def test_device_gen_empty_spec():
     strat = S.young(PLAT)
     assert simulate_batch(WORK, [], [], spec).n_lanes == 0
     assert simulate_batch_jax(WORK, [], [], spec).n_lanes == 0
+
+
+# ---------------------------------------------------------------------- #
+# cell multiplexing (fused experiment sweeps)
+# ---------------------------------------------------------------------- #
+def _cell_fixture(n_runs=4, seed=7):
+    """Three heterogeneous cells (different platforms, strategies,
+    predictors — one migration cell) as a cell-indexed TraceSpec plus
+    the per-lane expansion reference."""
+    plat2 = Platform(mu=500 * MN, C=5 * MN, D=1 * MN, R=5 * MN, M=3 * MN)
+    cells_plat = [PLAT, plat2, plat2]
+    cells_pred = [PREDW, PRED, PRED]
+    strats = [
+        S.instant(PLAT, PREDW), S.young(plat2), S.migration(plat2, PRED)
+    ]
+    cidx = np.repeat(np.arange(3, dtype=np.int32), n_runs)
+    spec = E.make_trace_spec(
+        3 * n_runs,
+        horizon=[12 * WORK] * 3,
+        mtbf=[p.mu for p in cells_plat],
+        recall=[p.recall for p in cells_pred],
+        precision=[p.precision for p in cells_pred],
+        window=[p.window for p in cells_pred],
+        lead=[p.lead for p in cells_pred],
+        seed=seed,
+        cell_index=cidx,
+    )
+    return cells_plat, strats, cidx, spec
+
+
+def test_cell_index_matches_per_lane_dispatch():
+    """The fused cell-table path gathers per-lane parameters on device;
+    results are bit-identical to the expanded per-lane call — the
+    gather is semantically invisible."""
+    cells_plat, strats, cidx, spec = _cell_fixture()
+    spec_lane = spec.expand()
+    assert spec.n_cells == 3 and spec_lane.cell_index is None
+    ref = simulate_batch_jax(
+        WORK, [cells_plat[c] for c in cidx], [strats[c] for c in cidx],
+        spec_lane,
+    )
+    got = simulate_batch_jax([WORK] * 3, cells_plat, strats, spec)
+    np.testing.assert_array_equal(ref.makespan, got.makespan)
+    np.testing.assert_array_equal(ref.n_faults, got.n_faults)
+    np.testing.assert_array_equal(ref.n_migrations, got.n_migrations)
+    np.testing.assert_array_equal(ref.n_proactive_ckpts, got.n_proactive_ckpts)
+    # chunk boundaries cut through cells without changing anything
+    for chunk in (5, 7):
+        chunked = simulate_batch_jax(
+            [WORK] * 3, cells_plat, strats, spec, chunk=chunk
+        )
+        np.testing.assert_array_equal(ref.makespan, chunked.makespan)
+
+
+def test_cell_stats_collect_matches_lane_reduction():
+    """collect='stats' segment-reduces per-cell moments on device; they
+    equal the host-side reduction of the per-lane results."""
+    from repro.core.jax_sim import CellSums
+
+    cells_plat, strats, cidx, spec = _cell_fixture()
+    ref = simulate_batch_jax([WORK] * 3, cells_plat, strats, spec)
+    st = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, spec, collect="stats"
+    )
+    assert isinstance(st, CellSums) and st.n_cells == 3
+    np.testing.assert_array_equal(st.n, [4, 4, 4])
+    for c in range(3):
+        sel = cidx == c
+        np.testing.assert_allclose(
+            st.mean_waste[c], ref.waste[sel].mean(), rtol=1e-12
+        )
+        np.testing.assert_allclose(
+            st.ci95_waste[c],
+            1.96 * ref.waste[sel].std(ddof=1) / np.sqrt(sel.sum()),
+            rtol=1e-9,
+        )
+        assert st.n_faults[c] == ref.n_faults[sel].sum()
+        assert st.n_migrations[c] == ref.n_migrations[sel].sum()
+    # stats collection is chunk-invariant too (sums accumulate across
+    # chunk boundaries that cut through cells)
+    st2 = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, spec, collect="stats", chunk=5
+    )
+    np.testing.assert_allclose(st.waste_sum, st2.waste_sum, rtol=1e-12)
+    np.testing.assert_array_equal(st.n, st2.n)
+
+
+@pytest.mark.parametrize("devices", [2, 8])
+def test_cell_index_device_count_invariance(devices):
+    """Fused cell tables replicate per device; per-lane results and the
+    per-cell segment sums are identical for any device count."""
+    if devices > _n_devices():
+        pytest.skip(f"needs {devices} devices, have {_n_devices()}")
+    cells_plat, strats, cidx, spec = _cell_fixture(n_runs=5)  # ragged shards
+    ref = simulate_batch_jax([WORK] * 3, cells_plat, strats, spec, devices=1)
+    got = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, spec, devices=devices
+    )
+    np.testing.assert_array_equal(ref.makespan, got.makespan)
+    st1 = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, spec, devices=1, collect="stats"
+    )
+    stn = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, spec, devices=devices,
+        collect="stats",
+    )
+    np.testing.assert_allclose(st1.waste_sum, stn.waste_sum, rtol=1e-12)
+    np.testing.assert_array_equal(st1.n, stn.n)
+
+
+def test_cell_index_host_traces():
+    """cell_index also tables the engine parameters over host-generated
+    BatchTraces (events stay per-lane): same results, and stats
+    collection works."""
+    cells_plat, strats, cidx, spec = _cell_fixture()
+    traces = spec.materialize()
+    ref = simulate_batch_jax(
+        WORK, [cells_plat[c] for c in cidx], [strats[c] for c in cidx],
+        traces,
+    )
+    got = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, traces, cell_index=cidx
+    )
+    np.testing.assert_array_equal(ref.makespan, got.makespan)
+    st = simulate_batch_jax(
+        [WORK] * 3, cells_plat, strats, traces, cell_index=cidx,
+        collect="stats",
+    )
+    for c in range(3):
+        np.testing.assert_allclose(
+            st.mean_waste[c], ref.waste[cidx == c].mean(), rtol=1e-12
+        )
+
+
+def test_cell_index_validation_errors():
+    cells_plat, strats, cidx, spec = _cell_fixture()
+    with pytest.raises(ValueError, match="cell_index"):
+        simulate_batch_jax(
+            [WORK] * 3, cells_plat, strats, spec,
+            cell_index=cidx[:5],  # wrong length
+        )
+    with pytest.raises(ValueError, match="cell-indexed"):
+        simulate_batch_jax(
+            [WORK] * 3, cells_plat, strats, spec.expand(), cell_index=cidx
+        )
+    with pytest.raises(ValueError, match="collect"):
+        simulate_batch_jax([WORK] * 3, cells_plat, strats, spec,
+                           collect="rows")
+    with pytest.raises(ValueError, match="cell_index"):
+        simulate_batch_jax(
+            WORK, PLAT, S.young(PLAT),
+            _traces_for(S.young(PLAT), PRED0, E.exponential(), n=2),
+            collect="stats",
+        )
+    bad = np.array(cidx)
+    bad[0] = 7  # out of the 3-cell table
+    with pytest.raises(ValueError, match="cell_index"):
+        simulate_batch_jax(
+            [WORK] * 3, cells_plat, strats, spec.materialize(),
+            cell_index=bad,
+        )
+    with pytest.raises(ValueError, match="cell_index"):
+        E.make_trace_spec(
+            4, horizon=1e6, mtbf=6e4, recall=0.5, precision=0.5,
+            cell_index=[0, 1],  # wrong shape
+        )
+
+
+def test_cell_spec_take_and_expand():
+    """take() on a cell-indexed spec selects lanes (table untouched);
+    expand() is the per-lane reference layout; materialize() routes
+    through it."""
+    cells_plat, strats, cidx, spec = _cell_fixture()
+    sub = spec.take([0, 4, 8, 9])
+    assert sub.n_lanes == 4 and sub.n_cells == 3
+    np.testing.assert_array_equal(sub.cell_index, [0, 1, 2, 2])
+    np.testing.assert_array_equal(sub.stream, spec.stream[[0, 4, 8, 9]])
+    full = spec.materialize()
+    part = sub.materialize()
+    assert part.n_faults[0] == full.n_faults[0]
+    nf = int(full.n_faults[0])
+    np.testing.assert_array_equal(
+        part.fault_times[0, :nf], full.fault_times[0, :nf]
+    )
+    np.testing.assert_array_equal(
+        part.horizon, spec.expand().horizon[[0, 4, 8, 9]]
+    )
