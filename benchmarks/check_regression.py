@@ -6,10 +6,13 @@ Figures 4-7 cells: analytic waste vs simulated waste) and ``jax_engine``
 
 * the *correctness* signal drifts: a cell's simulated waste moves away
   from the committed baseline (the sweep is seeded, so a drift means the
-  engine's semantics changed) or leaves the analytic-model envelope, or
-  the jax-vs-numpy engine disagreement exceeds float-rounding level; or
+  engine's semantics changed) or leaves the analytic-model envelope, the
+  jax-vs-numpy engine disagreement exceeds float-rounding level, or the
+  one-dispatch mixed-law grid stops matching its per-family baseline
+  bit-for-bit; or
 * the *performance* signal regresses: an engine's lanes/sec — or the
-  fused paper-grid sweep's cells/sec (``fused_cells_per_s``) — falls
+  fused paper-grid sweep's cells/sec (``fused_cells_per_s``) or the
+  mixed-law one-dispatch sweep's (``mixed_law_cells_per_s``) — falls
   more than ``--perf-tol`` (default 30%) below the committed
   ``BENCH_*.json`` baseline.
 
@@ -103,6 +106,18 @@ def compare(
                 f"{d['fused_vs_percell_max_diff']:.2e} > {agree_tol:.0e}"
             )
 
+        # correctness: the one-dispatch mixed-law grid and the
+        # per-family baseline run the same law-indexed sampler on the
+        # same counter streams, so their per-cell stats are bit-exact
+        if (
+            "fused_vs_perfamily_max_diff" in d
+            and d["fused_vs_perfamily_max_diff"] > 0.0
+        ):
+            failures.append(
+                f"{rec['name']}: fused-vs-perfamily stats diff "
+                f"{d['fused_vs_perfamily_max_diff']:.2e} != 0"
+            )
+
         # performance: lanes/sec (and the fused sweep's cells/sec)
         # within perf_tol of the baseline (the jax_dev floor gates the
         # device-generation trace mode, fused_cells_per_s the fused
@@ -111,6 +126,7 @@ def compare(
             for key in (
                 "jax_lanes_per_s", "numpy_lanes_per_s",
                 "jax_dev_lanes_per_s", "fused_cells_per_s",
+                "mixed_law_cells_per_s",
             ):
                 if key in d and key in bd and bd[key] > 0:
                     floor = (1.0 - perf_tol) * bd[key]

@@ -26,7 +26,7 @@ Implements the event model of the paper (Aupy, Robert, Vivien, Zaidouni,
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
@@ -47,6 +47,13 @@ __all__ = [
     "make_event_trace",
     "make_event_traces_batch",
     "make_trace_spec",
+    "LAW_INDEX",
+    "LAW_EXPONENTIAL",
+    "LAW_WEIBULL",
+    "LAW_LOGNORMAL",
+    "LAW_UNIFORM",
+    "law_table",
+    "gap_transform_indexed_np",
     "superposed_fault_times",
     "superposed_fault_times_batch",
     "mu_np",
@@ -919,6 +926,80 @@ def gap_transform_np(kind: str, param: float, mean, x0, x1):
     return np.maximum(g, 1e-9)
 
 
+#: law indices of the cell-table ``law_index`` column — the per-cell
+#: *data* encoding of the failure-law family (mixed-law fused dispatch)
+LAW_EXPONENTIAL, LAW_WEIBULL, LAW_LOGNORMAL, LAW_UNIFORM = range(4)
+
+#: ``Distribution.kind`` -> law index
+LAW_INDEX = {
+    "exponential": LAW_EXPONENTIAL,
+    "weibull": LAW_WEIBULL,
+    "lognormal": LAW_LOGNORMAL,
+    "uniform": LAW_UNIFORM,
+}
+
+
+def law_table(dists):
+    """Per-cell law table of a distribution sequence: ``(law, lp)`` with
+    ``law`` an ``(n,)`` int32 law-index column and ``lp`` an ``(n, 4)``
+    float64 unified parameter row ``[param, s1, s2, 0]``.
+
+    The shape slots are pre-folded exactly as the compile-time-specialized
+    transforms fold them (same Python-float expressions), so the indexed
+    samplers reproduce the specialized paths bit-for-bit: Weibull ``s1 =
+    1/Γ(1 + 1/k)``, ``s2 = 1/k``; lognormal ``s1 = σ``, ``s2 = σ²/2``;
+    exponential/uniform need no shape (all-zero slots).  Slot 3 is
+    reserved."""
+    dists = tuple(dists)
+    law = np.zeros(len(dists), np.int32)
+    lp = np.zeros((len(dists), 4), np.float64)
+    for i, d in enumerate(dists):
+        require_inverse_cdf(d)
+        law[i] = LAW_INDEX[d.kind]
+        if d.kind == "weibull":
+            lp[i, 0] = d.param
+            lp[i, 1] = 1.0 / math.gamma(1.0 + 1.0 / d.param)
+            lp[i, 2] = 1.0 / d.param
+        elif d.kind == "lognormal":
+            lp[i, 0] = d.param
+            lp[i, 1] = d.param
+            lp[i, 2] = 0.5 * d.param * d.param
+    return law, lp
+
+
+def gap_transform_indexed_np(law, s1, s2, mean, x0, x1):
+    """Law-multiplexed :func:`gap_transform_np` (NumPy reference; mirrors
+    :func:`repro.kernels.sim_step.gap_transform_indexed`): ``law`` selects
+    the family per element and ``(s1, s2)`` carry the pre-folded shape
+    slots of :func:`law_table`.  All inputs broadcast.  Every family's
+    branch evaluates (masked errstate) and a ``where`` chain selects — the
+    same select order as the jnp twin, and each branch the same expression
+    as the specialized transform, so a single-family slice is bit-identical
+    to :func:`gap_transform_np`."""
+    u = uniform24(x0)
+    nlog = -np.log1p(-u)
+    with np.errstate(over="ignore", invalid="ignore", divide="ignore"):
+        g_exp = nlog * mean
+        # mirror ndarray.__pow__'s scalar fast paths (x ** 2.0 -> x * x,
+        # x ** 0.5 -> sqrt) so the data-driven exponent reproduces the
+        # specialized transform's bits for those shapes too
+        p = np.power(nlog, s2)
+        p = np.where(s2 == 2.0, nlog * nlog, p)
+        p = np.where(s2 == 0.5, np.sqrt(nlog), p)
+        g_wei = (np.asarray(mean) * s1) * p
+        z = np.sqrt(-2.0 * np.log(u)) * np.cos(2.0 * np.pi * uniform24(x1))
+        g_log = np.exp(np.log(mean) - s2 + s1 * z)
+        g_uni = 2.0 * np.asarray(mean) * u
+    g = np.where(
+        law == LAW_WEIBULL, g_wei,
+        np.where(
+            law == LAW_LOGNORMAL, g_log,
+            np.where(law == LAW_UNIFORM, g_uni, g_exp),
+        ),
+    )
+    return np.maximum(g, 1e-9)
+
+
 def require_inverse_cdf(dist: Distribution) -> None:
     """Raise unless ``dist`` names a family the device sampler supports
     (single point of truth for the supported-family list)."""
@@ -978,7 +1059,17 @@ class TraceSpec:
     to the device instead of O(lanes) float64 per parameter.  Lane
     semantics are *identical* to :meth:`expand`'s per-lane view; host
     consumers go through ``expand()``, the device engine gathers rows by
-    ``cell_index`` on device."""
+    ``cell_index`` on device.
+
+    **Mixed-law layout**: ``fault_dist`` / ``false_pred_dist`` may each
+    be a *tuple* of distributions — one per cell row (or per lane in the
+    per-lane layout).  The failure law then rides the cell tables as data
+    (an int32 ``law_index`` column plus the unified 4-slot parameter row
+    of :func:`law_table`) and every consumer switches to the
+    law-multiplexed transform, so grids mixing exponential / Weibull /
+    lognormal / uniform families run as ONE device dispatch.  Build such
+    specs with :meth:`concat_cells` or by passing distribution sequences
+    to :func:`make_trace_spec`."""
 
     horizon: np.ndarray  # (L,) — or (n_cells,) when cell-indexed
     mtbf: np.ndarray  # (L,) | (n_cells,)
@@ -986,8 +1077,8 @@ class TraceSpec:
     precision: np.ndarray  # (L,) | (n_cells,)
     window: np.ndarray  # (L,) | (n_cells,)
     lead: np.ndarray  # (L,) | (n_cells,)
-    fault_dist: Distribution
-    false_pred_dist: Distribution
+    fault_dist: "Distribution | tuple"  # one per cell/lane when a tuple
+    false_pred_dist: "Distribution | tuple"
     seed: int
     stream: np.ndarray  # (L,) int64 global RNG stream ids
     cell_index: Optional[np.ndarray] = None  # (L,) int32 lane -> cell row
@@ -1009,6 +1100,14 @@ class TraceSpec:
         arrays (per-cell in the cell-indexed layout)."""
         return false_prediction_mtbf_batch(self.mtbf, self.recall, self.precision)
 
+    @staticmethod
+    def _gather_dists(d, rows):
+        """Row-gather a per-row distribution tuple (identity for the
+        shared-`Distribution` layout)."""
+        if isinstance(d, tuple):
+            return tuple(d[int(r)] for r in rows)
+        return d
+
     def expand(self) -> "TraceSpec":
         """Per-lane view of a cell-indexed spec (identity otherwise):
         parameter rows gathered by ``cell_index``, same streams — the
@@ -1020,7 +1119,8 @@ class TraceSpec:
             horizon=self.horizon[ci], mtbf=self.mtbf[ci],
             recall=self.recall[ci], precision=self.precision[ci],
             window=self.window[ci], lead=self.lead[ci],
-            fault_dist=self.fault_dist, false_pred_dist=self.false_pred_dist,
+            fault_dist=self._gather_dists(self.fault_dist, ci),
+            false_pred_dist=self._gather_dists(self.false_pred_dist, ci),
             seed=self.seed, stream=self.stream,
         )
 
@@ -1041,12 +1141,75 @@ class TraceSpec:
             horizon=self.horizon[rows], mtbf=self.mtbf[rows],
             recall=self.recall[rows], precision=self.precision[rows],
             window=self.window[rows], lead=self.lead[rows],
-            fault_dist=self.fault_dist, false_pred_dist=self.false_pred_dist,
+            fault_dist=self._gather_dists(self.fault_dist, rows),
+            false_pred_dist=self._gather_dists(self.false_pred_dist, rows),
             seed=self.seed, stream=self.stream[rows],
+        )
+
+    @classmethod
+    def concat_cells(cls, specs) -> "TraceSpec":
+        """Concatenate cell-indexed specs (one per failure-law family,
+        disjoint stream-id ranges, shared seed) into ONE mixed-law
+        cell-indexed spec: cell tables stack, lane ``cell_index`` offsets
+        into the stacked table, and the per-cell distribution tuples make
+        the law a data column — the single-dispatch input of the fused
+        mixed-law sweep.  Lane order is the concatenation order; every
+        lane keeps its stream id, so events are unchanged."""
+        specs = list(specs)
+        if not specs:
+            raise ValueError("concat_cells needs at least one spec")
+        seed = specs[0].seed
+        if any(s.seed != seed for s in specs):
+            raise ValueError("concat_cells requires a shared seed")
+        if any(s.cell_index is None for s in specs):
+            raise ValueError("concat_cells requires cell-indexed specs")
+
+        def rows(d, n):
+            return tuple(d) if isinstance(d, tuple) else (d,) * n
+
+        fd: list = []
+        fpd: list = []
+        ci = []
+        off = 0
+        for s in specs:
+            n = s.n_cells
+            fd += rows(s.fault_dist, n)
+            fpd += rows(s.false_pred_dist, n)
+            ci.append(s.cell_index.astype(np.int64) + off)
+            off += n
+
+        def cat(name):
+            return np.concatenate([getattr(s, name) for s in specs])
+
+        return cls(
+            horizon=cat("horizon"), mtbf=cat("mtbf"),
+            recall=cat("recall"), precision=cat("precision"),
+            window=cat("window"), lead=cat("lead"),
+            fault_dist=tuple(fd), false_pred_dist=tuple(fpd),
+            seed=seed, stream=cat("stream"),
+            cell_index=np.concatenate(ci).astype(np.int32),
         )
 
     def tile(self, reps: int) -> "TraceSpec":
         return self.take(np.tile(np.arange(self.n_lanes), reps))
+
+    def indexed(self) -> "TraceSpec":
+        """Force the law-indexed sampler: broadcast a shared
+        ``Distribution`` to the per-row tuple layout (identity when
+        already tuple-valued).  Events are drawn from the same streams
+        through the law-multiplexed transform instead of the
+        law-specialized one — the bit-exact control for
+        one-dispatch-vs-per-family dispatch comparisons."""
+        n = self.n_cells if self.cell_index is not None else self.n_lanes
+
+        def tup(d):
+            return d if isinstance(d, tuple) else (d,) * n
+
+        return replace(
+            self,
+            fault_dist=tup(self.fault_dist),
+            false_pred_dist=tup(self.false_pred_dist),
+        )
 
     def _grow_stream(self, kind: int, means: np.ndarray, max_events: int):
         """Replay one gap stream to (just past) every lane's horizon:
@@ -1056,6 +1219,10 @@ class TraceSpec:
         L = self.n_lanes
         key = stream_key64_np(self.seed, self.stream, kind)
         dist = self.fault_dist if kind == STREAM_FAULT_GAP else self.false_pred_dist
+        if isinstance(dist, tuple):  # mixed-law: per-lane law column
+            law, lp = law_table(dist)
+            law_c = law[:, None]
+            s1_c, s2_c = lp[:, 1][:, None], lp[:, 2][:, None]
         with np.errstate(invalid="ignore"):
             expected = np.where(
                 np.isfinite(means) & (means > 0), self.horizon / means, 0.0
@@ -1075,7 +1242,14 @@ class TraceSpec:
                 np.arange(start, start + K, dtype=np.int64), (L, K)
             )
             x0, x1 = splitmix64(key[:, None], ctr)
-            gaps = gap_transform_np(dist.kind, dist.param, means[:, None], x0, x1)
+            if isinstance(dist, tuple):
+                gaps = gap_transform_indexed_np(
+                    law_c, s1_c, s2_c, means[:, None], x0, x1
+                )
+            else:
+                gaps = gap_transform_np(
+                    dist.kind, dist.param, means[:, None], x0, x1
+                )
             # seed the cumulative sum with `last` so later blocks keep
             # the cursor's sequential (last + g1) + g2 association —
             # bit-identical to the device accumulation, not last + (g1+g2)
@@ -1174,8 +1348,8 @@ def make_trace_spec(
     precision,
     window=0.0,
     lead=math.inf,
-    fault_dist: Distribution | None = None,
-    false_pred_dist: Distribution | None = None,
+    fault_dist: "Distribution | Sequence[Distribution] | None" = None,
+    false_pred_dist: "Distribution | Sequence[Distribution] | None" = None,
     seed: int = 0,
     stream=None,
     cell_index=None,
@@ -1193,12 +1367,12 @@ def make_trace_spec(
     ``cell_index`` switches to the cell-indexed layout: the trace
     parameters then describe *cells* (broadcast to the cell-table length
     ``max(cell_index) + 1``) and ``n_traces`` lanes are mapped onto them
-    by ``cell_index[i]`` — see :class:`TraceSpec`."""
+    by ``cell_index[i]`` — see :class:`TraceSpec`.
+
+    ``fault_dist`` / ``false_pred_dist`` each also accept a *sequence* of
+    distributions — one per cell row (per lane without ``cell_index``) —
+    selecting the mixed-law layout."""
     L = int(n_traces)
-    fault_dist = fault_dist or exponential()
-    false_pred_dist = false_pred_dist or fault_dist
-    for d in (fault_dist, false_pred_dist):
-        require_inverse_cdf(d)
     if stream is None:
         stream = np.arange(L, dtype=np.int64)
     else:
@@ -1215,6 +1389,29 @@ def make_trace_spec(
         if L and cell_index.min() < 0:
             raise ValueError("cell_index entries must be >= 0")
         n_par = int(cell_index.max()) + 1 if L else 0
+
+    def _dists(d, name):
+        if isinstance(d, Distribution):
+            require_inverse_cdf(d)
+            return d
+        d = tuple(d)
+        if len(d) != n_par:
+            raise ValueError(
+                f"{name} sequence must have one entry per "
+                f"{'cell' if cell_index is not None else 'lane'} "
+                f"({n_par}), got {len(d)}"
+            )
+        for x in d:
+            require_inverse_cdf(x)
+        return d
+
+    fault_dist = _dists(
+        exponential() if fault_dist is None else fault_dist, "fault_dist"
+    )
+    false_pred_dist = _dists(
+        fault_dist if false_pred_dist is None else false_pred_dist,
+        "false_pred_dist",
+    )
     return TraceSpec(
         horizon=_bc(horizon, n_par),
         mtbf=_bc(mtbf, n_par),

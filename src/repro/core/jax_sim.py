@@ -34,12 +34,17 @@ jit-compiles to a single XLA while-loop, unlocking Monte-Carlo campaigns
   (:mod:`repro.kernels.sim_step`), interpret-mode off-TPU, with a
   pure-jnp fallback (``use_pallas=False``) that shares the same body.
 * **Lane-sharded multi-device dispatch** — lanes are mutually
-  independent, so ``devices=`` splits each chunk into equal per-device
-  shards and runs the *same* compiled step on every device through a
-  collective-free ``jax.pmap``; per-lane results are identical to the
+  independent, so ``devices=`` shards each chunk's lane axis across a
+  1-D ``("lanes",)`` mesh via ``shard_map`` (the ``jax.pmap`` runner it
+  replaces kept a leading device axis host-side; ``devices=``/``mesh=``
+  semantics are unchanged); per-lane results are identical to the
   single-device path for any device count (each lane executes the same
   primitive sequence regardless of which lanes co-reside), and each
-  device's while-loop exits as soon as its own shard finishes.
+  device's while-loop exits as soon as its own shard finishes.  Cell
+  tables ride along replicated; ``collect="stats"`` reduces per-cell
+  sums with one ``psum`` at chunk end into a *donated on-device
+  accumulator*, so per-lane slabs never cross the host boundary — the
+  host fetches O(cells) exactly once per call.
 * **Async double-buffered chunk pipeline** — chunk packing is pure host
   NumPy and dispatch is JAX-async, so the scheduler packs and ships
   chunk ``k+1`` while chunk ``k`` executes, then fetches results one
@@ -127,6 +132,7 @@ from __future__ import annotations
 import contextlib
 import os
 import warnings
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Sequence, Union
@@ -249,16 +255,28 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
             tt_key = subkey(E.STREAM_TP_TRUST)
             ft_key = subkey(E.STREAM_FP_TRUST)
 
+        # law-multiplexed sampling: when the chunk mixes failure laws the
+        # static (kind, param) specialization is replaced by per-lane law
+        # indices + slot parameters gathered from the cell tables, and the
+        # gap transform becomes a branchless select (gap_transform_indexed)
+        f_law = f_lp = fp_law = fp_lp = None
+        if f_kind == "indexed":
+            f_law = consts["fault_law"]
+            f_lp = (consts["fault_s1"], consts["fault_s2"])
+        if fp_kind == "indexed":
+            fp_law = consts["fp_law"]
+            fp_lp = (consts["fp_s1"], consts["fp_s2"])
+
         def adv_fault(m, ctr, tm):
             return stream_advance(
                 m, ctr, tm, fg_key, mtbf, horizon,
-                kind=f_kind, param=f_param,
+                kind=f_kind, param=f_param, law=f_law, lp=f_lp,
             )
 
         def adv_fp(m, ctr, tm):
             return stream_advance(
                 m, ctr, tm, fp_key, fp_mean, horizon,
-                kind=fp_kind, param=fp_param,
+                kind=fp_kind, param=fp_param, law=fp_law, lp=fp_lp,
             )
 
         def tp_consume(m, la_ctr, la_time, tp_t0, tp_ft, tp_ctr):
@@ -624,6 +642,8 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
             # strike cursor with one counter draw where faulted) is fused
             # into the hot-step kernel itself
             kw["stream"] = (fg_key, sf_ctr, sf_time, mtbf, horizon)
+            if f_kind == "indexed":
+                kw["stream"] += (f_law, f_lp[0], f_lp[1])
             kw["gap"] = (f_kind, f_param)
             t, saved, unsaved, period_work, flags, sf_ctr, sf_time = upd(
                 prim, cont, target, ckend, nf,
@@ -842,7 +862,13 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
     return final
 
 
-_RUN_CACHE: dict = {}
+#: in-process runner registry, LRU-capped: a long-lived process (the
+#: advisor-service path) sweeping many grid shapes would otherwise pin
+#: every compiled executable forever.  64 keys comfortably covers any
+#: one sweep's working set (pallas x migration x gen x device-set), and
+#: evicted runners recompile cheaply through the persistent cache.
+_RUN_CACHE: "OrderedDict" = OrderedDict()
+_RUN_CACHE_MAX = 64
 
 _cache_env_done = False
 
@@ -922,87 +948,180 @@ def _resolve_devices(devices, mesh) -> list:
     return devs
 
 
+class _ShardedRunner:
+    """shard_map dispatch of the engine step over a 1-D ``("lanes",)``
+    mesh.
+
+    Lanes are mutually independent, so every per-lane array is
+    partitioned on its lane axis while the O(cells) tables ride along
+    replicated — each device runs the exact single-device program on its
+    own shard (per-lane results are identical by construction, and each
+    device's while-loop exits as soon as its own lanes finish).  In
+    stats mode the per-cell segment sums are the *only* collective: one
+    ``psum`` at chunk end folds them into the donated replicated
+    accumulator, so nothing O(lanes) ever leaves the devices.
+
+    The wrapped ``shard_map`` needs in/out specs matching the exact
+    pytree structure, which varies with trace mode and migration state;
+    they are built lazily from the first chunk's keys (one jit per key
+    structure, cached)."""
+
+    def __init__(self, step, devs, gathered, stats):
+        from jax.sharding import Mesh
+
+        self._step = step
+        self._devs = devs
+        self._gathered = gathered
+        self._stats = stats
+        self.mesh = Mesh(np.asarray(devs), ("lanes",))
+        self._jitted = {}
+
+    def _pspec(self, key):
+        from jax.sharding import PartitionSpec as P
+
+        if key in self._gathered:
+            return P()  # replicated cell table
+        if key in ("F", "P0", "Pft", "Fcancel"):
+            return P(None, "lanes")  # (events, lanes) slab
+        return P("lanes")
+
+    def place(self, tree: dict) -> dict:
+        """Explicitly shard one packed chunk pytree onto the mesh (lane
+        arrays split, tables replicated) — no implicit transfers, so the
+        dispatch stays legal under ``jax.transfer_guard("disallow")``."""
+        import jax
+        from jax.sharding import NamedSharding
+
+        return {
+            k: jax.device_put(v, NamedSharding(self.mesh, self._pspec(k)))
+            for k, v in tree.items()
+        }
+
+    def __call__(self, consts, state, *acc):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        struct = (tuple(sorted(consts)), tuple(sorted(state)))
+        fn = self._jitted.get(struct)
+        if fn is None:
+            cspec = {k: self._pspec(k) for k in consts}
+            sspec = {k: self._pspec(k) for k in state}
+            step = self._step
+            if self._stats:
+                def body(c, s, a):
+                    cs = step(c, s)["cell_sums"]
+                    return a + jax.lax.psum(cs, "lanes")
+
+                fn = jax.jit(
+                    shard_map(
+                        body, mesh=self.mesh,
+                        in_specs=(cspec, sspec, P()), out_specs=P(),
+                        check_rep=False,
+                    ),
+                    donate_argnums=(1, 2),
+                )
+            else:
+                def body(c, s):
+                    final = step(c, s)
+                    return {k: final[k] for k in _OUT_KEYS}
+
+                fn = jax.jit(
+                    shard_map(
+                        body, mesh=self.mesh,
+                        in_specs=(cspec, sspec),
+                        out_specs={k: P("lanes") for k in _OUT_KEYS},
+                        check_rep=False,
+                    ),
+                    donate_argnums=(1,),
+                )
+            self._jitted[struct] = fn
+        return fn(consts, state, *acc)
+
+
 def _get_runner(
     use_pallas: bool, interpret: bool, max_iters: int, eps: float,
     has_migration: bool, devs, gen=None, gathered=(), n_seg=0,
+    stats=False,
 ):
     import jax
 
     key = (
         use_pallas, interpret, max_iters, eps, has_migration,
-        tuple(d.id for d in devs), gen, gathered, n_seg,
+        tuple(d.id for d in devs), gen, gathered, n_seg, stats,
     )
-    if key not in _RUN_CACHE:
-        step = partial(
-            _jit_run, use_pallas=use_pallas, interpret=interpret,
-            max_iters=max_iters, eps=eps, has_migration=has_migration,
-            gen=gen, gathered=gathered, n_seg=n_seg,
-        )
-        if len(devs) == 1:
-            _RUN_CACHE[key] = jax.jit(step, donate_argnums=(1,))
-        else:
-            # lane-sharded dispatch: lanes are mutually independent, so a
-            # collective-free pmap over per-device lane blocks runs the
-            # exact single-device program n_dev times — per-lane results
-            # are identical by construction, and each device's while-loop
-            # exits as soon as its own lanes finish
-            _RUN_CACHE[key] = jax.pmap(
-                step, devices=devs, donate_argnums=(1,)
-            )
-    return _RUN_CACHE[key]
+    runner = _RUN_CACHE.get(key)
+    if runner is not None:
+        _RUN_CACHE.move_to_end(key)
+        return runner
+    step = partial(
+        _jit_run, use_pallas=use_pallas, interpret=interpret,
+        max_iters=max_iters, eps=eps, has_migration=has_migration,
+        gen=gen, gathered=gathered, n_seg=n_seg,
+    )
+    if len(devs) > 1:
+        runner = _ShardedRunner(step, devs, gathered, stats)
+    elif stats:
+        # fold this chunk's per-cell sums into the donated on-device
+        # accumulator: the O(lanes) state never crosses the host boundary
+        def run_stats(consts, state, acc):
+            return acc + step(consts, state)["cell_sums"]
+
+        runner = jax.jit(run_stats, donate_argnums=(1, 2))
+    else:
+        runner = jax.jit(step, donate_argnums=(1,))
+    _RUN_CACHE[key] = runner
+    while len(_RUN_CACHE) > _RUN_CACHE_MAX:
+        _RUN_CACHE.popitem(last=False)
+    return runner
 
 
 #: per-lane result arrays pulled back from the device after each chunk
 _OUT_KEYS = ("t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase")
 
 
-def _chunk_state(sl: slice, n_dev: int, n_pad: int, fdt, idt):
+def _chunk_state(sl: slice, n_pad: int, fdt, idt):
     """Zeroed per-lane engine state of one chunk (padding lanes inert).
 
-    Returns ``(lanes, state)`` where ``lanes`` reshapes a packed
-    ``(n_pad,)`` array into the dispatch layout (a leading device axis
-    when sharded)."""
-    shard = n_pad // n_dev
-
-    def lanes(a):  # (n_pad,) -> (n_pad,) | (n_dev, shard)
-        return a if n_dev == 1 else a.reshape(n_dev, shard)
-
+    Every packed array is flat ``(n_pad,)`` regardless of device count —
+    the sharded dispatch partitions the lane axis through ``shard_map``
+    placement, not a host-side leading device axis."""
     n_real = sl.stop - sl.start
     phase = np.full(n_pad, B._PH_MAIN, np.int32)
     phase[n_real:] = B._PH_DONE  # padding lanes start inert
-    zf = lanes(np.zeros(n_pad, fdt))
-    zi = lanes(np.zeros(n_pad, idt))
+    zf = np.zeros(n_pad, fdt)
+    zi = np.zeros(n_pad, idt)
     state = {
         "t": zf, "saved": zf, "unsaved": zf, "period_work": zf,
         "na_saved": zf, "ep_t0": zf, "ep_end": zf,
         "n_faults": zi, "n_pro": zi, "n_reg": zi, "n_mig": zi,
-        "phase": lanes(phase),
-        "exhausted": lanes(np.zeros(n_pad, bool)),
+        "phase": phase,
+        "exhausted": np.zeros(n_pad, bool),
     }
-    return lanes, state
+    return state
 
 
 def _pack_scalar_chunk(
-    sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    sl: slice, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
     cidx=None, pad_cell=0,
 ):
     """Shared scalar packing of one lane chunk (pure NumPy): the
     per-lane engine constants and zeroed lane state common to both trace
-    modes.  Returns ``(lanes, fvec, consts, state)`` — the layout
-    helpers so callers can append their mode-specific arrays.
+    modes.  Returns ``(fvec, consts, state)`` — the padding helper so
+    callers can append their mode-specific arrays.
 
     ``cidx`` (fused sweeps, per-lane trace layouts) appends the lane ->
     cell index used by the device-side per-cell segment reduction;
     padding lanes map to the sacrificial ``pad_cell`` row."""
-    lanes, state = _chunk_state(sl, n_dev, n_pad, fdt, idt)
+    state = _chunk_state(sl, n_pad, fdt, idt)
 
     def fvec(x, fill=0.0):
-        return lanes(pad_lane_axis(x[sl], n_pad, fill).astype(fdt))
+        return pad_lane_axis(x[sl], n_pad, fill).astype(fdt)
 
     Ch = fvec(C, 1.0)
     Mh = fvec(M, 1.0)
-    modeh = lanes(pad_lane_axis(mode[sl], n_pad, 0).astype(np.int32))
+    modeh = pad_lane_axis(mode[sl], n_pad, 0).astype(np.int32)
     T_Rh = fvec(T_R, 2.0)
     windowh = fvec(window)
     consts = {
@@ -1019,19 +1138,13 @@ def _pack_scalar_chunk(
         "tp_eff_default": np.maximum(Ch, windowh),
     }
     if cidx is not None:
-        consts["cidx"] = lanes(
-            pad_lane_axis(cidx[sl].astype(np.int32), n_pad, pad_cell)
+        consts["cidx"] = pad_lane_axis(
+            cidx[sl].astype(np.int32), n_pad, pad_cell
         )
-    return lanes, fvec, consts, state
+    return fvec, consts, state
 
 
-def _rep(a: np.ndarray, n_dev: int) -> np.ndarray:
-    """Replicate a cell table across the device axis of a sharded
-    dispatch (every device reads the full table)."""
-    return a if n_dev == 1 else np.broadcast_to(a, (n_dev,) + a.shape)
-
-
-def _stream_consts(spec: TraceSpec, sl: slice, lanes, n_pad: int) -> dict:
+def _stream_consts(spec: TraceSpec, sl: slice, n_pad: int) -> dict:
     """Per-lane RNG stream identity of one chunk: the two seed words and
     the two halves of the 64-bit stream id.  This layout is *the*
     invariant that makes device-generated results chunk-, device-count-
@@ -1039,7 +1152,7 @@ def _stream_consts(spec: TraceSpec, sl: slice, lanes, n_pad: int) -> dict:
     implementation."""
 
     def uvec(x):
-        return lanes(pad_lane_axis(x, n_pad, 0).astype(np.uint32))
+        return pad_lane_axis(x, n_pad, 0).astype(np.uint32)
 
     stream = spec.stream[sl]
     return dict(
@@ -1057,6 +1170,7 @@ def _stream_consts(spec: TraceSpec, sl: slice, lanes, n_pad: int) -> dict:
 _CELL_TABLE_KEYS = (
     "W", "C", "DR", "T_R", "T_P", "mode", "horizon", "window",
     "wpp", "lead_act", "tp_eff_default", "mtbf", "fp_mean", "recall", "q_eff",
+    "fault_law", "fault_s1", "fault_s2", "fp_law", "fp_s1", "fp_s2",
 )
 
 
@@ -1064,6 +1178,7 @@ def _cell_tables(
     n_cells: int, n_tab: int, fdt,
     W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
     mtbf=None, fp_mean=None, recall=None, q_eff=None,
+    fault_laws=None, fp_laws=None,
 ) -> dict:
     """Per-cell engine-parameter tables of a fused sweep (pure NumPy).
 
@@ -1104,30 +1219,48 @@ def _cell_tables(
             recall=tab(recall),
             q_eff=tab(q_eff),
         )
+    if fault_laws is not None:
+        # law multiplexing: int32 law index + the two slot parameters of
+        # the branchless indexed gap transform, one row per cell (pad
+        # rows are benign exponential / zero-slot rows)
+        law, lp = fault_laws
+        tables.update(
+            fault_law=tab(law, 0, np.int32),
+            fault_s1=tab(lp[:, 1]),
+            fault_s2=tab(lp[:, 2]),
+        )
+    if fp_laws is not None:
+        law, lp = fp_laws
+        tables.update(
+            fp_law=tab(law, 0, np.int32),
+            fp_s1=tab(lp[:, 1]),
+            fp_s2=tab(lp[:, 2]),
+        )
     return tables
 
 
 def _pack_chunk_spec_cells(
     tables: dict, spec: TraceSpec, cidx, pad_cell: int,
-    sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    sl: slice, n_pad: int, fdt, idt,
 ):
     """Chunk packing of the fused (cell-indexed) TraceSpec dispatch.
 
-    The engine parameters travel as O(cells) tables (replicated per
-    device); the only per-lane payload is the int32 cell index plus the
-    RNG stream identity — the leanest possible packing, which is what
-    lets one dispatch carry an entire paper grid."""
-    lanes, state = _chunk_state(sl, n_dev, n_pad, fdt, idt)
-    consts = {k: _rep(v, n_dev) for k, v in tables.items()}
-    consts["cidx"] = lanes(
-        pad_lane_axis(cidx[sl].astype(np.int32), n_pad, pad_cell)
+    The engine parameters travel as O(cells) tables (replicated across
+    devices by the shard_map placement); the only per-lane payload is
+    the int32 cell index plus the RNG stream identity — the leanest
+    possible packing, which is what lets one dispatch carry an entire
+    paper grid."""
+    state = _chunk_state(sl, n_pad, fdt, idt)
+    consts = dict(tables)
+    consts["cidx"] = pad_lane_axis(
+        cidx[sl].astype(np.int32), n_pad, pad_cell
     )
-    consts.update(_stream_consts(spec, sl, lanes, n_pad))
+    consts.update(_stream_consts(spec, sl, n_pad))
     return consts, state
 
 
 def _pack_chunk(
-    has_migration: bool, sl: slice, n_dev: int, n_pad: int, fdt, idt,
+    has_migration: bool, sl: slice, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
     cidx=None, pad_cell=0,
 ):
@@ -1135,39 +1268,35 @@ def _pack_chunk(
 
     Pure NumPy — no device work — so the async pipeline can pack chunk
     ``k+1`` while chunk ``k`` runs on the devices.  ``n_pad`` is the
-    total padded lane count (``n_dev`` equal shards); sharded arrays gain
-    a leading device axis for the pmap dispatch."""
-    shard = n_pad // n_dev
-    lanes, fvec, consts, state = _pack_scalar_chunk(
-        sl, n_dev, n_pad, fdt, idt,
+    total padded lane count; the sharded dispatch splits the lane axis
+    at placement time."""
+    fvec, consts, state = _pack_scalar_chunk(
+        sl, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, horizon, window, np.inf,
         cidx=cidx, pad_cell=pad_cell,
     )
 
-    def events(a):  # (n_pad, E) -> (E, n_pad) | (n_dev, E, shard)
+    def events(a):  # (n_pad, E) -> (E, n_pad)
         # (events, lanes) device layout — see the gather note in _jit_run
-        if n_dev == 1:
-            return np.ascontiguousarray(a.T)
-        return np.ascontiguousarray(
-            a.reshape(n_dev, shard, a.shape[1]).transpose(0, 2, 1)
-        )
+        return np.ascontiguousarray(a.T)
 
     consts.update(
         F=events(pad_lane_axis(F[sl], n_pad, np.inf).astype(fdt)),
         P0=events(pad_lane_axis(P0[sl], n_pad, np.inf).astype(fdt)),
         Pft=events(pad_lane_axis(Pft[sl], n_pad, np.nan).astype(fdt)),
     )
-    state["fi"] = lanes(np.zeros(n_pad, np.int32))
-    state["pi"] = lanes(np.zeros(n_pad, np.int32))
+    state["fi"] = np.zeros(n_pad, np.int32)
+    state["pi"] = np.zeros(n_pad, np.int32)
     if has_migration:
-        state["ep_ft"] = lanes(np.full(n_pad, np.nan, fdt))
+        state["ep_ft"] = np.full(n_pad, np.nan, fdt)
         state["Fcancel"] = np.zeros(consts["F"].shape, bool)
     return consts, state
 
 
 def _pack_chunk_spec(
-    spec: TraceSpec, fp_mean, q_eff, sl: slice, n_dev: int, n_pad: int,
+    spec: TraceSpec, fp_mean, q_eff, sl: slice, n_pad: int,
     fdt, idt, W, C, D, R, M, T_R, T_P, mode, cidx=None, pad_cell=0,
+    f_laws=None, fp_laws=None,
 ):
     """Host-side packing of one lane chunk of a per-lane :class:`TraceSpec`.
 
@@ -1176,9 +1305,11 @@ def _pack_chunk_spec(
     the jitted program from the per-lane stream ids, so the async
     pipeline's packing leg is essentially free in device trace mode.
     Padding lanes get horizon -1: every stream dies on its first draw
-    (gaps are >= 1e-9), so inert lanes never sample."""
-    lanes, fvec, consts, state = _pack_scalar_chunk(
-        sl, n_dev, n_pad, fdt, idt,
+    (gaps are >= 1e-9), so inert lanes never sample.  ``f_laws`` /
+    ``fp_laws`` (mixed-law per-lane specs) append the per-lane law index
+    and slot parameters of the indexed gap transform."""
+    fvec, consts, state = _pack_scalar_chunk(
+        sl, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, spec.horizon, spec.window, -1.0,
         cidx=cidx, pad_cell=pad_cell,
     )
@@ -1189,29 +1320,40 @@ def _pack_chunk_spec(
         recall=fvec(spec.recall),
         q_eff=fvec(q_eff),
     )
-    consts.update(_stream_consts(spec, sl, lanes, n_pad))
+    if f_laws is not None:
+        law, lp = f_laws
+        consts.update(
+            fault_law=pad_lane_axis(
+                law[sl].astype(np.int32), n_pad, 0
+            ),
+            fault_s1=fvec(lp[:, 1]),
+            fault_s2=fvec(lp[:, 2]),
+        )
+    if fp_laws is not None:
+        law, lp = fp_laws
+        consts.update(
+            fp_law=pad_lane_axis(law[sl].astype(np.int32), n_pad, 0),
+            fp_s1=fvec(lp[:, 1]),
+            fp_s2=fvec(lp[:, 2]),
+        )
+    consts.update(_stream_consts(spec, sl, n_pad))
     return consts, state
 
 
-def _dispatch(runner, devs, consts, state):
-    """Ship one packed chunk to the device(s) and start it (async)."""
+def _dispatch(runner, devs, consts, state, *acc):
+    """Ship one packed chunk to the device(s) and start it (async).
+
+    All transfers are explicit ``device_put``s (sharded placement through
+    the runner's mesh when dispatch is multi-device), so engine dispatch
+    is legal under ``jax.transfer_guard("disallow")``."""
     import jax
 
-    if len(devs) == 1:
+    if isinstance(runner, _ShardedRunner):
+        consts = runner.place(consts)
+        state = runner.place(state)
+    else:
         consts = jax.device_put(consts, devs[0])
         state = jax.device_put(state, devs[0])
-    else:
-        try:  # explicit per-device placement when available
-            tm = jax.tree_util.tree_map
-            consts, state = (
-                jax.device_put_sharded(
-                    [tm(lambda a: a[i], tree) for i in range(len(devs))],
-                    devs,
-                )
-                for tree in (consts, state)
-            )
-        except AttributeError:  # pragma: no cover - pmap splits host arrays
-            pass
     with warnings.catch_warnings():
         # state buffers are donated (packed fresh per chunk), but CPU
         # lacks donation: scope the advisory's suppression to this call
@@ -1219,32 +1361,35 @@ def _dispatch(runner, devs, consts, state):
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable"
         )
-        return runner(consts, state)
+        return runner(consts, state, *acc)
 
 
-def _fetch(final, n_real: int, want_lanes: bool = True):
-    """Pull one dispatched chunk's results back to the host.
+def _acc_init(n_seg: int, fdt, devs):
+    """Zeroed on-device ``(n_seg, 11)`` CellSums accumulator.
 
-    ``want_lanes=False`` (the ``collect="stats"`` path) fetches only the
-    per-cell segment sums — O(cells) D2H traffic per chunk instead of
-    O(lanes); convergence is then checked from the reduced
-    phase-not-done column."""
-    keys = _OUT_KEYS if want_lanes else ()
-    for k in keys:  # overlap the D2H copies across arrays
+    Donated through every chunk dispatch of a ``collect="stats"`` call
+    (replicated across the lane mesh when sharded) and explicitly
+    fetched exactly once at the end — the only O(cells) D2H of the
+    whole call."""
+    import jax
+
+    z = np.zeros((n_seg, 11), fdt)
+    if len(devs) == 1:
+        return jax.device_put(z, devs[0])
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.asarray(devs), ("lanes",))
+    return jax.device_put(z, NamedSharding(mesh, PartitionSpec()))
+
+
+def _fetch(final, n_real: int):
+    """Pull one dispatched chunk's per-lane results back to the host."""
+    for k in _OUT_KEYS:  # overlap the D2H copies across arrays
         final[k].copy_to_host_async()
-    if not want_lanes:
-        final["cell_sums"].copy_to_host_async()
-    out = {k: np.asarray(final[k]).reshape(-1)[:n_real] for k in keys}
-    if want_lanes:
-        if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
-            raise RuntimeError("jax batch simulator did not converge")
-        return out
-    cs = np.asarray(final["cell_sums"], np.float64)
-    if cs.ndim == 3:  # sharded dispatch: per-device partial sums
-        cs = cs.sum(axis=0)
-    if cs[:, _CS_NOTDONE].sum() != 0.0:  # pragma: no cover
+    out = {k: np.asarray(final[k])[:n_real] for k in _OUT_KEYS}
+    if not (out.pop("phase") == B._PH_DONE).all():  # pragma: no cover
         raise RuntimeError("jax batch simulator did not converge")
-    return {"cell_sums": cs}
+    return out
 
 
 #: column order of the device-side per-cell segment reduction
@@ -1347,13 +1492,18 @@ def simulate_batch_jax(
     ``n_cells``) instead of lanes.  With a cell-indexed
     :class:`TraceSpec` (required in device trace mode; defaulting
     ``cell_index`` from the spec) the engine parameters ship as O(cells)
-    tables gathered on device, so one dispatch — and one compiled
-    executable per failure-law family — can run an entire paper grid
-    with lanes from many cells interleaved across chunks and shards.
-    Per-lane results are bit-identical to the equivalent per-lane call.
-    ``collect="stats"`` additionally segment-reduces per-cell
-    Monte-Carlo sums on device and returns a :class:`CellSums` (O(cells)
-    fetch) instead of per-lane arrays.
+    tables gathered on device.  The failure law itself is one of those
+    tables: a cell-indexed spec may carry one ``Distribution`` *per
+    cell* (tuple-valued ``fault_dist`` / ``false_pred_dist``), sampled
+    through the branchless law-indexed gap transform — so ONE dispatch
+    and one compiled executable per grid *shape* can run an entire
+    mixed-law paper grid with lanes from many cells interleaved across
+    chunks and shards.  Per-lane results are bit-identical to the
+    equivalent per-lane call.  ``collect="stats"`` additionally
+    segment-reduces per-cell Monte-Carlo sums on device into a donated
+    accumulator and returns a :class:`CellSums` (one O(cells) fetch per
+    call; per-lane arrays never reach the host) instead of per-lane
+    arrays.
 
     Parameters beyond the NumPy engine's:
 
@@ -1379,8 +1529,10 @@ def simulate_batch_jax(
                 default device; "all": every local device; an int n: the
                 first n local devices; or an explicit device sequence).
                 Lanes are independent, so the sharded dispatch is a
-                collective-free pmap and per-lane results are *identical*
-                to the single-device path for any device count.
+                shard_map over a 1-D lane mesh (collective-free except
+                for the single stats psum) and per-lane results are
+                *identical* to the single-device path for any device
+                count.
     mesh        a ``jax.sharding.Mesh``; shorthand for ``devices=`` over
                 its (flattened) device set.  Mutually exclusive with
                 ``devices=``.
@@ -1459,19 +1611,33 @@ def simulate_batch_jax(
     t_pack = t_dispatch = t_fetch = 0.0
     t0 = _time.monotonic()
     if is_spec:
-        for d in (traces.fault_dist, traces.false_pred_dist):
+        def _dist_static(d):
+            # mixed-law specs carry one Distribution per cell (or lane):
+            # the static (kind, param) specialization collapses to the
+            # "indexed" sentinel and the laws travel as data tables
+            if isinstance(d, tuple):
+                for x in d:
+                    E.require_inverse_cdf(x)
+                return "indexed", 0.0
             E.require_inverse_cdf(d)
+            return d.kind, float(d.param)
+
+        f_kind, f_param = _dist_static(traces.fault_dist)
+        fp_kind, fp_param = _dist_static(traces.false_pred_dist)
+        f_laws = (
+            E.law_table(traces.fault_dist) if f_kind == "indexed" else None
+        )
+        fp_laws = (
+            E.law_table(traces.false_pred_dist)
+            if fp_kind == "indexed" else None
+        )
         # engine-side trust: mode "none" / q<=0 sees no predictions,
         # fractional q thins both prediction streams via trust coins
         # (per-cell arrays in the fused layout — the gathered per-lane
         # values are identical, so is the compiled program)
         q_eff = np.where(mode == B._M_NONE, 0.0, np.clip(q, 0.0, 1.0))
         frac_q = bool(((q_eff > 0.0) & (q_eff < 1.0)).any())
-        gen = (
-            traces.fault_dist.kind, float(traces.fault_dist.param),
-            traces.false_pred_dist.kind, float(traces.false_pred_dist.param),
-            frac_q,
-        )
+        gen = (f_kind, f_param, fp_kind, fp_param, frac_q)
         fp_mean = traces.fp_mean
         F = P0 = Pft = None
     else:
@@ -1528,7 +1694,9 @@ def simulate_batch_jax(
     if celled:
         n_tab = max(8, 1 << int(n_cells).bit_length())
         gathered = _CELL_TABLE_KEYS if spec_celled else ()
-        n_seg = n_tab
+        # the per-cell segment reduction only runs when its output is
+        # wanted; lanes-mode celled dispatches skip the reduction work
+        n_seg = n_tab if collect == "stats" else 0
     else:
         n_tab = 0
         gathered, n_seg = (), 0
@@ -1544,7 +1712,15 @@ def simulate_batch_jax(
                 traces.horizon, traces.window, -1.0,
                 mtbf=traces.mtbf, fp_mean=fp_mean,
                 recall=traces.recall, q_eff=q_eff,
+                fault_laws=f_laws, fp_laws=fp_laws,
             )
+        acc = None
+        if not want_lanes:
+            # per-cell sums accumulate *on device* across chunks (a
+            # cell's lanes may straddle chunk boundaries): the donated
+            # accumulator is carried through every dispatch and fetched
+            # exactly once after the loop
+            acc = _acc_init(n_seg, fdt, devs)
         outs = []
         pend = None  # the chunk in flight: (dispatched pytree, n_real)
         n_chunks = 0
@@ -1561,37 +1737,45 @@ def simulate_batch_jax(
                 has_mig = bool((mode[sl] == B._M_MIGRATION).any())
             runner = _get_runner(
                 use_pallas, interpret, max_iters, float(_EPS), has_mig,
-                devs, gen, gathered, n_seg,
+                devs, gen, gathered, n_seg, stats=not want_lanes,
             )
             t0 = _time.monotonic()
             if spec_celled:
                 consts, state = _pack_chunk_spec_cells(
                     tables, traces, cidx_g, n_cells,
-                    sl, n_dev, n_pad, fdt, idt,
+                    sl, n_pad, fdt, idt,
                 )
             elif is_spec:
                 consts, state = _pack_chunk_spec(
-                    traces, fp_mean, q_eff, sl, n_dev, n_pad, fdt, idt,
+                    traces, fp_mean, q_eff, sl, n_pad, fdt, idt,
                     W, C, D, R, M, T_R, T_P, mode,
+                    f_laws=f_laws, fp_laws=fp_laws,
                 )
             else:
                 consts, state = _pack_chunk(
-                    has_mig, sl, n_dev, n_pad, fdt, idt,
+                    has_mig, sl, n_pad, fdt, idt,
                     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
                     traces.horizon, traces.window,
                     cidx=cidx_g if celled else None, pad_cell=n_cells,
                 )
             t_pack += _time.monotonic() - t0
             t0 = _time.monotonic()
-            disp = _dispatch(runner, devs, consts, state)
-            t_dispatch += _time.monotonic() - t0
-            if pend is not None:  # fetch one chunk behind the dispatch
-                t0 = _time.monotonic()
-                outs.append(_fetch(*pend, want_lanes=want_lanes))
-                t_fetch += _time.monotonic() - t0
-            pend = (disp, sl.stop - sl.start)
+            if want_lanes:
+                disp = _dispatch(runner, devs, consts, state)
+                t_dispatch += _time.monotonic() - t0
+                if pend is not None:  # fetch one chunk behind the dispatch
+                    t0 = _time.monotonic()
+                    outs.append(_fetch(*pend))
+                    t_fetch += _time.monotonic() - t0
+                pend = (disp, sl.stop - sl.start)
+            else:
+                acc = _dispatch(runner, devs, consts, state, acc)
+                t_dispatch += _time.monotonic() - t0
         t0 = _time.monotonic()
-        outs.append(_fetch(*pend, want_lanes=want_lanes))
+        if want_lanes:
+            outs.append(_fetch(*pend))
+        else:
+            cs = np.asarray(jax.device_get(acc), np.float64)
         t_fetch += _time.monotonic() - t0
     LAST_TIMINGS.clear()
     LAST_TIMINGS.update(
@@ -1600,11 +1784,8 @@ def simulate_batch_jax(
         n_chunks=n_chunks,
     )
     if not want_lanes:
-        # per-cell sums accumulate across chunks (a cell's lanes may
-        # straddle chunk boundaries); the pad rows are dropped here
-        cs = np.zeros_like(outs[0]["cell_sums"])
-        for o in outs:
-            cs += o["cell_sums"]
+        if cs[:n_cells, _CS_NOTDONE].sum() != 0.0:  # pragma: no cover
+            raise RuntimeError("jax batch simulator did not converge")
         return CellSums.from_matrix(cs[:n_cells])
     cat = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
     return BatchResult(

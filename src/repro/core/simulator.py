@@ -521,27 +521,68 @@ def best_period_search(
     seed: int = 0,
     fault_dist: Optional[Distribution] = None,
     grid: Sequence[float] = (0.25, 0.4, 0.6, 0.8, 1.0, 1.25, 1.6, 2.0, 3.0, 4.0),
+    engine: str = "batch",
+    devices=None,
+    mesh=None,
 ) -> tuple[float, float]:
     """BestPeriod counterpart (Section 5): brute-force the regular period.
 
     All period multipliers are evaluated on identical traces in a single
     batched engine call (lanes = multipliers x runs).
 
-    Returns ``(best_T_R, best_mean_waste)``."""
-    from .batch_sim import simulate_batch
+    ``engine="jax"`` routes the period x runs lane block through the
+    fused device engine as one cell-multiplexed ``collect="stats"``
+    dispatch (one cell per candidate period, ``devices=``/``mesh=``
+    shard the lanes): the per-period mean wastes come back as O(periods)
+    device-reduced sums and no O(lanes) result arrays are ever
+    materialized on the host.  Both engines consume identical traces, so
+    they agree on the argmin (waste agrees to float rounding); if jax is
+    unavailable the batch engine is used as a fallback.
 
+    Returns ``(best_T_R, best_mean_waste)``."""
+    if engine not in ("batch", "jax"):
+        raise ValueError(
+            f"unknown engine {engine!r} (expected 'batch' or 'jax')"
+        )
+    if engine == "jax":
+        try:
+            import jax  # noqa: F401
+
+            from .jax_sim import simulate_batch_jax
+        except ImportError:  # pragma: no cover - jax is a soft dependency
+            engine = "batch"
     rng = np.random.default_rng(seed)
     traces = _traces_for(
         work, platform, base, pred, n_runs, rng, fault_dist, None, 12.0,
         None, False,
     )
     periods = [max(platform.C * 1.01, base.T_R * m) for m in grid]
-    strats: List[Strategy] = []
-    for t_r in periods:
-        strats.extend(
-            [Strategy(base.name, t_r, base.q, base.mode, base.T_P)] * n_runs
+    if engine == "jax":
+        strats_c = [
+            Strategy(base.name, t_r, base.q, base.mode, base.T_P)
+            for t_r in periods
+        ]
+        cidx = np.repeat(
+            np.arange(len(periods), dtype=np.int32), n_runs
         )
-    res = simulate_batch(work, platform, strats, traces.tile(len(grid)), rng=rng)
-    mean_waste = res.waste.reshape(len(grid), n_runs).mean(axis=1)
+        sums = simulate_batch_jax(
+            [work] * len(periods), [platform] * len(periods), strats_c,
+            traces.tile(len(grid)), rng=rng, cell_index=cidx,
+            collect="stats", devices=devices, mesh=mesh,
+        )
+        mean_waste = sums.mean_waste
+    else:
+        from .batch_sim import simulate_batch
+
+        strats: List[Strategy] = []
+        for t_r in periods:
+            strats.extend(
+                [Strategy(base.name, t_r, base.q, base.mode, base.T_P)]
+                * n_runs
+            )
+        res = simulate_batch(
+            work, platform, strats, traces.tile(len(grid)), rng=rng
+        )
+        mean_waste = res.waste.reshape(len(grid), n_runs).mean(axis=1)
     gi = int(np.argmin(mean_waste))
     return periods[gi], float(mean_waste[gi])

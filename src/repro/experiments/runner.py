@@ -33,16 +33,34 @@ Fused vs per-cell dispatch
 experiment cell a *lane-level axis* of the engine: strategy, period,
 checkpoint costs, predictor parameters and trust ship as per-cell tables
 broadcast on device through an int32 per-lane cell index
-(``simulate_batch_jax(cell_index=...)``), so one device dispatch — one
-compiled executable per failure-law family, since the distribution branch
-specializes compilation — runs the entire grid with lanes from many cells
-interleaved across chunks and shards.  ``dispatch="percell"`` launches one
-engine call per cell instead (the pre-fusion baseline the fused-sweep
-benchmark is measured against, and a differential-validation path: paired
+(``simulate_batch_jax(cell_index=...)``), so one device dispatch runs the
+entire grid with lanes from many cells interleaved across chunks and
+shards.  In device trace mode the failure law is part of those tables
+too: a grid mixing exponential / Weibull / lognormal families
+concatenates its per-family specs (:meth:`TraceSpec.concat_cells`) and
+runs as literally ONE dispatch through the law-indexed sampler — one
+compiled executable per grid *shape*, not per family.  (A single-family
+grid keeps the law-specialized sampler: same results, slightly cheaper
+draws.)
+
+``dispatch="perfamily"`` (jax engine, device trace mode) is the
+pre-fusion baseline the mixed-law benchmark is measured against: one
+engine call per trace-compatibility group, paying k executables, k host
+round-trips and k pipeline drains on a k-family grid.  Its specs are
+tuple-ized (:meth:`TraceSpec.indexed`) so both dispatch granularities
+run the *same* law-indexed sampler — per-lane results (and device-
+reduced stats) are bit-identical to the one-dispatch path by
+construction, which is what the benchmark equality gate asserts.
+
+``dispatch="percell"`` launches one engine call per cell instead (the
+original pre-fusion baseline, and a differential-validation path: paired
 per-lane RNG streams make both dispatches bit-identical in device trace
-mode and for the deterministic trust settings ``q in {0, 1}`` in host
-mode; fractional-``q`` host-mode trust coins are drawn per engine call and
-agree only in distribution).
+mode for single-family grids and for the deterministic trust settings
+``q in {0, 1}`` in host mode; fractional-``q`` host-mode trust coins are
+drawn per engine call and agree only in distribution; on *mixed*-law
+grids percell runs law-specialized samplers whose lognormal draws can
+differ from the fused path's law-indexed transform by XLA
+fusion-context rounding, ~1e-12 relative).
 
 ``collect="stats"`` (jax engine) segment-reduces each cell's waste /
 makespan / event-counter moments *on device* and fetches O(cells) sums
@@ -280,20 +298,21 @@ def run_grid(
 
     ``trace_mode="device"`` replaces host trace generation with per-lane
     counter-based RNG streams (:class:`~repro.core.events.TraceSpec`):
-    the JAX engine samples events lazily on the device (one engine
-    dispatch per trace-compatibility group, since the failure law
-    specializes the compiled sampler), while the batch/scalar engines
-    replay the identical streams host-side.  The paired design is
+    the JAX engine samples events lazily on the device — mixed-law grids
+    fuse into ONE dispatch through the law-indexed sampler — while the
+    batch/scalar engines replay the identical streams host-side.  The paired design is
     preserved (cells sharing trace parameters share stream ids), and
     results are chunk-size and device-count invariant.  Not supported
     for the legacy engine or superposed (``n_components``) traces.
 
     ``dispatch`` selects "fused" (default for batched engines: the whole
-    grid rides one cell-multiplexed engine call per failure-law family)
-    or "percell" (one engine call per cell — the pre-fusion baseline;
-    identical per-cell results, see the module docstring).  The legacy
-    engine is inherently per-cell.  ``collect="stats"`` (jax only)
-    fetches device-reduced per-cell statistics instead of per-run
+    grid — all failure-law families included in device trace mode —
+    rides ONE cell-multiplexed engine call), "perfamily" (jax + device
+    trace mode: one call per trace-compatibility group through the same
+    law-indexed sampler — the bit-exact pre-fusion baseline), or
+    "percell" (one engine call per cell; see the module docstring).  The
+    legacy engine is inherently per-cell.  ``collect="stats"`` (jax
+    only) fetches device-reduced per-cell statistics instead of per-run
     arrays."""
     if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
@@ -310,12 +329,20 @@ def run_grid(
         raise ValueError("trace_mode='device' requires a batched engine")
     if dispatch is None:
         dispatch = "percell" if engine == "legacy" else "fused"
-    if dispatch not in ("fused", "percell"):
+    if dispatch not in ("fused", "percell", "perfamily"):
         raise ValueError(
-            f"unknown dispatch {dispatch!r} (expected 'fused' or 'percell')"
+            f"unknown dispatch {dispatch!r} "
+            "(expected 'fused', 'perfamily' or 'percell')"
         )
     if engine == "legacy" and dispatch == "fused":
         raise ValueError("engine='legacy' is inherently per-cell")
+    if dispatch == "perfamily" and not (
+        engine == "jax" and trace_mode == "device"
+    ):
+        raise ValueError(
+            "dispatch='perfamily' requires engine='jax' and "
+            "trace_mode='device'"
+        )
     if collect not in ("lanes", "stats"):
         raise ValueError(
             f"unknown collect {collect!r} (expected 'lanes' or 'stats')"
@@ -323,7 +350,9 @@ def run_grid(
     if collect == "stats" and engine != "jax":
         raise ValueError("collect='stats' requires engine='jax'")
     if collect == "stats" and dispatch == "percell":
-        raise ValueError("collect='stats' requires dispatch='fused'")
+        raise ValueError(
+            "collect='stats' requires dispatch='fused' or 'perfamily'"
+        )
     t0 = time.monotonic()
     if engine == "legacy":
         cells = []
@@ -441,25 +470,45 @@ def run_grid(
                 ]
                 lane_parts.append(_scalar_lane_arrays(outs))
     elif engine == "jax" and trace_mode == "device":
-        # fused: one dispatch per trace-compatibility group — the
-        # failure law is a static specialization of the compiled
-        # on-device sampler; within a group the whole cell table rides
-        # one cell-multiplexed engine call
         from ..core.jax_sim import simulate_batch_jax
 
-        pos = 0
-        for (_, idx), spec in zip(groups, specs):
-            a, b = pos, pos + len(idx)
+        if dispatch == "fused" and len(groups) > 1:
+            # ONE mixed-law dispatch: the per-group specs concatenate
+            # into a single cell-indexed spec whose failure laws ride
+            # the cell tables through the law-indexed sampler — one
+            # compiled executable per grid *shape*, not per family
+            spec = TraceSpec.concat_cells(specs)
             res = simulate_batch_jax(
-                work_c[a:b], plats_c[a:b], strats_c[a:b], spec,
+                work_c, plats_c, strats_c, spec,
                 chunk=chunk_lanes, devices=devices, mesh=mesh,
                 collect=collect,
             )
             if collect == "stats":
-                _stats_from(res, a)
+                _stats_from(res, 0)
             else:
                 lane_parts.append(_lane_arrays(res))
-            pos = b
+        else:
+            # one dispatch per trace-compatibility group: the
+            # single-family fast path of "fused" (law-specialized
+            # sampler, no indexed overhead) and the explicit
+            # "perfamily" baseline, whose specs are tuple-ized so the
+            # law-indexed sampler — hence every per-lane result — is
+            # bit-identical to the one-dispatch path
+            pos = 0
+            for (_, idx), spec in zip(groups, specs):
+                a, b = pos, pos + len(idx)
+                if dispatch == "perfamily":
+                    spec = spec.indexed()
+                res = simulate_batch_jax(
+                    work_c[a:b], plats_c[a:b], strats_c[a:b], spec,
+                    chunk=chunk_lanes, devices=devices, mesh=mesh,
+                    collect=collect,
+                )
+                if collect == "stats":
+                    _stats_from(res, a)
+                else:
+                    lane_parts.append(_lane_arrays(res))
+                pos = b
     elif engine == "jax":
         # fused host-trace dispatch: per-cell engine tables + the lane ->
         # cell index (event arrays stay per-lane)

@@ -47,6 +47,7 @@ import numpy as np
 
 from ..core.events import (
     _SM_GAMMA, _SM_MIX1, _SM_MIX2, _TF_PARITY, _TF_ROTATIONS, THREEFRY_ROUNDS,
+    LAW_EXPONENTIAL, LAW_LOGNORMAL, LAW_UNIFORM, LAW_WEIBULL,
 )
 
 __all__ = [
@@ -70,6 +71,7 @@ __all__ = [
     "counter_uniform",
     "counter_uniform2",
     "gap_transform",
+    "gap_transform_indexed",
     "stream_advance",
     "masked_stream_advance",
     "cell_gather",
@@ -148,10 +150,15 @@ def primitive_update(
     )
     if stream is None:
         return t4, saved2, unsaved3, pw3, flags
-    skey, sctr, stm, smean, shorizon = stream
+    if len(stream) == 5:
+        skey, sctr, stm, smean, shorizon = stream
+        slaw = slp = None
+    else:  # law-multiplexed: per-lane law index + (s1, s2) shape slots
+        skey, sctr, stm, smean, shorizon, slaw, s1, s2 = stream
+        slp = (s1, s2)
     sctr, stm = stream_advance(
         faulted, sctr, stm, skey, smean, shorizon,
-        kind=gap[0], param=gap[1],
+        kind=gap[0], param=gap[1], law=slaw, lp=slp,
     )
     return t4, saved2, unsaved3, pw3, flags, sctr, stm
 
@@ -258,7 +265,47 @@ def gap_transform(kind: str, param: float, mean, x0, x1, dtype):
     return jnp.maximum(g, 1e-9)
 
 
-def stream_advance(mask, ctr, tm, key, mean, horizon, *, kind, param):
+def gap_transform_indexed(law, s1, s2, mean, x0, x1, dtype):
+    """Law-multiplexed inverse-CDF transform: the branchless select twin
+    of :func:`gap_transform` for mixed-law cell tables.
+
+    ``law`` is the per-lane int32 law index (``core.events.LAW_*``) and
+    ``(s1, s2)`` the pre-folded shape slots of the unified 4-slot
+    parameter row (``core.events.law_table``): Weibull ``s1 = 1/Γ(1+1/k)``,
+    ``s2 = 1/k``; lognormal ``s1 = σ``, ``s2 = σ²/2``.  Every family's
+    expression is evaluated (a pure VPU elementwise pass) and one
+    ``where`` chain selects per lane; each branch is written so that with
+    the slots pinned to a single family it folds to the *same* XLA ops as
+    the compile-time-specialized path — the per-cell bit-identity the
+    fused mixed-law dispatch is gated on."""
+    u = uniform24(x0, dtype)
+    nlog = -jnp.log1p(-u)
+    g_exp = nlog * mean
+    # mirror the compiler's static-exponent pow strength reductions
+    # (x ** 2.0 -> x * x, x ** 0.5 -> sqrt) so the data-driven exponent
+    # reproduces the specialized path's bits for those shapes too
+    p = nlog ** s2
+    p = jnp.where(s2 == 2.0, nlog * nlog, p)
+    p = jnp.where(s2 == 0.5, jnp.sqrt(nlog), p)
+    g_wei = (mean * s1) * p
+    z = jnp.sqrt(-2.0 * jnp.log(u)) * jnp.cos(
+        jnp.asarray(2.0 * 3.141592653589793, dtype) * uniform24(x1, dtype)
+    )
+    g_log = jnp.exp(jnp.log(mean) - s2 + s1 * z)
+    g_uni = 2.0 * mean * u
+    g = jnp.where(
+        law == LAW_WEIBULL, g_wei,
+        jnp.where(
+            law == LAW_LOGNORMAL, g_log,
+            jnp.where(law == LAW_UNIFORM, g_uni, g_exp),
+        ),
+    )
+    return jnp.maximum(g, 1e-9)
+
+
+def stream_advance(
+    mask, ctr, tm, key, mean, horizon, *, kind, param, law=None, lp=None,
+):
     """Advance a renewal-stream cursor by one event where ``mask``.
 
     Draws gap ``ctr + 1`` from the counter stream, accumulates the event
@@ -267,10 +314,17 @@ def stream_advance(mask, ctr, tm, key, mean, horizon, *, kind, param):
     sentinel-padded event row.  Lanes outside ``mask`` are untouched, and
     a draw is a pure function of ``(key, counter)``, so cursor replays
     (e.g. the strike cursor re-walking the lookahead cursor's fault
-    stream) observe bit-identical dates."""
+    stream) observe bit-identical dates.
+
+    ``kind="indexed"`` selects the law-multiplexed transform: ``law`` is
+    the per-lane int32 law index and ``lp`` the ``(s1, s2)`` shape-slot
+    pair (``param`` is ignored)."""
     c2 = ctr + 1
     x0, x1 = counter_words(key, c2)
-    g = gap_transform(kind, param, mean, x0, x1, tm.dtype)
+    if kind == "indexed":
+        g = gap_transform_indexed(law, lp[0], lp[1], mean, x0, x1, tm.dtype)
+    else:
+        g = gap_transform(kind, param, mean, x0, x1, tm.dtype)
     t2 = tm + g
     t2 = jnp.where(t2 > horizon, jnp.asarray(jnp.inf, tm.dtype), t2)
     return jnp.where(mask, c2, ctr), jnp.where(mask, t2, tm)
@@ -317,10 +371,17 @@ def segment_cell_sums(values, cidx, num_cells: int):
 def _advance_kernel(*refs, kind: str, param: float, nkey: int):
     mask_ref, ctr_ref, tm_ref = refs[:3]
     key = tuple(r[...] for r in refs[3:3 + nkey])
-    mean_ref, horizon_ref, ctr_out, tm_out = refs[3 + nkey:]
+    if kind == "indexed":
+        (mean_ref, horizon_ref, law_ref, s1_ref, s2_ref,
+         ctr_out, tm_out) = refs[3 + nkey:]
+        law, lp = law_ref[...], (s1_ref[...], s2_ref[...])
+    else:
+        mean_ref, horizon_ref, ctr_out, tm_out = refs[3 + nkey:]
+        law = lp = None
     ctr, tm = stream_advance(
         mask_ref[...] != 0, ctr_ref[...], tm_ref[...], key,
         mean_ref[...], horizon_ref[...], kind=kind, param=param,
+        law=law, lp=lp,
     )
     ctr_out[...] = ctr
     tm_out[...] = tm
@@ -328,12 +389,14 @@ def _advance_kernel(*refs, kind: str, param: float, nkey: int):
 
 def masked_stream_advance(
     mask, ctr, tm, key, mean, horizon, *, kind: str, param: float,
-    interpret: bool | None = None, tile: int = 8,
+    law=None, lp=None, interpret: bool | None = None, tile: int = 8,
 ):
     """Pallas entry of :func:`stream_advance` over flat ``(L,)`` lanes
     (L % 128 == 0), same layout/tiling contract as
     :func:`masked_primitive_update`; the kernel body *is* the jnp
-    function, so both paths are bit-identical."""
+    function, so both paths are bit-identical.  ``kind="indexed"`` ships
+    the per-lane ``law`` index and ``lp = (s1, s2)`` slot arrays as three
+    extra kernel inputs."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     L = tm.shape[0]
@@ -359,6 +422,8 @@ def masked_stream_advance(
         as2d(mean, fdt),
         as2d(horizon, fdt),
     ]
+    if kind == "indexed":
+        ins += [as2d(law, jnp.int32), as2d(lp[0], fdt), as2d(lp[1], fdt)]
     spec = pl.BlockSpec((tile, 128), lambda i: (i, 0))
     out_shape = [
         jax.ShapeDtypeStruct((rows, 128), jnp.int32),
@@ -403,16 +468,21 @@ def _step_gen_kernel(*refs, eps: float, reg_cont: int, gap, nkey: int):
      t_ref, saved_ref, unsaved_ref, pw_ref, w_ref, dr_ref) = refs[:11]
     key = tuple(r[...] for r in refs[11:11 + nkey])
     sctr_ref, mean_ref, horizon_ref = refs[11 + nkey:14 + nkey]
+    stream = (key, sctr_ref[...], nf_ref[...],
+              mean_ref[...], horizon_ref[...])
+    if gap[0] == "indexed":  # + per-lane law index and (s1, s2) slots
+        law_ref, s1_ref, s2_ref = refs[14 + nkey:17 + nkey]
+        stream = stream + (law_ref[...], s1_ref[...], s2_ref[...])
+        rest = refs[17 + nkey:]
+    else:
+        rest = refs[14 + nkey:]
     (t_out, saved_out, unsaved_out, pw_out, flags_out,
-     sctr_out, stm_out) = refs[14 + nkey:]
+     sctr_out, stm_out) = rest
     t, saved, unsaved, pw, flags, sctr, stm = primitive_update(
         prim_ref[...], cont_ref[...], target_ref[...],
         ckend_ref[...], nf_ref[...], t_ref[...], saved_ref[...],
         unsaved_ref[...], pw_ref[...], w_ref[...], dr_ref[...],
-        eps=eps, reg_cont=reg_cont,
-        stream=(key, sctr_ref[...], nf_ref[...],
-                mean_ref[...], horizon_ref[...]),
-        gap=gap,
+        eps=eps, reg_cont=reg_cont, stream=stream, gap=gap,
     )
     t_out[...] = t
     saved_out[...] = saved
@@ -480,13 +550,19 @@ def masked_primitive_update(
     if stream is None:
         kernel = partial(_step_kernel, eps=eps, reg_cont=reg_cont)
     else:
-        skey, sctr, _, smean, shorizon = stream
+        skey, sctr, _, smean, shorizon = stream[:5]
         ins += [
             *[jnp.asarray(k).reshape(rows, 128) for k in skey],
             as2d(sctr, jnp.int32),
             as2d(smean, fdt),
             as2d(shorizon, fdt),
         ]
+        if len(stream) == 8:  # law-multiplexed: law index + (s1, s2)
+            ins += [
+                as2d(stream[5], jnp.int32),
+                as2d(stream[6], fdt),
+                as2d(stream[7], fdt),
+            ]
         out_shape += [
             jax.ShapeDtypeStruct((rows, 128), jnp.int32),
             jax.ShapeDtypeStruct((rows, 128), fdt),

@@ -13,7 +13,10 @@ the engine-equivalence contracts:
 * device trace mode: fused and per-cell dispatch are bit-identical
   (counter streams travel with the lanes); the batch engine replaying
   the materialized streams matches exactly for exact-date predictions
-  and statistically (TP merge order) for windows.
+  and statistically (TP merge order) for windows;
+* mixed-law grids (the drawn law + its successor): the one-dispatch
+  law-indexed path is bit-identical to the per-family baseline and
+  float-rounding-close to the law-specialized per-cell dispatch.
 
 Uses hypothesis when available (the ``fuzz`` marker lets CI run a larger
 budget nightly via ``REPRO_FUZZ_EXAMPLES``); falls back to a fixed-seed
@@ -142,6 +145,36 @@ def _check_differential(mu_mn, c_mn, law_key, mode, window, q, recall,
     # per-cell mean waste is engine-invariant within MC resolution
     for ca, cb in zip(sjd.cells, sbd.cells):
         assert abs(ca.mean_waste - cb.mean_waste) < 2e-3, ca.cell.label
+
+    # ---- mixed-law grid: the drawn law + its successor in one fused
+    # dispatch through the law-indexed sampler ----------------------- #
+    law2 = sorted(LAWS)[(sorted(LAWS).index(law_key) + 1) % len(LAWS)]
+    mixed = GridSpec(
+        tuple(
+            dataclasses.replace(
+                c, label=f"{lk}/{c.label}", fault_dist=LAWS[lk]
+            )
+            for lk in (law_key, law2)
+            for c in grid.cells
+        ),
+        n_runs=grid.n_runs, seed=grid.seed,
+    )
+    mf = run_grid(mixed, engine="jax", trace_mode="device")
+    mpf = run_grid(
+        mixed, engine="jax", trace_mode="device", dispatch="perfamily"
+    )
+    # per-family runs the same law-indexed sampler: bit-identical
+    _assert_lanes_equal(mpf, mf, context="mixed-perfamily-vs-fused")
+    mpc = run_grid(
+        mixed, engine="jax", trace_mode="device", dispatch="percell"
+    )
+    # per-cell uses the law-*specialized* static samplers: exact up to
+    # XLA's per-context transcendental fusion (lognormal ~1e-12 rel)
+    for ca, cb in zip(mf.cells, mpc.cells):
+        np.testing.assert_allclose(
+            ca.makespan, cb.makespan, rtol=1e-9,
+            err_msg=f"mixed-percell-vs-fused:{ca.cell.label}",
+        )
 
 
 def _params_from_seed(i: int):

@@ -838,6 +838,245 @@ def test_cell_index_validation_errors():
         )
 
 
+# ---------------------------------------------------------------------- #
+# mixed-law cell tables (law-multiplexed device sampling)
+# ---------------------------------------------------------------------- #
+_MIXED_LAWS = (
+    E.exponential(), E.weibull(0.7), E.lognormal(0.5), E.uniform()
+)
+
+
+def _mixed_law_fixture(n_runs=4, seed=19):
+    """Four cells on one platform/strategy — one per failure-law family —
+    as a single mixed-law cell-indexed spec (the law is a data column)."""
+    strat = S.exact_prediction(PLAT, PRED)
+    cidx = np.repeat(np.arange(4, dtype=np.int32), n_runs)
+    spec = E.make_trace_spec(
+        4 * n_runs, horizon=12 * WORK, mtbf=PLAT.mu, recall=PRED.recall,
+        precision=PRED.precision, window=0.0, lead=PRED.lead, seed=seed,
+        cell_index=cidx, fault_dist=_MIXED_LAWS,
+    )
+    return strat, cidx, spec
+
+
+def test_device_gen_mixed_law_cells_match_single_law():
+    """Law multiplexing is semantically invisible: every cell of a
+    4-law fused dispatch is bit-identical to a single-law run of the
+    same streams through the law-indexed sampler, and matches the
+    law-*specialized* static sampler exactly for the closed-form laws
+    (lognormal to float rounding — XLA fuses its transcendentals
+    differently per compilation context)."""
+    strat, cidx, spec = _mixed_law_fixture()
+    got = simulate_batch_jax([WORK] * 4, [PLAT] * 4, [strat] * 4, spec)
+    for c, dist in enumerate(_MIXED_LAWS):
+        sel = cidx == c
+        ref_spec = E.make_trace_spec(
+            int(sel.sum()), horizon=12 * WORK, mtbf=PLAT.mu,
+            recall=PRED.recall, precision=PRED.precision, window=0.0,
+            lead=PRED.lead, seed=19, stream=np.flatnonzero(sel),
+            fault_dist=dist,
+        )
+        ref_ix = simulate_batch_jax(WORK, PLAT, strat, ref_spec.indexed())
+        np.testing.assert_array_equal(
+            got.makespan[sel], ref_ix.makespan, err_msg=dist.name
+        )
+        np.testing.assert_array_equal(got.n_faults[sel], ref_ix.n_faults)
+        np.testing.assert_array_equal(
+            got.n_proactive_ckpts[sel], ref_ix.n_proactive_ckpts
+        )
+        ref_st = simulate_batch_jax(WORK, PLAT, strat, ref_spec)
+        if dist.kind == "lognormal":
+            np.testing.assert_allclose(
+                got.makespan[sel], ref_st.makespan, rtol=1e-12,
+                err_msg=dist.name,
+            )
+        else:
+            np.testing.assert_array_equal(
+                got.makespan[sel], ref_st.makespan, err_msg=dist.name
+            )
+
+
+def test_device_gen_mixed_law_chunk_invariance():
+    """Mixed-law lane packing travels with the lanes: chunk boundaries
+    cutting through law families change nothing."""
+    strat, cidx, spec = _mixed_law_fixture()
+    whole = simulate_batch_jax(
+        [WORK] * 4, [PLAT] * 4, [strat] * 4, spec, chunk=None
+    )
+    for chunk in (3, 7):
+        got = simulate_batch_jax(
+            [WORK] * 4, [PLAT] * 4, [strat] * 4, spec, chunk=chunk
+        )
+        np.testing.assert_array_equal(whole.makespan, got.makespan)
+        np.testing.assert_array_equal(whole.n_faults, got.n_faults)
+
+
+@pytest.mark.parametrize("devices", [1, 2, 8])
+def test_device_gen_mixed_law_stats_invariance(devices):
+    """The shard_map segment reduction accumulates per-cell sums in a
+    donated replicated buffer (one psum per chunk): mixed-law per-cell
+    stats are invariant to chunk size and device count — including
+    ragged shards and chunk cuts through law families."""
+    if devices > _n_devices():
+        pytest.skip(f"needs {devices} devices, have {_n_devices()}")
+    strat, cidx, spec = _mixed_law_fixture(n_runs=5)
+    args = ([WORK] * 4, [PLAT] * 4, [strat] * 4, spec)
+    ref = simulate_batch_jax(*args, collect="stats", devices=1)
+    np.testing.assert_array_equal(ref.n, [5, 5, 5, 5])
+    for chunk in (None, 7):
+        got = simulate_batch_jax(
+            *args, collect="stats", devices=devices, chunk=chunk
+        )
+        np.testing.assert_allclose(got.waste_sum, ref.waste_sum, rtol=1e-12)
+        np.testing.assert_array_equal(got.n, ref.n)
+        np.testing.assert_array_equal(got.n_faults, ref.n_faults)
+
+
+def test_device_gen_mixed_law_stats_transfer_guard():
+    """collect='stats' never materializes per-lane arrays on the host:
+    after executable warmup the whole mixed-law stats call — sharded
+    when the process has several devices — runs under
+    ``jax.transfer_guard("disallow")``.  Packing and the O(cells) fetch
+    are explicit device_put/device_get; nothing transfers implicitly."""
+    import jax
+
+    strat, cidx, spec = _mixed_law_fixture()
+    args = ([WORK] * 4, [PLAT] * 4, [strat] * 4, spec)
+    kw = dict(collect="stats", devices=_n_devices())
+    ref = simulate_batch_jax(*args, **kw)  # compile outside the guard
+    with jax.transfer_guard("disallow"):
+        got = simulate_batch_jax(*args, **kw)
+    np.testing.assert_array_equal(got.waste_sum, ref.waste_sum)
+    np.testing.assert_array_equal(got.n, ref.n)
+
+
+def _mixed_law_grid(n_runs=4, seed=23):
+    from repro.experiments import ExperimentCell, GridSpec
+
+    pred = PredictorModel(0.85, 0.82, window=300.0, lead=3600.0)
+    cells = [
+        ExperimentCell(
+            label=f"{lk}/{strat.name}", work=6 * 86400.0, platform=PLAT,
+            predictor=pred, strategy=strat, fault_dist=dist,
+        )
+        for lk, dist in (("exp", E.exponential()), ("wb", E.weibull(0.7)))
+        for strat in (S.young(PLAT), S.instant(PLAT, pred))
+    ]
+    return GridSpec(tuple(cells), n_runs=n_runs, seed=seed)
+
+
+def test_device_gen_mixed_law_run_grid_one_dispatch():
+    """A mixed-law grid in device trace mode runs as exactly ONE fused
+    engine dispatch; its per-cell results are bit-identical to the
+    per-family baseline (same law-indexed sampler per family) and to
+    per-cell dispatch (static samplers — exact for these laws), and the
+    device-reduced stats agree bit-for-bit too."""
+    from repro.core import jax_sim
+    from repro.experiments import run_grid
+
+    grid = _mixed_law_grid()
+    fused = run_grid(grid, engine="jax", trace_mode="device")
+    assert jax_sim.LAST_TIMINGS["n_chunks"] == 1
+    perfam = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="perfamily"
+    )
+    percell = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="percell"
+    )
+    for cf, cp, cc in zip(fused.cells, perfam.cells, percell.cells):
+        np.testing.assert_array_equal(
+            cf.makespan, cp.makespan, err_msg=cf.cell.label
+        )
+        np.testing.assert_array_equal(
+            cf.makespan, cc.makespan, err_msg=cf.cell.label
+        )
+        np.testing.assert_array_equal(cf.n_faults, cp.n_faults)
+    sf = run_grid(grid, engine="jax", trace_mode="device", collect="stats")
+    sp = run_grid(
+        grid, engine="jax", trace_mode="device", dispatch="perfamily",
+        collect="stats",
+    )
+    for cf, cp in zip(sf.cells, sp.cells):
+        assert cf.mean_waste == cp.mean_waste, cf.cell.label
+        assert cf.ci95_waste == cp.ci95_waste, cf.cell.label
+    with pytest.raises(ValueError, match="perfamily"):
+        run_grid(grid, engine="jax", dispatch="perfamily")
+
+
+def test_mixed_law_run_grid_host_traces():
+    """Host trace mode: a mixed-law grid still fuses into one engine
+    dispatch over the per-group event arrays — bit-identical to
+    per-cell dispatch and float-rounding-close to the batch engine."""
+    from repro.experiments import run_grid
+
+    grid = _mixed_law_grid()
+    fused = run_grid(grid, engine="jax")
+    percell = run_grid(grid, engine="jax", dispatch="percell")
+    batch = run_grid(grid, engine="batch")
+    for cf, cc, cb in zip(fused.cells, percell.cells, batch.cells):
+        np.testing.assert_array_equal(
+            cf.makespan, cc.makespan, err_msg=cf.cell.label
+        )
+        np.testing.assert_allclose(
+            cf.makespan, cb.makespan, rtol=1e-12, atol=1e-6,
+            err_msg=cf.cell.label,
+        )
+
+
+def test_run_cache_lru_eviction(monkeypatch):
+    """The engine-executable cache is a bounded LRU: hits refresh
+    recency and inserts over the cap evict the least recently used
+    entry (long-lived advisor services can't grow it unboundedly)."""
+    import jax
+
+    from repro.core import jax_sim
+
+    saved = jax_sim._RUN_CACHE.copy()
+    jax_sim._RUN_CACHE.clear()
+    monkeypatch.setattr(jax_sim, "_RUN_CACHE_MAX", 2)
+    try:
+        devs = tuple(jax.devices()[:1])
+        r0 = jax_sim._get_runner(False, True, 100, 1e-9, False, devs)
+        r1 = jax_sim._get_runner(False, True, 101, 1e-9, False, devs)
+        assert len(jax_sim._RUN_CACHE) == 2
+        # a hit returns the cached executable and refreshes its recency
+        assert jax_sim._get_runner(
+            False, True, 100, 1e-9, False, devs
+        ) is r0
+        jax_sim._get_runner(False, True, 102, 1e-9, False, devs)
+        assert len(jax_sim._RUN_CACHE) == 2
+        # the refreshed entry survived; the stale one was evicted
+        assert jax_sim._get_runner(
+            False, True, 100, 1e-9, False, devs
+        ) is r0
+        assert jax_sim._get_runner(
+            False, True, 101, 1e-9, False, devs
+        ) is not r1
+    finally:
+        jax_sim._RUN_CACHE.clear()
+        jax_sim._RUN_CACHE.update(saved)
+
+
+def test_best_period_search_jax_matches_batch():
+    """engine='jax' brute-forces the period as ONE cell-multiplexed
+    collect='stats' dispatch (one cell per candidate): identical traces,
+    so the argmin and the winning waste match the batch engine."""
+    for base, pred in (
+        (S.exact_prediction(PLAT, PRED), PRED),
+        (S.young(PLAT), PRED0),
+    ):
+        tb, wb = S.best_period_search(
+            6 * 86400.0, PLAT, base, pred, n_runs=3, seed=5,
+            grid=(0.6, 1.0, 1.6),
+        )
+        tj, wj = S.best_period_search(
+            6 * 86400.0, PLAT, base, pred, n_runs=3, seed=5,
+            grid=(0.6, 1.0, 1.6), engine="jax",
+        )
+        assert tj == tb, base.name
+        assert wj == pytest.approx(wb, rel=1e-9), base.name
+
+
 def test_cell_spec_take_and_expand():
     """take() on a cell-indexed spec selects lanes (table untouched);
     expand() is the per-lane reference layout; materialize() routes
