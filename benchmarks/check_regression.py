@@ -158,7 +158,30 @@ def main() -> None:
     ap.add_argument("--modules", default=None, metavar="A,B",
                     help="comma-separated subset of "
                     f"{','.join(BASELINES)} (default: all)")
+    ap.add_argument("--skip-preflight", action="store_true",
+                    help="skip the repro.analysis static-analysis preflight")
     args = ap.parse_args()
+
+    if not args.skip_preflight:
+        # refuse to spend benchmark minutes on an engine whose static
+        # contracts are already broken: the lint/twin passes are cheap
+        # AST work, the jaxpr audit traces abstractly (no XLA executes)
+        from repro.analysis import run_all
+
+        print("# == preflight: repro.analysis --all ==",
+              file=sys.stderr, flush=True)
+        code, report = run_all()
+        if code != 0:
+            print("PREFLIGHT FAILED: static analysis is dirty — "
+                  "fix it before benchmarking:")
+            for line in report["lint"]["new"]:
+                print(f"  - NEW {line}")
+            for err in report["twins"]["errors"]:
+                print(f"  - {err.splitlines()[0]}")
+            for rep in report["jaxpr"]["reports"]:
+                for err in rep["errors"]:
+                    print(f"  - [{rep['label']}] {err}")
+            sys.exit(1)
 
     selected = dict(BASELINES)
     if args.modules:

@@ -165,14 +165,17 @@ def run(quick: bool = True, devices=None) -> None:
         jx_split = dv_split = {}
         for _ in range(reps):
             np_s = min(
-                np_s, _timed(lambda: simulate_batch(WORK, plat, strat, traces))
+                np_s,
+                _timed(lambda traces=traces: simulate_batch(
+                    WORK, plat, strat, traces
+                )),
             )
-            t = _timed(lambda: simulate_batch_jax(
+            t = _timed(lambda traces=traces: simulate_batch_jax(
                 WORK, plat, strat, traces, devices=devices
             ))
             if t < jx_s:
                 jx_s, jx_split = t, _split()
-            t = _timed(lambda: simulate_batch_jax(
+            t = _timed(lambda spec=spec: simulate_batch_jax(
                 WORK, plat, strat, spec, devices=devices
             ))
             if t < dv_s:
@@ -402,7 +405,7 @@ def _devices_curve_child(reps: int) -> None:
     # of the machine noise)
     for _ in range(max(reps, 5)):
         for d in counts:
-            times[d].append(_timed(lambda: simulate_batch_jax(
+            times[d].append(_timed(lambda d=d: simulate_batch_jax(
                 WORK, plat, strat, traces, devices=d
             )))
     for d in counts:

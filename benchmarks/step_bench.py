@@ -37,7 +37,9 @@ def run(quick: bool = True) -> None:
         step = jax.jit(build_train_step(model))
         p, o, m = step(params, opt, batch)  # compile+warm
         jax.block_until_ready(m["loss"])
-        (_, _, m2), us = timed(lambda: step(p, o, batch), n=3)
+        (_, _, m2), us = timed(
+            lambda step=step, p=p, o=o, batch=batch: step(p, o, batch), n=3
+        )
         jax.block_until_ready(m2["loss"])
         tokens = B * S
         emit(
@@ -46,13 +48,20 @@ def run(quick: bool = True) -> None:
         )
 
         max_seq = S + (cfg.frontend_prefix or 0) + 8
-        prefill = jax.jit(lambda p_, b_: build_prefill_step(model, max_seq)(p_, b_))
+        prefill = jax.jit(
+            lambda p_, b_, model=model, max_seq=max_seq:
+                build_prefill_step(model, max_seq)(p_, b_)
+        )
         logits, cache = prefill(params, batch)
         decode = jax.jit(build_decode_step(model))
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         out = decode(params, cache, tok)
         jax.block_until_ready(out[0])
-        (_, cache2), us_d = timed(lambda: decode(params, cache, tok), n=5)
+        (_, cache2), us_d = timed(
+            lambda decode=decode, params=params, cache=cache, tok=tok:
+                decode(params, cache, tok),
+            n=5,
+        )
         emit(
             f"step/decode/{name}", us_d,
             {"tok_per_s": round(B / (us_d / 1e6))},

@@ -1,0 +1,117 @@
+"""``repro.analysis`` — static-analysis suite for the engine's invariants.
+
+Three passes, one CLI (``python -m repro.analysis``), zero execution of
+engine code in the lint/twin passes and abstract evaluation only in the
+jaxpr pass:
+
+1. **AST lint** (:mod:`.rules`, :mod:`.linter`) — repo-specific rules
+   over ``src/`` and ``benchmarks/``:
+
+   ========================  ==================================================
+   rule id                   enforces
+   ========================  ==================================================
+   ``host-sync``             no ``jax.device_get`` / ``.item()`` /
+                             ``.tolist()`` / ``.block_until_ready()`` /
+                             ``.copy_to_host_async()`` / ``float(tracer)`` /
+                             ``np.asarray(tracer)`` outside the allowlisted
+                             host boundary (``benchmarks/``,
+                             ``experiments/runner.py``)
+   ``twin-import``           no ``jax`` imports in the NumPy-twin modules
+                             (``core/events.py``, ``core/batch_sim.py``)
+   ``np-in-jit``             no host-NumPy compute inside jit-traced bodies
+                             (dtype/constant references allowed)
+   ``tracer-branch``         no Python ``if``/``while``/``assert`` on
+                             tracer-valued names inside jit-traced bodies
+   ``unseeded-rng``          no global-state ``np.random.*``; seeded
+                             ``default_rng`` only
+   ``kernel-dtype``          kernel code (``src/repro/kernels/``) is
+                             dtype-explicit: no ``float64`` literals, no
+                             module-level bare float constants, no
+                             ``jnp.asarray``/``array``/``full`` without dtype
+   ========================  ==================================================
+
+   Escape hatches: ``# repro-lint: disable=RULE`` on the offending line,
+   ``# repro-lint: jit-root`` marks functions traced via
+   ``functools.partial`` indirection, and the checked-in
+   ``LINT_BASELINE.json`` records deliberate findings (with one-line
+   justifications) so only *new* findings fail.
+
+2. **Twin parity** (:mod:`.twins`) — the declared NumPy/jnp sampler
+   registry, compared structurally modulo the known dialect idioms;
+   editing one twin without the other fails with a unified diff.  Twin
+   defs carry ``# repro-twin: <counterpart>`` comments, cross-checked
+   against the registry in both directions.
+
+3. **jaxpr audit** (:mod:`.jaxpr_audit`) — abstract-evals the fused
+   engine dispatch and checks the dtype schema (:mod:`.schema`),
+   weak-type and float-promotion freedom, buffer donation, O(cells)
+   stats outputs, and the mixed-law one-executable property.
+
+CLI::
+
+    python -m repro.analysis --all               # every pass; exit != 0 on findings
+    python -m repro.analysis --lint              # AST lint vs baseline
+    python -m repro.analysis --lint --write-baseline
+    python -m repro.analysis --twins             # twin-parity only
+    python -m repro.analysis --jaxpr             # jaxpr audit only
+    python -m repro.analysis --all --out report.json
+"""
+
+from .jaxpr_audit import AuditReport, audit_callable, run_audit
+from .linter import lint_tree, load_baseline, partition_findings, repo_root
+from .rules import RULES, Finding, scan_source
+from .schema import OUT_SCHEMA, STATE_SCHEMA, resolve_role
+from .twins import TWIN_REGISTRY, TwinPair, check_twins
+
+__all__ = [
+    "AuditReport",
+    "Finding",
+    "OUT_SCHEMA",
+    "RULES",
+    "STATE_SCHEMA",
+    "TWIN_REGISTRY",
+    "TwinPair",
+    "audit_callable",
+    "check_twins",
+    "lint_tree",
+    "load_baseline",
+    "partition_findings",
+    "repo_root",
+    "resolve_role",
+    "run_audit",
+    "run_all",
+    "scan_source",
+]
+
+
+def run_all(root=None, jaxpr: bool = True):
+    """Run every pass; returns ``(exit_code, report_dict)``.
+
+    ``report_dict`` is JSON-serializable (the CI artifact).  Exit code 0
+    iff there are no new lint findings, no twin divergences, and every
+    jaxpr audit passes."""
+    root = repo_root() if root is None else root
+    findings = lint_tree(root)
+    new, baselined, stale = partition_findings(findings, load_baseline(root))
+    twin_errors = check_twins(root)
+    audits = run_audit() if jaxpr else []
+    report = {
+        "lint": {
+            "new": [f.format() for f in new],
+            "baselined": [f.format() for f in baselined],
+            "stale_baseline_entries": [
+                f"{e.get('path')}: [{e.get('rule')}] {e.get('line_text')}"
+                for e in stale
+            ],
+        },
+        "twins": {"errors": twin_errors},
+        "jaxpr": {
+            "reports": [
+                {"label": r.label, "ok": r.ok, "errors": r.errors,
+                 "passed": r.passed}
+                for r in audits
+            ],
+        },
+    }
+    bad = bool(new) or bool(twin_errors) or any(not r.ok for r in audits)
+    return (1 if bad else 0), report

@@ -1,0 +1,122 @@
+"""CLI for the static-analysis suite — see the package docstring."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import run_all
+from .jaxpr_audit import run_audit
+from .linter import (
+    lint_tree,
+    load_baseline,
+    partition_findings,
+    repo_root,
+    write_baseline,
+)
+from .twins import check_twins
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST lint, twin parity, jaxpr audit",
+    )
+    ap.add_argument("--all", action="store_true", help="run every pass")
+    ap.add_argument("--lint", action="store_true", help="AST lint pass")
+    ap.add_argument("--twins", action="store_true", help="twin-parity pass")
+    ap.add_argument("--jaxpr", action="store_true", help="jaxpr audit pass")
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="accept current lint findings into LINT_BASELINE.json",
+    )
+    ap.add_argument("--root", type=Path, default=None, help="repo root")
+    ap.add_argument(
+        "--out", type=Path, default=None,
+        help="write the findings report as JSON (CI artifact)",
+    )
+    args = ap.parse_args(argv)
+    if not (args.lint or args.twins or args.jaxpr):
+        args.all = True
+    root = args.root if args.root is not None else repo_root()
+
+    if args.all:
+        code, report = run_all(root)
+        _print_report(report)
+        if args.out:
+            args.out.write_text(json.dumps(report, indent=2) + "\n")
+        return code
+
+    code = 0
+    report = {}
+    if args.lint:
+        findings = lint_tree(root)
+        if args.write_baseline:
+            path = write_baseline(root, findings)
+            print(f"wrote {len(findings)} finding(s) to {path}")
+        new, baselined, stale = partition_findings(
+            findings, load_baseline(root)
+        )
+        report["lint"] = {
+            "new": [f.format() for f in new],
+            "baselined": [f.format() for f in baselined],
+            "stale_baseline_entries": [
+                f"{e.get('path')}: [{e.get('rule')}] {e.get('line_text')}"
+                for e in stale
+            ],
+        }
+        if new and not args.write_baseline:
+            code = 1
+    if args.twins:
+        errors = check_twins(root)
+        report["twins"] = {"errors": errors}
+        if errors:
+            code = 1
+    if args.jaxpr:
+        audits = run_audit()
+        report["jaxpr"] = {
+            "reports": [
+                {"label": r.label, "ok": r.ok, "errors": r.errors,
+                 "passed": r.passed}
+                for r in audits
+            ],
+        }
+        if any(not r.ok for r in audits):
+            code = 1
+    _print_report(report)
+    if args.out:
+        args.out.write_text(json.dumps(report, indent=2) + "\n")
+    return code
+
+
+def _print_report(report: dict) -> None:
+    lint = report.get("lint")
+    if lint is not None:
+        for line in lint["new"]:
+            print(f"NEW {line}")
+        for line in lint["stale_baseline_entries"]:
+            print(f"STALE-BASELINE {line}")
+        print(
+            f"[lint] {len(lint['new'])} new, "
+            f"{len(lint['baselined'])} baselined, "
+            f"{len(lint['stale_baseline_entries'])} stale baseline entr"
+            f"{'y' if len(lint['stale_baseline_entries']) == 1 else 'ies'}"
+        )
+    twins = report.get("twins")
+    if twins is not None:
+        for err in twins["errors"]:
+            print(err)
+        print(f"[twins] {len(twins['errors'])} divergence(s)")
+    jaxpr = report.get("jaxpr")
+    if jaxpr is not None:
+        for r in jaxpr["reports"]:
+            status = "OK" if r["ok"] else "FAIL"
+            print(f"[jaxpr-audit] {r['label']}: {status}")
+            for e in r["errors"]:
+                print(f"  FAIL: {e}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,153 @@
+"""File walking + baseline workflow for the ``repro-lint`` AST pass.
+
+The checked-in baseline (``LINT_BASELINE.json`` at the repo root)
+records *deliberate* findings — each with a one-line justification — so
+CI fails only on **new** findings.  Baseline entries are matched by a
+line-number-independent fingerprint ``(rule, path, symbol, line_text)``:
+editing unrelated code above a baselined finding does not resurface it,
+while editing the flagged line itself does (the finding must then be
+re-justified or fixed).
+
+Workflow::
+
+    python -m repro.analysis --lint                  # fail on new findings
+    python -m repro.analysis --lint --write-baseline # accept current tree
+
+``--write-baseline`` preserves the justifications of entries that are
+still live and stamps new entries with ``"TODO: justify"`` — the review
+gate is that no TODO justification lands on main.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .rules import Finding, scan_source
+
+__all__ = [
+    "repo_root",
+    "iter_source_files",
+    "lint_tree",
+    "load_baseline",
+    "write_baseline",
+    "partition_findings",
+]
+
+#: repo-relative path of the checked-in lint baseline
+BASELINE_NAME = "LINT_BASELINE.json"
+
+#: directories scanned by the lint pass (repo-relative)
+SCAN_DIRS = ("src", "benchmarks")
+
+
+def repo_root(start: Optional[Path] = None) -> Path:
+    """Locate the repo root: the nearest ancestor of ``start`` (or of
+    this file) containing ``pyproject.toml``."""
+    here = Path(start) if start is not None else Path(__file__).resolve()
+    for cand in [here] + list(here.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    raise FileNotFoundError(
+        f"no pyproject.toml above {here}; pass --root explicitly"
+    )
+
+
+def iter_source_files(root: Path) -> List[Path]:
+    files: List[Path] = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if base.is_dir():
+            files.extend(sorted(base.rglob("*.py")))
+    return files
+
+
+def lint_tree(root: Path) -> List[Finding]:
+    """Run every lint rule over the repo's scanned source trees."""
+    findings: List[Finding] = []
+    for path in iter_source_files(root):
+        rel = path.relative_to(root).as_posix()
+        findings.extend(scan_source(rel, path.read_text()))
+    return findings
+
+
+def load_baseline(root: Path) -> List[Dict]:
+    path = root / BASELINE_NAME
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("findings", []))
+
+
+def _entry_fingerprint(entry: Dict) -> Tuple[str, str, str, str]:
+    return (
+        entry.get("rule", ""),
+        entry.get("path", ""),
+        entry.get("symbol", ""),
+        entry.get("line_text", ""),
+    )
+
+
+def partition_findings(
+    findings: Sequence[Finding], baseline: Sequence[Dict]
+) -> Tuple[List[Finding], List[Finding], List[Dict]]:
+    """Split findings into (new, baselined, stale-baseline-entries).
+
+    A baseline entry absorbs at most as many findings as it was recorded
+    for (identical lines in one function collapse to one fingerprint —
+    they are the same deliberate idiom)."""
+    known = {_entry_fingerprint(e) for e in baseline}
+    new: List[Finding] = []
+    old: List[Finding] = []
+    live: set = set()
+    for f in findings:
+        if f.fingerprint() in known:
+            old.append(f)
+            live.add(f.fingerprint())
+        else:
+            new.append(f)
+    stale = [e for e in baseline if _entry_fingerprint(e) not in live]
+    return new, old, stale
+
+
+def write_baseline(root: Path, findings: Sequence[Finding]) -> Path:
+    """Accept the current tree: rewrite the baseline from ``findings``,
+    preserving justifications of entries that are still live."""
+    prior = {
+        _entry_fingerprint(e): e.get("justification", "")
+        for e in load_baseline(root)
+    }
+    entries: List[Dict] = []
+    seen: set = set()
+    for f in sorted(findings, key=lambda f: (f.path, f.line)):
+        fp = f.fingerprint()
+        if fp in seen:
+            continue
+        seen.add(fp)
+        entries.append(
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "symbol": f.symbol,
+                "line_text": f.line_text,
+                "justification": prior.get(fp, "TODO: justify"),
+            }
+        )
+    path = root / BASELINE_NAME
+    path.write_text(
+        json.dumps(
+            {
+                "comment": (
+                    "Deliberate repro-lint findings; matched by "
+                    "(rule, path, symbol, line_text) so line numbers "
+                    "may drift.  Regenerate with "
+                    "`python -m repro.analysis --lint --write-baseline`."
+                ),
+                "findings": entries,
+            },
+            indent=2,
+        )
+        + "\n"
+    )
+    return path

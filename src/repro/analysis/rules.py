@@ -1,0 +1,616 @@
+"""repo-specific AST lint rules (the ``repro-lint`` pass).
+
+Each rule has a stable id — the token used both in findings and in the
+inline escape hatch::
+
+    something_deliberate()  # repro-lint: disable=host-sync
+
+and a second directive marks functions that are traced by ``jax.jit``
+even though no decorator says so (they reach the jit through
+``functools.partial`` + a call-site ``jax.jit``)::
+
+    def _jit_run(consts, state, *, ...):  # repro-lint: jit-root
+
+Rules
+=====
+
+``host-sync``
+    No implicit device->host synchronization outside the engine's
+    designed boundary: calls to ``jax.device_get`` and the syncing
+    methods ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` /
+    ``.copy_to_host_async()`` are flagged in any module that imports
+    JAX, and ``float(x)`` / ``int(x)`` / ``bool(x)`` / ``np.asarray(x)``
+    on tracer-valued names are flagged inside jit-traced bodies.
+    Allowlisted boundary set: ``benchmarks/`` and
+    ``src/repro/experiments/runner.py`` (both sit above the engine and
+    consume fetched results).
+
+``twin-import``
+    The NumPy twin modules (``core/events.py``, ``core/batch_sim.py``)
+    must stay importable — and *auditable* — without JAX: any
+    ``import jax`` / ``from jax ...`` there is a layering break that
+    would let the twins silently diverge from pure-NumPy semantics.
+
+``np-in-jit``
+    No host NumPy *compute* inside jit-traced bodies: ``np.<fn>(...)``
+    under tracing either constant-folds silently (hiding a value that
+    should be traced) or raises at dispatch time.  Dtype/constant
+    references (``np.float64``, ``np.inf``, ``np.pi``, ``np.dtype`` ...)
+    are allowed — they are static metadata, not compute.
+
+``tracer-branch``
+    No Python ``if`` / ``while`` / ``assert`` on tracer-valued names
+    inside jit-traced bodies: control flow on tracers must go through
+    ``lax.cond`` / ``lax.while_loop`` / ``jnp.where``.  Names are
+    tracer-valued if they are positional parameters of a jit-root (its
+    keyword-only parameters are the static configuration by repo
+    convention) or are assigned from expressions involving tracers or
+    ``jnp`` / ``lax`` calls; ``.shape`` / ``.dtype`` / ``.ndim`` /
+    ``.size`` access sanitizes (those are static under tracing).
+
+``unseeded-rng``
+    No legacy global-state NumPy RNG (``np.random.seed`` /
+    ``np.random.rand`` / ...): every random draw must flow from an
+    explicitly seeded ``np.random.default_rng`` / ``SeedSequence`` so
+    runs are reproducible and streams are isolated.
+
+``kernel-dtype``
+    Kernel code (``src/repro/kernels/``) must be dtype-explicit:
+    no ``float64`` literals (the engine's working float is a parameter,
+    f32 on TPU), no module-level bare Python float constants (weakly
+    typed f64 doubles that widen NumPy expressions; wrap in
+    ``np.float32(...)``), and no ``jnp.array`` / ``jnp.asarray`` /
+    ``jnp.full`` constant materialization without an explicit ``dtype``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "RULES", "FileContext", "scan_source"]
+
+#: rule id -> one-line description (the README / module-doc rule table)
+RULES = {
+    "host-sync": (
+        "no jax.device_get / .item() / .tolist() / .block_until_ready() "
+        "/ float(tracer) / np.asarray(tracer) host syncs outside the "
+        "allowlisted boundary (benchmarks/, experiments/runner.py)"
+    ),
+    "twin-import": (
+        "no jax/jnp imports in the NumPy-twin modules "
+        "(core/events.py, core/batch_sim.py)"
+    ),
+    "np-in-jit": (
+        "no host-NumPy compute inside jit-traced bodies "
+        "(np dtype/constant references are allowed)"
+    ),
+    "tracer-branch": (
+        "no Python if/while/assert on tracer-valued names inside "
+        "jit-traced bodies"
+    ),
+    "unseeded-rng": (
+        "no global-state np.random.* calls; use an explicitly seeded "
+        "np.random.default_rng"
+    ),
+    "kernel-dtype": (
+        "kernel code must be dtype-explicit: no float64 literals, no "
+        "module-level bare float constants, no jnp constant "
+        "materialization without dtype"
+    ),
+}
+
+#: modules that must stay JAX-free (the NumPy side of the twin registry)
+TWIN_MODULES = (
+    "src/repro/core/events.py",
+    "src/repro/core/batch_sim.py",
+)
+
+#: designed host boundary: these consume fetched results by construction
+HOST_BOUNDARY_PREFIXES = ("benchmarks/",)
+HOST_BOUNDARY_FILES = ("src/repro/experiments/runner.py",)
+
+KERNEL_PREFIX = "src/repro/kernels/"
+
+#: np attributes that are static metadata, not host compute
+_ALLOWED_NP_IN_JIT = {
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "inf", "nan", "pi", "e", "euler_gamma", "newaxis",
+    "dtype", "finfo", "iinfo", "errstate", "ndarray", "integer",
+    "floating", "generic",
+}
+
+#: np.random members that *are* the seeded API
+_SEEDED_RNG_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+}
+
+#: method calls that force (or schedule) a device->host transfer
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+
+#: callables whose function-valued arguments are traced by JAX
+_TRACING_CALLS = {
+    "jit", "while_loop", "cond", "scan", "fori_loop", "switch",
+    "shard_map", "pallas_call", "vmap", "pmap", "grad",
+    "value_and_grad", "checkpoint", "remat", "custom_jvp", "custom_vjp",
+}
+
+_DIRECTIVE_RE = re.compile(r"#\s*repro-lint:\s*([a-z-]+)(?:=([\w,-]+))?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding, line-number-independent fingerprint included."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    symbol: str  # enclosing function qualname, or "<module>"
+    line_text: str  # stripped source line — the baseline fingerprint
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Identity under which the baseline suppresses a finding.
+
+        Deliberately excludes the line *number* so unrelated edits above
+        a baselined finding don't resurface it."""
+        return (self.rule, self.path, self.symbol, self.line_text)
+
+    def format(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: [{self.rule}] "
+            f"{self.message} (in {self.symbol})"
+        )
+
+
+@dataclass
+class FileContext:
+    """Parsed source + repo-relative location + inline directives."""
+
+    rel: str  # repo-relative posix path
+    source: str
+    tree: ast.AST = field(init=False)
+    lines: List[str] = field(init=False)
+    #: line number -> set of rule ids disabled on that line ("*" = all)
+    disabled: Dict[int, Set[str]] = field(default_factory=dict)
+    #: line numbers carrying a "jit-root" directive
+    jit_root_lines: Set[int] = field(default_factory=set)
+
+    def __post_init__(self):
+        self.tree = ast.parse(self.source)
+        self.lines = self.source.splitlines()
+        for i, text in enumerate(self.lines, start=1):
+            m = _DIRECTIVE_RE.search(text)
+            if not m:
+                continue
+            kind, arg = m.group(1), m.group(2)
+            if kind == "disable":
+                rules = set((arg or "*").split(","))
+                self.disabled.setdefault(i, set()).update(rules)
+            elif kind == "jit-root":
+                self.jit_root_lines.add(i)
+
+    @property
+    def imports_jax(self) -> bool:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                if any(a.name.split(".")[0] == "jax" for a in node.names):
+                    return True
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and node.module.split(".")[0] == "jax":
+                    return True
+        return False
+
+    @property
+    def is_twin_module(self) -> bool:
+        return self.rel in TWIN_MODULES
+
+    @property
+    def is_kernel(self) -> bool:
+        return self.rel.startswith(KERNEL_PREFIX)
+
+    @property
+    def host_boundary(self) -> bool:
+        return self.rel in HOST_BOUNDARY_FILES or any(
+            self.rel.startswith(p) for p in HOST_BOUNDARY_PREFIXES
+        )
+
+    def is_disabled(self, rule: str, line: int) -> bool:
+        rules = self.disabled.get(line, ())
+        return "*" in rules or rule in rules
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as 'a.b.c' (None if not a chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    return _dotted(node.func)
+
+
+def _is_float_const(node: ast.AST) -> bool:
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub, ast.UAdd)):
+        node = node.operand
+    return isinstance(node, ast.Constant) and isinstance(node.value, float)
+
+
+class _Scanner:
+    """One pass over a file, emitting findings for every applicable rule."""
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self._scope: List[str] = []
+        self._jit_names = self._collect_traced_names()
+
+    # -- plumbing ------------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if self.ctx.is_disabled(rule, line):
+            return
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.ctx.rel,
+                line=line,
+                col=getattr(node, "col_offset", 0),
+                message=message,
+                symbol=".".join(self._scope) or "<module>",
+                line_text=self.ctx.line_text(line),
+            )
+        )
+
+    def _collect_traced_names(self) -> Set[str]:
+        """Names of local functions passed to tracing transforms.
+
+        Resolves one common indirection: ``f = partial(g, ...)`` followed
+        by ``jax.jit(f)`` / ``pallas_call(f, ...)`` marks ``g`` too (the
+        engine's ``step = partial(_jit_run, ...)`` / kernel idiom)."""
+        names: Set[str] = set()
+        # name -> first positional function a partial(...) wraps
+        partial_alias: Dict[str, str] = {}
+
+        def _partial_target(call: ast.AST) -> Optional[str]:
+            if not isinstance(call, ast.Call):
+                return None
+            inner = _call_name(call) or ""
+            if inner.split(".")[-1] != "partial" or not call.args:
+                return None
+            return call.args[0].id if isinstance(call.args[0], ast.Name) else None
+
+        for node in ast.walk(self.ctx.tree):
+            if isinstance(node, ast.Assign):
+                tgt = _partial_target(node.value)
+                if tgt is not None:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            partial_alias[t.id] = tgt
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            fn = _call_name(node)
+            if fn is None or fn.split(".")[-1] not in _TRACING_CALLS:
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+                else:
+                    tgt = _partial_target(arg)
+                    if tgt is not None:
+                        names.add(tgt)
+        for _ in range(4):  # resolve chained partial aliases
+            extra = {partial_alias[n] for n in names if n in partial_alias}
+            if extra <= names:
+                break
+            names |= extra
+        return names
+
+    def _is_jit_root(self, node: ast.FunctionDef) -> bool:
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = _dotted(target) or ""
+            if name.split(".")[-1] in _TRACING_CALLS:
+                return True
+            # @partial(jax.jit, ...) — jit travels as the first argument
+            if isinstance(dec, ast.Call) and dec.args:
+                inner = _dotted(dec.args[0]) or ""
+                if inner.split(".")[-1] in _TRACING_CALLS:
+                    return True
+        if node.name in self._jit_names:
+            return True
+        lines = {node.lineno, node.lineno - 1}
+        if node.decorator_list:
+            lines.add(node.decorator_list[0].lineno - 1)
+        return bool(lines & self.ctx.jit_root_lines)
+
+    # -- entry point ---------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._scan_module_level()
+        self._walk(self.ctx.tree, in_jit=False)
+        return self.findings
+
+    def _walk(self, node: ast.AST, in_jit: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scope.append(child.name)
+                child_in_jit = in_jit or self._is_jit_root(child)
+                if child_in_jit and not in_jit:
+                    _JitBodyChecker(self, child).run()
+                self._walk(child, in_jit=child_in_jit)
+                self._scope.pop()
+            else:
+                self._check_node(child, in_jit)
+                self._walk(child, in_jit)
+
+    # -- module-level rules --------------------------------------------
+
+    def _scan_module_level(self) -> None:
+        if not self.ctx.is_kernel:
+            return
+        body = getattr(self.ctx.tree, "body", [])
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and _is_float_const(stmt.value):
+                self._emit(
+                    "kernel-dtype", stmt,
+                    "module-level bare float constant is a weakly-typed "
+                    "f64 double; wrap in np.float32(...) (or carry a "
+                    "dtype at the use sites)",
+                )
+
+    # -- per-node rules ------------------------------------------------
+
+    def _check_node(self, node: ast.AST, in_jit: bool) -> None:
+        ctx = self.ctx
+        if ctx.is_twin_module and isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "jax":
+                    self._emit(
+                        "twin-import", node,
+                        f"NumPy-twin module imports {alias.name!r}",
+                    )
+        if ctx.is_twin_module and isinstance(node, ast.ImportFrom):
+            if node.module and node.module.split(".")[0] == "jax":
+                self._emit(
+                    "twin-import", node,
+                    f"NumPy-twin module imports from {node.module!r}",
+                )
+
+        if isinstance(node, ast.Attribute):
+            chain = _dotted(node)
+            if (
+                chain
+                and chain.startswith("np.random.")
+                and chain.split(".")[2] not in _SEEDED_RNG_OK
+            ):
+                self._emit(
+                    "unseeded-rng", node,
+                    f"global-state RNG {chain}; draw from an explicitly "
+                    "seeded np.random.default_rng instead",
+                )
+            if ctx.is_kernel and node.attr == "float64":
+                self._emit(
+                    "kernel-dtype", node,
+                    "float64 literal in kernel code (the working float "
+                    "is a parameter; f32 on TPU)",
+                )
+
+        if isinstance(node, ast.Constant) and node.value == "float64":
+            if ctx.is_kernel:
+                self._emit(
+                    "kernel-dtype", node, "float64 dtype string in kernel code"
+                )
+
+        if isinstance(node, ast.Call):
+            name = _call_name(node) or ""
+            if ctx.imports_jax and not ctx.host_boundary:
+                if name == "jax.device_get":
+                    self._emit(
+                        "host-sync", node,
+                        "jax.device_get forces a device->host transfer",
+                    )
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS
+                ):
+                    self._emit(
+                        "host-sync", node,
+                        f".{node.func.attr}() forces or schedules a "
+                        "device->host sync",
+                    )
+            if ctx.is_kernel and name.split(".")[-1] in (
+                "array", "asarray", "full"
+            ) and name.split(".")[0] in ("jnp", "np"):
+                need = 3 if name.endswith("full") else 2
+                has_dtype = len(node.args) >= need or any(
+                    k.arg == "dtype" for k in node.keywords
+                )
+                if not has_dtype:
+                    self._emit(
+                        "kernel-dtype", node,
+                        f"{name}(...) without an explicit dtype in "
+                        "kernel code",
+                    )
+
+
+class _JitBodyChecker:
+    """Taint-based checks inside one jit-root function body.
+
+    Tracer taint seeds from the root's *positional* parameters (the
+    repo convention: keyword-only parameters are the static
+    configuration baked into the compiled program) and propagates
+    through assignments whose right-hand side involves tainted names or
+    ``jnp`` / ``lax`` calls.  Single forward pass in statement order —
+    the engine's traced bodies are straight-line + nested defs, which
+    this covers without a fixpoint."""
+
+    _SANITIZING_ATTRS = {"shape", "dtype", "ndim", "size", "weak_type",
+                         "sharding", "aval"}
+    _TRACER_NAMESPACES = {"jnp", "lax", "pl", "pltpu"}
+
+    def __init__(self, scanner: _Scanner, root: ast.FunctionDef):
+        self.s = scanner
+        self.root = root
+        self.tainted: Set[str] = set()
+        for fn in [root] + [
+            n for n in ast.walk(root)
+            if isinstance(n, ast.FunctionDef) and n is not root
+        ]:
+            args = fn.args.posonlyargs + fn.args.args
+            if fn.args.vararg is not None:
+                args = args + [fn.args.vararg]
+            for a in args:
+                if a.arg in ("self", "cls"):
+                    continue
+                # positional params annotated as plain Python scalars are
+                # compile-time statics by repo convention (e.g.
+                # ``kind: str`` in gap_transform)
+                ann = a.annotation
+                if isinstance(ann, ast.Name) and ann.id in (
+                    "str", "int", "float", "bool", "bytes"
+                ):
+                    continue
+                self.tainted.add(a.arg)
+
+    def run(self) -> None:
+        self._propagate_taint()
+        self._scan_body(self.root)
+
+    def _propagate_taint(self) -> None:
+        """Fixpoint taint propagation over all assignments (and for-loop
+        targets) in the root's body — order-insensitive."""
+        assigns = [
+            n for n in ast.walk(self.root)
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.For))
+        ]
+        for _ in range(16):
+            before = len(self.tainted)
+            for stmt in assigns:
+                if isinstance(stmt, ast.For):
+                    if self._expr_tainted(stmt.iter):
+                        self._taint_target(stmt.target)
+                    continue
+                value = stmt.value
+                if value is not None and self._expr_tainted(value):
+                    targets = (
+                        stmt.targets
+                        if isinstance(stmt, ast.Assign)
+                        else [stmt.target]
+                    )
+                    for t in targets:
+                        self._taint_target(t)
+            if len(self.tainted) == before:
+                break
+
+    def _scan_body(self, fn: ast.FunctionDef) -> None:
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, (ast.If, ast.While)):
+                if self._expr_tainted(stmt.test):
+                    self.s._emit(
+                        "tracer-branch", stmt,
+                        "Python control flow on a tracer-valued "
+                        "expression inside a jit-traced body; use "
+                        "lax.cond / jnp.where",
+                    )
+            elif isinstance(stmt, ast.Assert):
+                if self._expr_tainted(stmt.test):
+                    self.s._emit(
+                        "tracer-branch", stmt,
+                        "assert on a tracer-valued expression inside a "
+                        "jit-traced body",
+                    )
+            elif isinstance(stmt, ast.Call):
+                self._check_call(stmt)
+            elif isinstance(stmt, ast.Attribute):
+                chain = _dotted(stmt)
+                if chain and chain.startswith("np."):
+                    attr = chain.split(".")[1]
+                    if attr not in _ALLOWED_NP_IN_JIT and attr != "random":
+                        self.s._emit(
+                            "np-in-jit", stmt,
+                            f"host NumPy compute {chain} inside a "
+                            "jit-traced body",
+                        )
+                    elif chain.startswith("np.random."):
+                        self.s._emit(
+                            "np-in-jit", stmt,
+                            f"host RNG {chain} inside a jit-traced body",
+                        )
+
+    def _check_call(self, node: ast.Call) -> None:
+        name = _call_name(node) or ""
+        if name in ("float", "int", "bool") and node.args:
+            if self._expr_tainted(node.args[0]):
+                self.s._emit(
+                    "host-sync", node,
+                    f"{name}(tracer) concretizes a traced value "
+                    "(device sync / trace error)",
+                )
+        if name in ("np.asarray", "np.array") and node.args:
+            if self._expr_tainted(node.args[0]):
+                self.s._emit(
+                    "host-sync", node,
+                    f"{name}(tracer) pulls a traced value to host",
+                )
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._taint_target(elt)
+        elif isinstance(target, (ast.Subscript, ast.Starred)):
+            self._taint_target(target.value)
+
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            if node.attr in self._SANITIZING_ATTRS:
+                return False
+            chain = _dotted(node)
+            if chain and chain.split(".")[0] in self._TRACER_NAMESPACES:
+                return True
+            return self._expr_tainted(node.value)
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Call):
+            fn = _call_name(node) or ""
+            head = fn.split(".")[0]
+            if head in self._TRACER_NAMESPACES or fn.startswith("jax.lax"):
+                return True
+            if fn in ("len", "isinstance", "type", "range", "print"):
+                return False
+            return any(
+                self._expr_tainted(a)
+                for a in list(node.args) + [k.value for k in node.keywords]
+            )
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.Lambda)):
+                continue
+            if self._expr_tainted(child):
+                return True
+        return False
+
+
+def scan_source(rel: str, source: str) -> List[Finding]:
+    """Lint one file's source; ``rel`` is its repo-relative posix path."""
+    ctx = FileContext(rel=rel, source=source)
+    return _Scanner(ctx).run()

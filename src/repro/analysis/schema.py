@@ -1,0 +1,111 @@
+"""Declared dtype schema of the fused device engine.
+
+This module is the single written-down source of truth for the dtypes
+the engine's state, constants and outputs are allowed to carry — the
+contract the jaxpr auditor (:mod:`repro.analysis.jaxpr_audit`) checks
+abstractly against every traced entry point, and the vocabulary the
+analytic layer (:mod:`repro.core.waste`, :mod:`repro.core.periods`)
+uses to annotate its formulas.
+
+It is deliberately dependency-light (NumPy only, no JAX import) so that
+``repro.core`` modules can import the type aliases without pulling the
+analysis tooling — or JAX — into their import graph.
+
+Roles
+=====
+
+The engine resolves two dtype knobs from its ``precision`` argument
+(``repro.core.jax_sim.simulate_batch_jax``):
+
+``fdt``
+    the working float — ``float64`` in x64 mode (the default off-TPU,
+    where float-rounding agreement with the NumPy engine is asserted),
+    ``float32`` on TPU;
+``idt``
+    the event-counter int — ``int64`` in x64 mode, ``int32`` otherwise.
+
+Everything else is precision-independent: the lane phase machine is
+``int32``, boolean masks are ``bool``, and the counter-based RNG streams
+are ``uint32``/``uint64`` (Threefry words / SplitMix64 state — see the
+twin registry in :mod:`repro.analysis.twins`).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import numpy as np
+
+__all__ = [
+    "FloatLike",
+    "FloatArray",
+    "IntArray",
+    "BoolArray",
+    "STATE_SCHEMA",
+    "OUT_SCHEMA",
+    "CELL_SUMS_ROLE",
+    "resolve_role",
+]
+
+#: A float64-precision scalar or NumPy-broadcastable array — the value
+#: type of every analytic waste/period formula.  Plain Python floats are
+#: fine (they are IEEE doubles); what the schema forbids is *narrower*
+#: floats (f32) leaking into the analytic/simulated comparison boundary.
+FloatLike = Union[float, np.floating, np.ndarray]
+
+#: An ndarray of the engine's working float (``fdt``; float64 in x64).
+FloatArray = np.ndarray
+
+#: An ndarray of the engine's counter int (``idt``; int64 in x64).
+IntArray = np.ndarray
+
+#: A boolean mask array.
+BoolArray = np.ndarray
+
+#: dtype role of every leaf of the per-lane engine state pytree
+#: (``repro.core.jax_sim._chunk_state``).  Roles: "fdt" (working
+#: float), "idt" (counter int), "int32" (phase machine), "bool".
+STATE_SCHEMA = {
+    "t": "fdt",
+    "saved": "fdt",
+    "unsaved": "fdt",
+    "period_work": "fdt",
+    "na_saved": "fdt",
+    "ep_t0": "fdt",
+    "ep_end": "fdt",
+    "n_faults": "idt",
+    "n_pro": "idt",
+    "n_reg": "idt",
+    "n_mig": "idt",
+    "phase": "int32",
+    "exhausted": "bool",
+}
+
+#: dtype role of every per-lane result array fetched back to the host
+#: (``repro.core.jax_sim._OUT_KEYS``).
+OUT_SCHEMA = {
+    "t": "fdt",
+    "n_faults": "idt",
+    "n_pro": "idt",
+    "n_reg": "idt",
+    "n_mig": "idt",
+    "exhausted": "bool",
+    "phase": "int32",
+}
+
+#: dtype role of the device-reduced per-cell accumulator
+#: (``collect="stats"``): one (n_cells, 11) matrix of Monte-Carlo sums.
+CELL_SUMS_ROLE = "fdt"
+
+
+def resolve_role(role: str, x64: bool = True) -> np.dtype:
+    """Resolve a schema role to the concrete dtype of a precision mode."""
+    if role == "fdt":
+        return np.dtype(np.float64 if x64 else np.float32)
+    if role == "idt":
+        return np.dtype(np.int64 if x64 else np.int32)
+    if role == "int32":
+        return np.dtype(np.int32)
+    if role == "bool":
+        return np.dtype(bool)
+    raise ValueError(f"unknown schema role {role!r}")

@@ -841,6 +841,7 @@ _SM_MIX1 = 0xBF58476D1CE4E5B9
 _SM_MIX2 = 0x94D049BB133111EB
 
 
+# repro-twin: repro.kernels.sim_step.threefry2x32
 def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
     """Vectorized Threefry-2x32 block cipher (NumPy reference).
 
@@ -870,6 +871,7 @@ def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
     return x0, x1
 
 
+# repro-twin: repro.kernels.sim_step.splitmix64
 def splitmix64(key64, ctr):
     """Counter-indexed SplitMix64 draw (NumPy reference): output ``ctr``
     of the stream whose state orbit starts at ``key64`` — i.e.
@@ -889,6 +891,7 @@ def splitmix64(key64, ctr):
     return (z >> np.uint64(32)).astype(np.uint32), z.astype(np.uint32)
 
 
+# repro-twin: repro.kernels.sim_step.uniform24
 def uniform24(bits, dtype=np.float64):
     """Map ``uint32`` words to uniforms in the *open* interval (0, 1):
     the top 24 bits, centered by half an ulp — so ``log`` and ``log1p``
@@ -898,6 +901,7 @@ def uniform24(bits, dtype=np.float64):
     return ((bits >> np.uint32(8)).astype(dtype) + dtype(0.5)) * dtype(2.0**-24)
 
 
+# repro-twin: repro.kernels.sim_step.gap_transform
 def gap_transform_np(kind: str, param: float, mean, x0, x1):
     """Inverse-CDF inter-arrival transform of one counter draw (NumPy
     reference; mirrors :func:`repro.kernels.sim_step.gap_transform`).
@@ -967,6 +971,7 @@ def law_table(dists):
     return law, lp
 
 
+# repro-twin: repro.kernels.sim_step.gap_transform_indexed
 def gap_transform_indexed_np(law, s1, s2, mean, x0, x1):
     """Law-multiplexed :func:`gap_transform_np` (NumPy reference; mirrors
     :func:`repro.kernels.sim_step.gap_transform_indexed`): ``law`` selects

@@ -9,6 +9,13 @@ with a fault predictor of recall ``r`` trusted with probability ``q``,
 together with the case analyses that clamp the period to its admissible
 domain and the proof-backed fact that the optimal ``q`` is always 0 or 1
 (the waste is affine in ``q``).
+
+Dtype contract: every function here is scalar ``float`` — IEEE doubles
+via ``math.*``, the analytic layer's schema role ``"fdt"`` (see
+:mod:`repro.analysis.schema`).  The :mod:`.waste` formulas these optima
+feed are the broadcastable (``FloatLike``) counterparts; the jaxpr
+auditor checks the simulated side of the comparison keeps the same
+precision.
 """
 
 from __future__ import annotations

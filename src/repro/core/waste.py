@@ -31,6 +31,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..analysis.schema import FloatLike
 from .events import mu_e as _mu_e
 from .events import mu_np as _mu_np
 from .events import mu_p as _mu_p
@@ -101,12 +102,14 @@ class PredictorModel:
 # --------------------------------------------------------------------------- #
 # Section 2.1 / Section 3
 # --------------------------------------------------------------------------- #
-def waste_checkpoint_only(T, C):
+def waste_checkpoint_only(T: FloatLike, C: FloatLike) -> FloatLike:
     """Fault-free waste: C / T (Section 2.1)."""
     return C / T
 
 
-def waste_young(T, C, D, R, mu):
+def waste_young(
+    T: FloatLike, C: FloatLike, D: FloatLike, R: FloatLike, mu: FloatLike
+) -> FloatLike:
     """WASTE^{q=0}: Young's waste model (Section 3.3).
 
     WASTE_Y(T) = C/T + (1/mu) [ T/2 + D + R ]
@@ -114,7 +117,10 @@ def waste_young(T, C, D, R, mu):
     return C / T + (T / 2.0 + D + R) / mu
 
 
-def waste_exact(T, q, C, D, R, mu, r, p):
+def waste_exact(
+    T: FloatLike, q: FloatLike, C: FloatLike, D: FloatLike, R: FloatLike,
+    mu: FloatLike, r: FloatLike, p: FloatLike,
+) -> FloatLike:
     """Equation (1): predictor with exact event dates.
 
     WASTE = C/T + (1/mu) [ (1 - r q) T/2 + D + R + (q r / p) C ]
@@ -123,7 +129,10 @@ def waste_exact(T, q, C, D, R, mu, r, p):
     return C / T + ((1.0 - r * q) * T / 2.0 + D + R + pred_term) / mu
 
 
-def waste_migration(T, q, C, D, R, M, mu, r, p):
+def waste_migration(
+    T: FloatLike, q: FloatLike, C: FloatLike, D: FloatLike, R: FloatLike,
+    M: FloatLike, mu: FloatLike, r: FloatLike, p: FloatLike,
+) -> FloatLike:
     """Equation (3): proactive migration instead of proactive checkpoint.
 
     WASTE = C/T + (1/mu) [ (1 - r q)(T/2 + D + R) + (q r / p) M ]
@@ -135,13 +144,16 @@ def waste_migration(T, q, C, D, R, M, mu, r, p):
 # --------------------------------------------------------------------------- #
 # Section 4: window-based predictions
 # --------------------------------------------------------------------------- #
-def i_prime(q, p, I, E_f):
+def i_prime(q: FloatLike, p: FloatLike, I: FloatLike, E_f: FloatLike) -> FloatLike:
     """I' = q ((1-p) I + p E_I^f): expected time spent in proactive mode per
     prediction (Section 4.1)."""
     return q * ((1.0 - p) * I + p * E_f)
 
 
-def waste_instant(T_R, q, C, D, R, mu, r, p, I, E_f):
+def waste_instant(
+    T_R: FloatLike, q: FloatLike, C: FloatLike, D: FloatLike, R: FloatLike,
+    mu: FloatLike, r: FloatLike, p: FloatLike, I: FloatLike, E_f: FloatLike,
+) -> FloatLike:
     """Equation (5): strategy Instant (ignore the window, act at t0).
 
     WASTE = C/T_R + (1/mu)[ (1-rq) T_R/2 + D + R + (qr/p) C
@@ -152,7 +164,10 @@ def waste_instant(T_R, q, C, D, R, mu, r, p, I, E_f):
     return C / T_R + ((1.0 - r * q) * T_R / 2.0 + D + R + pred_term + lost) / mu
 
 
-def waste_nockpt(T_R, q, C, D, R, mu, r, p, I, E_f):
+def waste_nockpt(
+    T_R: FloatLike, q: FloatLike, C: FloatLike, D: FloatLike, R: FloatLike,
+    mu: FloatLike, r: FloatLike, p: FloatLike, I: FloatLike, E_f: FloatLike,
+) -> FloatLike:
     """Equation (6): strategy NoCkptI (no checkpoints inside the window).
 
     Outside the validity domain (windows so long/frequent that I' > mu_P,
@@ -172,7 +187,11 @@ def waste_nockpt(T_R, q, C, D, R, mu, r, p, I, E_f):
     return waste
 
 
-def waste_withckpt(T_R, T_P, q, C, D, R, mu, r, p, I, E_f):
+def waste_withckpt(
+    T_R: FloatLike, T_P: FloatLike, q: FloatLike, C: FloatLike,
+    D: FloatLike, R: FloatLike, mu: FloatLike, r: FloatLike, p: FloatLike,
+    I: FloatLike, E_f: FloatLike,
+) -> FloatLike:
     """Equation (4): strategy WithCkptI (periodic checkpoints of period T_P
     inside the window)."""
     if r <= 0:
@@ -190,8 +209,10 @@ def waste_withckpt(T_R, T_P, q, C, D, R, mu, r, p, I, E_f):
 
 
 def waste_two_level(
-    T_m, T_d, C_m, C_d, D, R_m, R_d, mu, f, r: float = 0.0, q: float = 0.0
-):
+    T_m: FloatLike, T_d: FloatLike, C_m: FloatLike, C_d: FloatLike,
+    D: FloatLike, R_m: FloatLike, R_d: FloatLike, mu: FloatLike,
+    f: FloatLike, r: float = 0.0, q: float = 0.0,
+) -> FloatLike:
     """Beyond-paper: two-level checkpointing (memory buddy tier + disk).
 
     A fraction ``f`` of failures is recoverable from the in-memory buddy
@@ -214,7 +235,10 @@ def waste_two_level(
     return waste
 
 
-def withckpt_minus_nockpt(T_P, C, mu, r, p, I, E_f):
+def withckpt_minus_nockpt(
+    T_P: FloatLike, C: FloatLike, mu: FloatLike, r: FloatLike,
+    p: FloatLike, I: FloatLike, E_f: FloatLike,
+) -> FloatLike:
     """Equation (11) at q=1: WASTE_withCkpt - WASTE_noCkpt.
 
     = (r ((1-p) I + p E_f) / (p mu)) * C / T_P + (r/mu) (T_P - E_f)

@@ -81,10 +81,11 @@ def paper_grid_cells(
         for n in n_list:
             plat = platform(n, M=migration_m)
             exact_pred = PredictorModel(pred.recall, pred.precision, lead=lead)
+            prefix = f"{pk}/N{n}"
 
-            def cell(tag: str, strat, p) -> ExperimentCell:
+            def cell(tag: str, strat, p, prefix=prefix, plat=plat) -> ExperimentCell:
                 return ExperimentCell(
-                    label=f"{pk}/N{n}/{tag}",
+                    label=f"{prefix}/{tag}",
                     work=work,
                     platform=plat,
                     predictor=p,

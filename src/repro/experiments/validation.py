@@ -169,8 +169,14 @@ def cell_z_rows(
         wa = analytic_waste(cr.cell)
         v = model_validity(cr.cell)
         n = cr.n_runs
-        se = cr.ci95_waste / 1.96
-        delta = cr.mean_waste - wa
+        # promote the simulated moments to IEEE doubles at the boundary:
+        # on the f32 (TPU) engine path the sweep statistics arrive as
+        # float32 scalars, and `f32 - float` would silently narrow the
+        # analytic-vs-simulated comparison the z-test is built on
+        # (schema role "fdt" at the analytic layer is float64; see
+        # repro.analysis.schema)
+        se = float(cr.ci95_waste) / 1.96
+        delta = float(cr.mean_waste) - wa
         if delta > 0:
             rel = rel_margin_hi
         else:
@@ -187,7 +193,7 @@ def cell_z_rows(
                 strategy=cr.cell.strategy.name,
                 dist=cr.cell.dist.name,
                 n_runs=n,
-                mean_sim=cr.mean_waste,
+                mean_sim=float(cr.mean_waste),
                 se_sim=se,
                 analytic=wa,
                 delta=delta,

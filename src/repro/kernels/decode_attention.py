@@ -17,11 +17,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["decode_attention_bhd"]
 
-NEG_INF = -1e30
+NEG_INF = np.float32(-1e30)
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, blk_k):

@@ -24,11 +24,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["flash_attention_bhsd"]
 
-NEG_INF = -1e30
+NEG_INF = np.float32(-1e30)
 
 
 def _flash_kernel(
@@ -112,7 +113,7 @@ def flash_attention_bhsd(
         out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
         scratch_shapes=[
-            pl.MemorySpace.ANY if False else _vmem((blk_q, 1), jnp.float32),
+            _vmem((blk_q, 1), jnp.float32),
             _vmem((blk_q, 1), jnp.float32),
             _vmem((blk_q, hd), jnp.float32),
         ],

@@ -90,6 +90,7 @@ FLAG_CKPT_OK = 8  # a checkpoint committed (saved <- saved + unsaved)
 FLAG_REG = 16  # ... and it was a *regular* (period-resetting) checkpoint
 
 
+# repro-lint: jit-root
 def primitive_update(
     prim, cont, target, ckend, nf, t, saved, unsaved, pw, W, DR,
     *, eps: float, reg_cont: int, stream=None, gap=None,
@@ -166,6 +167,8 @@ def primitive_update(
 # --------------------------------------------------------------------------- #
 # Counter-based RNG sampling step (device trace generation)
 # --------------------------------------------------------------------------- #
+# repro-twin: repro.core.events.threefry2x32
+# repro-lint: jit-root
 def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
     """Threefry-2x32 over uint32 arrays; the jnp twin of
     :func:`repro.core.events.threefry2x32` (bit-identical by the shared
@@ -189,6 +192,8 @@ def threefry2x32(k0, k1, c0, c1, rounds: int = THREEFRY_ROUNDS):
     return x0, x1
 
 
+# repro-twin: repro.core.events.uniform24
+# repro-lint: jit-root
 def uniform24(bits, dtype):
     """uint32 words -> uniforms in the open interval (0, 1) (top 24 bits,
     half-ulp centered); see the NumPy twin in ``core.events``."""
@@ -197,6 +202,8 @@ def uniform24(bits, dtype):
     ) * jnp.asarray(2.0**-24, dtype)
 
 
+# repro-twin: repro.core.events.splitmix64
+# repro-lint: jit-root
 def splitmix64(key64, ctr):
     """Counter-indexed SplitMix64 draw (jnp twin of
     ``core.events.splitmix64``): 64 output bits as (high, low) uint32
@@ -211,6 +218,7 @@ def splitmix64(key64, ctr):
     return (z >> 32).astype(jnp.uint32), z.astype(jnp.uint32)
 
 
+# repro-lint: jit-root
 def stream_key(k0, k1):
     """Pack a Threefry subkey pair into the per-draw key representation:
     a single uint64 (SplitMix64 draws) when 64-bit integers are enabled
@@ -222,6 +230,7 @@ def stream_key(k0, k1):
     return (k0, k1)
 
 
+# repro-lint: jit-root
 def counter_words(key, ctr):
     """Output words of draw ``ctr`` for a :func:`stream_key` key."""
     if len(key) == 1:
@@ -229,12 +238,14 @@ def counter_words(key, ctr):
     return threefry2x32(key[0], key[1], ctr.astype(jnp.uint32), jnp.uint32(0))
 
 
+# repro-lint: jit-root
 def counter_uniform(key, ctr, dtype):
     """Draw ``ctr``'s uniform from the stream keyed ``key``."""
     x0, _ = counter_words(key, ctr)
     return uniform24(x0, dtype)
 
 
+# repro-lint: jit-root
 def counter_uniform2(key, ctr, dtype):
     """Both uniforms of one draw (e.g. the TP coin stream: word 0 is the
     predicted coin, word 1 the window-offset fraction)."""
@@ -242,6 +253,8 @@ def counter_uniform2(key, ctr, dtype):
     return uniform24(x0, dtype), uniform24(x1, dtype)
 
 
+# repro-twin: repro.core.events.gap_transform_np
+# repro-lint: jit-root
 def gap_transform(kind: str, param: float, mean, x0, x1, dtype):
     """Inverse-CDF inter-arrival transform of one counter draw (jnp twin
     of ``core.events.gap_transform_np``; ``kind`` is compile-time static).
@@ -265,6 +278,8 @@ def gap_transform(kind: str, param: float, mean, x0, x1, dtype):
     return jnp.maximum(g, 1e-9)
 
 
+# repro-twin: repro.core.events.gap_transform_indexed_np
+# repro-lint: jit-root
 def gap_transform_indexed(law, s1, s2, mean, x0, x1, dtype):
     """Law-multiplexed inverse-CDF transform: the branchless select twin
     of :func:`gap_transform` for mixed-law cell tables.
@@ -303,6 +318,7 @@ def gap_transform_indexed(law, s1, s2, mean, x0, x1, dtype):
     return jnp.maximum(g, 1e-9)
 
 
+# repro-lint: jit-root
 def stream_advance(
     mask, ctr, tm, key, mean, horizon, *, kind, param, law=None, lp=None,
 ):
@@ -333,6 +349,7 @@ def stream_advance(
 # --------------------------------------------------------------------------- #
 # Cell multiplexing (fused experiment sweeps)
 # --------------------------------------------------------------------------- #
+# repro-lint: jit-root
 def cell_gather(consts: dict, cidx, keys) -> dict:
     """Broadcast per-cell table rows to per-lane arrays.
 
@@ -345,11 +362,13 @@ def cell_gather(consts: dict, cidx, keys) -> dict:
     from ``consts`` are skipped: trace-mode-specific tables)."""
     out = dict(consts)
     for k in keys:
-        if k in consts:
+        # keys is a static tuple of table names, not traced data
+        if k in consts:  # repro-lint: disable=tracer-branch
             out[k] = jnp.take(consts[k], cidx, axis=0)
     return out
 
 
+# repro-lint: jit-root
 def segment_cell_sums(values, cidx, num_cells: int):
     """Per-cell sums of per-lane columns in one segment reduction.
 
@@ -411,7 +430,8 @@ def masked_stream_advance(
     fdt = tm.dtype
 
     def as2d(x, dtype=None):
-        x = jnp.asarray(x) if dtype is None else jnp.asarray(x, dtype)
+        # dtype=None deliberately preserves the key words' uint dtype
+        x = jnp.asarray(x) if dtype is None else jnp.asarray(x, dtype)  # repro-lint: disable=kernel-dtype
         return x.reshape(rows, 128)
 
     ins = [
@@ -552,7 +572,8 @@ def masked_primitive_update(
     else:
         skey, sctr, _, smean, shorizon = stream[:5]
         ins += [
-            *[jnp.asarray(k).reshape(rows, 128) for k in skey],
+            # dtype-preserving on purpose: uint64 (SplitMix) or uint32 pair
+            *[jnp.asarray(k).reshape(rows, 128) for k in skey],  # repro-lint: disable=kernel-dtype
             as2d(sctr, jnp.int32),
             as2d(smean, fdt),
             as2d(shorizon, fdt),

@@ -53,14 +53,14 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results
 
 
 def _flags_for(shape, overrides=None) -> RuntimeFlags:
-    kw = dict(
-        attn_impl="auto",
+    kw = {
+        "attn_impl": "auto",
         # training uses the chunked (flash-style) path from 4k up: dense
         # scores at (B/dp, H/tp, S, S) f32 blow VMEM/HBM budgets
-        dense_attn_max=2048 if shape.kind == "train" else 8192,
-        kv_chunk=1024,
-        remat_policy="full" if shape.kind == "train" else "none",
-    )
+        "dense_attn_max": 2048 if shape.kind == "train" else 8192,
+        "kv_chunk": 1024,
+        "remat_policy": "full" if shape.kind == "train" else "none",
+    }
     if overrides:
         kw.update(overrides)
     return RuntimeFlags(**kw)

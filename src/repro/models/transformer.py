@@ -90,11 +90,11 @@ class LanguageModel:
         self,
         cfg: ArchConfig,
         rules: Optional[ShardingRules] = None,
-        flags: RuntimeFlags = RuntimeFlags(),
+        flags: Optional[RuntimeFlags] = None,
     ):
         self.cfg = cfg
         self.rules = rules
-        self.flags = flags
+        self.flags = flags if flags is not None else RuntimeFlags()
         self.param_dtype = _dtype_of(cfg.param_dtype)
 
     # ------------------------------------------------------------------ #
@@ -141,7 +141,9 @@ class LanguageModel:
         blocks = []
         for pi, spec in enumerate(cfg.pattern):
             keys = jax.random.split(jax.random.fold_in(kb, pi), cfg.n_repeats)
-            blocks.append(jax.vmap(lambda k: self._init_block(k, spec))(keys))
+            blocks.append(
+                jax.vmap(lambda k, spec=spec: self._init_block(k, spec))(keys)
+            )
         params["blocks"] = tuple(blocks)
         return params
 

@@ -1,0 +1,437 @@
+"""Tests for the ``repro.analysis`` static-analysis suite.
+
+Three families mirror the three passes:
+
+* per-rule lint fixtures — every rule fires on a seeded violation,
+  stays quiet on the idiomatic negative, and honours its
+  ``# repro-lint: disable=`` escape hatch;
+* twin parity — the checked-in registry passes, a mutated twin (one
+  rotation constant changed in memory) fails with a diff, and the
+  annotation cross-check catches unregistered / unannotated twins;
+* jaxpr audit — the engine's entry points pass in both trace modes,
+  and deliberately seeded violations (an f32 round-trip, a host
+  ``np.asarray`` of a tracer, undonated buffers) are each caught.
+
+The lint/twin tests are pure AST work (no JAX); the audit tests trace
+abstractly only — nothing in this file executes a compiled program.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import run_all
+from repro.analysis.jaxpr_audit import (
+    audit_callable,
+    audit_engine,
+    audit_mixed_law,
+)
+from repro.analysis.linter import (
+    lint_tree,
+    load_baseline,
+    partition_findings,
+    repo_root,
+)
+from repro.analysis.rules import RULES, scan_source
+from repro.analysis.twins import (
+    TWIN_REGISTRY,
+    TwinPair,
+    check_annotations,
+    check_twins,
+)
+
+ROOT = repo_root()
+
+
+def _rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------------- #
+# AST lint: one positive, one negative, one disable per rule
+# --------------------------------------------------------------------- #
+class TestHostSync:
+    REL = "src/repro/core/somewhere.py"
+
+    def test_flags_device_get(self):
+        src = "import jax\n\ndef f(x):\n    return jax.device_get(x)\n"
+        assert "host-sync" in _rules_of(scan_source(self.REL, src))
+
+    def test_flags_sync_methods(self):
+        src = "import jax\n\ndef f(x):\n    return x.block_until_ready()\n"
+        assert "host-sync" in _rules_of(scan_source(self.REL, src))
+
+    def test_flags_float_of_tracer_in_jit(self):
+        src = (
+            "import jax\nimport jax.numpy as jnp\n\n"
+            "@jax.jit\ndef f(x):\n    return float(x)\n"
+        )
+        assert "host-sync" in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_boundary_module(self):
+        src = "import jax\n\ndef f(x):\n    return jax.device_get(x)\n"
+        for rel in ("benchmarks/timing.py", "src/repro/experiments/runner.py"):
+            assert "host-sync" not in _rules_of(scan_source(rel, src))
+
+    def test_quiet_without_jax_import(self):
+        # .item() on a plain NumPy scalar is not a device sync
+        src = "import numpy as np\n\ndef f(x):\n    return np.float64(x).item()\n"
+        assert "host-sync" not in _rules_of(scan_source(self.REL, src))
+
+    def test_disable_comment(self):
+        src = (
+            "import jax\n\ndef f(x):\n"
+            "    return jax.device_get(x)  # repro-lint: disable=host-sync\n"
+        )
+        assert scan_source(self.REL, src) == []
+
+
+class TestTwinImport:
+    TWIN = "src/repro/core/events.py"
+
+    def test_flags_jax_import_in_twin_module(self):
+        assert "twin-import" in _rules_of(scan_source(self.TWIN, "import jax\n"))
+
+    def test_flags_from_import(self):
+        src = "from jax import numpy as jnp\n"
+        assert "twin-import" in _rules_of(scan_source(self.TWIN, src))
+
+    def test_quiet_elsewhere(self):
+        rel = "src/repro/core/jax_sim.py"
+        assert "twin-import" not in _rules_of(scan_source(rel, "import jax\n"))
+
+    def test_disable_comment(self):
+        src = "import jax  # repro-lint: disable=twin-import\n"
+        assert scan_source(self.TWIN, src) == []
+
+
+class TestNpInJit:
+    REL = "src/repro/core/somewhere.py"
+
+    def test_flags_np_compute_in_jit(self):
+        src = (
+            "import jax\nimport numpy as np\n\n"
+            "@jax.jit\ndef f(x):\n    return np.cumsum(x)\n"
+        )
+        assert "np-in-jit" in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_dtype_references(self):
+        src = (
+            "import jax\nimport numpy as np\nimport jax.numpy as jnp\n\n"
+            "@jax.jit\ndef f(x):\n"
+            "    return jnp.asarray(x, np.float64) + np.pi\n"
+        )
+        assert "np-in-jit" not in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_outside_jit(self):
+        src = "import numpy as np\n\ndef f(x):\n    return np.cumsum(x)\n"
+        assert "np-in-jit" not in _rules_of(scan_source(self.REL, src))
+
+    def test_disable_comment(self):
+        src = (
+            "import jax\nimport numpy as np\n\n"
+            "@jax.jit\ndef f(x):\n"
+            "    return np.cumsum(x)  # repro-lint: disable=np-in-jit\n"
+        )
+        assert scan_source(self.REL, src) == []
+
+
+class TestTracerBranch:
+    REL = "src/repro/core/somewhere.py"
+
+    def test_flags_if_on_tracer_param(self):
+        src = (
+            "import jax\n\n@jax.jit\ndef f(x):\n"
+            "    if x > 0:\n        return x\n    return -x\n"
+        )
+        assert "tracer-branch" in _rules_of(scan_source(self.REL, src))
+
+    def test_flags_branch_via_partial_jit_root(self):
+        # jit reaches the body through functools.partial indirection
+        src = (
+            "import jax\nfrom functools import partial\n\n"
+            "def _run(consts, state):\n"
+            "    if state:\n        return consts\n    return state\n\n"
+            "step = jax.jit(partial(_run, {}))\n"
+        )
+        assert "tracer-branch" in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_static_kwonly_param(self):
+        # kw-only params are the static configuration by repo convention
+        src = (
+            "import jax\nfrom functools import partial\n\n"
+            "@partial(jax.jit, static_argnames=('mode',))\n"
+            "def f(x, *, mode):\n"
+            "    if mode == 'fast':\n        return x\n    return x + 1\n"
+        )
+        assert "tracer-branch" not in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_scalar_annotated_param(self):
+        # positional params annotated as Python scalars are statics too
+        src = (
+            "import jax\n\n@jax.jit\ndef f(x, kind: str):\n"
+            "    if kind == 'exp':\n        return x\n    return x + 1\n"
+        )
+        assert "tracer-branch" not in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_shape_branch(self):
+        src = (
+            "import jax\n\n@jax.jit\ndef f(x):\n"
+            "    if x.ndim == 2:\n        return x\n    return x[None]\n"
+        )
+        assert "tracer-branch" not in _rules_of(scan_source(self.REL, src))
+
+    def test_disable_comment(self):
+        src = (
+            "import jax\n\n@jax.jit\ndef f(x):\n"
+            "    if x > 0:  # repro-lint: disable=tracer-branch\n"
+            "        return x\n    return -x\n"
+        )
+        assert scan_source(self.REL, src) == []
+
+
+class TestUnseededRng:
+    REL = "src/repro/experiments/somewhere.py"
+
+    def test_flags_global_rng(self):
+        src = "import numpy as np\n\nx = np.random.rand(4)\n"
+        assert "unseeded-rng" in _rules_of(scan_source(self.REL, src))
+
+    def test_flags_global_seed(self):
+        src = "import numpy as np\n\nnp.random.seed(0)\n"
+        assert "unseeded-rng" in _rules_of(scan_source(self.REL, src))
+
+    def test_quiet_on_default_rng(self):
+        src = (
+            "import numpy as np\n\n"
+            "rng = np.random.default_rng(7)\nx = rng.random(4)\n"
+        )
+        assert "unseeded-rng" not in _rules_of(scan_source(self.REL, src))
+
+    def test_disable_comment(self):
+        src = (
+            "import numpy as np\n\n"
+            "x = np.random.rand(4)  # repro-lint: disable=unseeded-rng\n"
+        )
+        assert scan_source(self.REL, src) == []
+
+
+class TestKernelDtype:
+    KERNEL = "src/repro/kernels/somewhere.py"
+
+    def test_flags_float64_literal(self):
+        src = "import jax.numpy as jnp\n\ndef f(x):\n    return jnp.float64(x)\n"
+        assert "kernel-dtype" in _rules_of(scan_source(self.KERNEL, src))
+
+    def test_flags_module_level_bare_float(self):
+        src = "NEG_INF = -1e30\n"
+        assert "kernel-dtype" in _rules_of(scan_source(self.KERNEL, src))
+
+    def test_flags_asarray_without_dtype(self):
+        src = "import jax.numpy as jnp\n\ndef f(x):\n    return jnp.asarray(x)\n"
+        assert "kernel-dtype" in _rules_of(scan_source(self.KERNEL, src))
+
+    def test_quiet_with_explicit_dtype(self):
+        src = (
+            "import numpy as np\nimport jax.numpy as jnp\n\n"
+            "NEG_INF = np.float32(-1e30)\n\n"
+            "def f(x, dtype):\n    return jnp.asarray(x, dtype)\n"
+        )
+        assert "kernel-dtype" not in _rules_of(scan_source(self.KERNEL, src))
+
+    def test_quiet_outside_kernels(self):
+        src = "import jax.numpy as jnp\n\ndef f(x):\n    return jnp.asarray(x)\n"
+        rel = "src/repro/core/jax_sim.py"
+        assert "kernel-dtype" not in _rules_of(scan_source(rel, src))
+
+    def test_disable_comment(self):
+        src = (
+            "import jax.numpy as jnp\n\ndef f(x):\n"
+            "    return jnp.asarray(x)  # repro-lint: disable=kernel-dtype\n"
+        )
+        assert scan_source(self.KERNEL, src) == []
+
+
+class TestLintTree:
+    def test_repo_has_no_new_findings(self):
+        findings = lint_tree(ROOT)
+        new, _, stale = partition_findings(findings, load_baseline(ROOT))
+        assert not new, "\n".join(f.format() for f in new)
+        assert not stale, f"stale baseline entries: {stale}"
+
+    def test_baseline_entries_are_justified(self):
+        baseline = json.loads((ROOT / "LINT_BASELINE.json").read_text())
+        for entry in baseline["findings"]:
+            just = entry.get("justification", "")
+            assert just and not just.startswith("TODO"), entry
+
+    def test_fingerprint_survives_line_shift(self):
+        src = "import jax\n\ndef f(x):\n    return jax.device_get(x)\n"
+        shifted = "import jax\n\n# a new comment line\n" + src.split("\n\n", 1)[1]
+        rel = "src/repro/core/somewhere.py"
+        fp = lambda s: [f.fingerprint() for f in scan_source(rel, s)]
+        assert fp(src) == fp(shifted)
+
+
+# --------------------------------------------------------------------- #
+# twin parity
+# --------------------------------------------------------------------- #
+class TestTwins:
+    def test_registry_passes_on_checkout(self):
+        errors = check_twins(ROOT)
+        assert errors == [], "\n\n".join(errors)
+
+    def test_mutated_twin_fails_with_diff(self):
+        # rotate constant 31 -> 29 in the NumPy splitmix64 only
+        mod = "repro.core.events"
+        src = (ROOT / "src/repro/core/events.py").read_text()
+        mutated = src.replace("z ^ (z >> np.uint64(31))", "z ^ (z >> np.uint64(29))")
+        assert mutated != src
+        errors = check_twins(ROOT, sources={mod: mutated})
+        assert len(errors) == 1
+        assert "splitmix64" in errors[0]
+        assert "---" in errors[0] and "+++" in errors[0]  # unified diff
+
+    def test_unannotated_registered_twin_fails(self):
+        mod = "repro.core.events"
+        src = (ROOT / "src/repro/core/events.py").read_text()
+        stripped = src.replace(
+            "# repro-twin: repro.kernels.sim_step.splitmix64\n", ""
+        )
+        assert stripped != src
+        errors = check_annotations(ROOT, sources={mod: stripped})
+        assert any("missing" in e and "splitmix64" in e for e in errors)
+
+    def test_annotated_unregistered_twin_fails(self):
+        mod = "repro.core.events"
+        src = (ROOT / "src/repro/core/events.py").read_text()
+        extra = src + (
+            "\n\n# repro-twin: repro.kernels.sim_step.bogus\n"
+            "def bogus_np(x):\n    return x\n"
+        )
+        errors = check_annotations(ROOT, sources={mod: extra})
+        assert any("unregistered" in e and "bogus_np" in e for e in errors)
+
+    def test_missing_function_reported(self):
+        pair = TwinPair(
+            "repro.core.events", "does_not_exist",
+            "repro.kernels.sim_step", "splitmix64",
+        )
+        errors = check_twins(ROOT, registry=(pair,))
+        assert any("not found" in e for e in errors)
+
+    def test_normalizer_erases_dialect_only_noise(self):
+        # pure dialect differences (np vs jnp, dtype plumbing, np.pi vs
+        # its IEEE value) must compare equal
+        np_side = (
+            "def tw(x, dtype=None):\n"
+            '    """doc"""\n'
+            "    x = np.asarray(x, np.float64)\n"
+            "    return np.power(x, 2.0) * (2.0 * np.pi)\n"
+        )
+        jnp_side = (
+            "def tw(x):\n"
+            "    return jnp.power(x, 2.0) * (2.0 * 3.141592653589793)\n"
+        )
+        pair = TwinPair("m_np", "tw", "m_jnp", "tw")
+        errors = check_twins(
+            ROOT, registry=(pair,),
+            sources={
+                "m_np": "# repro-twin: m_jnp.tw\n" + np_side,
+                "m_jnp": "# repro-twin: m_np.tw\n" + jnp_side,
+            },
+        )
+        assert errors == [], "\n\n".join(errors)
+
+
+# --------------------------------------------------------------------- #
+# jaxpr audit
+# --------------------------------------------------------------------- #
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+class TestJaxprAudit:
+    @pytest.mark.parametrize("trace_mode", ["device", "host"])
+    def test_engine_lanes_passes(self, trace_mode):
+        report = audit_engine("lanes", trace_mode)
+        assert report.ok, report.format()
+        assert any("donated" in p for p in report.passed)
+
+    def test_engine_stats_passes_and_is_o_cells(self):
+        report = audit_engine("stats", "device")
+        assert report.ok, report.format()
+        assert any("O(cells)" in p for p in report.passed)
+
+    def test_mixed_law_single_executable(self):
+        report = audit_mixed_law()
+        assert report.ok, report.format()
+        assert any("one executable" in p for p in report.passed)
+
+    def test_seeded_f32_roundtrip_is_caught(self):
+        def bad(x):
+            return x.astype(jnp.float32).astype(jnp.float64) * 2.0
+
+        x = np.zeros((8,), np.float64)
+        report = audit_callable(bad, x, label="f32-roundtrip",
+                                check_outputs=False)
+        assert not report.ok
+        assert any("float32" in e or "convert_element_type" in e
+                   for e in report.errors)
+
+    def test_seeded_host_transfer_is_caught(self):
+        def bad(x):
+            return jnp.asarray(np.asarray(x).cumsum())
+
+        x = np.zeros((8,), np.float64)
+        report = audit_callable(bad, x, label="host-transfer",
+                                check_outputs=False)
+        assert not report.ok
+        assert any("abstract trace failed" in e for e in report.errors)
+
+    def test_seeded_weak_type_is_caught(self):
+        def bad(x):
+            # jnp.asarray of a Python float carries weak_type=True
+            return {"t": x.sum(), "lit": jnp.asarray(3.0)}
+
+        x = np.zeros((8,), np.float64)
+        report = audit_callable(bad, x, label="weak-type")
+        assert any("weakly typed" in e for e in report.errors)
+
+    def test_missing_donation_is_caught(self):
+        def f(x):
+            return x + 1.0
+
+        x = np.zeros((8,), np.float64)
+        report = audit_callable(
+            f, x, label="no-donation", expect_donation="state",
+            check_outputs=False,
+        )
+        assert any("no tf.aliasing_output" in e for e in report.errors)
+
+    def test_schema_role_mismatch_is_caught(self):
+        def bad(x):
+            # 't' carries schema role "fdt" (float64 in x64) — returning
+            # it as int32 must trip the schema check
+            return {"t": jnp.zeros((4,), jnp.int32), "y": x}
+
+        x = np.zeros((8,), np.float64)
+        report = audit_callable(bad, x, label="schema-mismatch")
+        assert any("schema role" in e for e in report.errors)
+
+
+class TestRunAll:
+    def test_run_all_clean_without_jaxpr(self):
+        # lint + twins only (the jaxpr pass is covered above; skipping it
+        # keeps this a fast AST-only smoke check of the aggregate report)
+        code, report = run_all(ROOT, jaxpr=False)
+        assert code == 0, json.dumps(report, indent=2)
+        assert report["lint"]["new"] == []
+        assert report["twins"]["errors"] == []
+
+    def test_rule_table_is_documented(self):
+        import repro.analysis as A
+
+        for rule in RULES:
+            assert f"``{rule}``" in A.__doc__

@@ -85,7 +85,7 @@ class TestAdamW:
         s_q = adamw_init(params, quantize=True)
         p_fp, p_q = params, params
         rng = np.random.default_rng(1)
-        for i in range(10):
+        for _ in range(10):
             g = jax.tree.map(
                 lambda p: jnp.asarray(
                     rng.standard_normal(p.shape), jnp.float32

@@ -275,7 +275,7 @@ def test_per_cell_n_runs_heterogeneity():
     assert grid.n_lanes == 15
     for engine, kw in [
         ("batch", {}), ("legacy", {}),
-        ("jax", dict(trace_mode="device")),
+        ("jax", {"trace_mode": "device"}),
     ]:
         sweep = run_grid(grid, engine=engine, **kw)
         assert [c.waste.shape[0] for c in sweep.cells] == [3, 5, 7]

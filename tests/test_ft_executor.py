@@ -243,7 +243,7 @@ class TestElastic:
     def test_no_false_positives_when_uniform(self):
         det = StragglerDetector(n_ranks=4, window=8)
         rng = np.random.default_rng(1)
-        for t in range(40):
+        for _t in range(40):
             for r in range(4):
                 det.record(r, 1.0 + rng.normal(0, 0.05))
         assert det.check() == []

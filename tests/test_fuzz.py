@@ -179,17 +179,17 @@ def _check_differential(mu_mn, c_mn, law_key, mode, window, q, recall,
 
 def _params_from_seed(i: int):
     rng = np.random.default_rng(1000 + i)
-    return dict(
-        mu_mn=float(rng.uniform(400.0, 2000.0)),
-        c_mn=float(rng.uniform(3.0, 15.0)),
-        law_key=sorted(LAWS)[i % len(LAWS)],
-        mode=MODES[i % len(MODES)],
-        window=[0.0, 1500.0, 4000.0][i % 3],
-        q=float(i % 2),
-        recall=float(rng.uniform(0.3, 0.95)),
-        precision=float(rng.uniform(0.3, 0.95)),
-        seed=int(rng.integers(0, 10_000)),
-    )
+    return {
+        "mu_mn": float(rng.uniform(400.0, 2000.0)),
+        "c_mn": float(rng.uniform(3.0, 15.0)),
+        "law_key": sorted(LAWS)[i % len(LAWS)],
+        "mode": MODES[i % len(MODES)],
+        "window": [0.0, 1500.0, 4000.0][i % 3],
+        "q": float(i % 2),
+        "recall": float(rng.uniform(0.3, 0.95)),
+        "precision": float(rng.uniform(0.3, 0.95)),
+        "seed": int(rng.integers(0, 10_000)),
+    }
 
 
 try:

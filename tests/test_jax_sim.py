@@ -942,7 +942,7 @@ def test_device_gen_mixed_law_stats_transfer_guard():
 
     strat, cidx, spec = _mixed_law_fixture()
     args = ([WORK] * 4, [PLAT] * 4, [strat] * 4, spec)
-    kw = dict(collect="stats", devices=_n_devices())
+    kw = {"collect": "stats", "devices": _n_devices()}
     ref = simulate_batch_jax(*args, **kw)  # compile outside the guard
     with jax.transfer_guard("disallow"):
         got = simulate_batch_jax(*args, **kw)

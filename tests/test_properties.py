@@ -167,7 +167,7 @@ def test_error_feedback_compensates():
     g_true = jnp.asarray(rng.standard_normal(512).astype(np.float32))
     residual = {"g": jnp.zeros(512, jnp.float32)}
     applied = jnp.zeros(512, jnp.float32)
-    for i in range(20):
+    for _ in range(20):
         out, residual = ef_compress_step({"g": g_true}, residual)
         applied = applied + out["g"]
     total_err = np.abs(np.asarray(applied - 20 * g_true)).max()

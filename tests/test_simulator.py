@@ -163,14 +163,14 @@ class TestWeibullBehaviour:
         (k=0.7) with fresh-start superposed components than exponential."""
         plat = Platform(mu=250 * MN, C=10 * MN, D=1 * MN, R=10 * MN)
         pred = PredictorModel(recall=0.85, precision=0.82)
-        kw = dict(n_runs=8, seed=21, n_components=2**14,
-                  fault_dist=E.weibull(0.7), horizon_factor=20)
+        kw = {"n_runs": 8, "seed": 21, "n_components": 2**14,
+              "fault_dist": E.weibull(0.7), "horizon_factor": 20}
         wy = _mean_waste(simulate_many(WORK / 4, plat, S.young(plat), PRED0, **kw))
         wp = _mean_waste(
             simulate_many(WORK / 4, plat, S.exact_prediction(plat, pred), pred, **kw)
         )
         gain_wb = (wy - wp) / wy
-        kw2 = dict(n_runs=8, seed=21)
+        kw2 = {"n_runs": 8, "seed": 21}
         wy_e = _mean_waste(simulate_many(WORK / 4, plat, S.young(plat), PRED0, **kw2))
         wp_e = _mean_waste(
             simulate_many(WORK / 4, plat, S.exact_prediction(plat, pred), pred, **kw2)

@@ -23,7 +23,7 @@ class TestTwoLevel:
         def w(tm, td):
             return waste_two_level(tm, td, C_M, C_D, D_, R_M, R_D, MU, f)
 
-        for dt, fixed in ((eps, "m"), (eps, "d")):
+        for _dt, fixed in ((eps, "m"), (eps, "d")):
             if fixed == "m":
                 d = (w(t_m + eps, t_d) - w(t_m - eps, t_d)) / (2 * eps)
             else:
