@@ -118,15 +118,30 @@ def compare(
                 f"{d['fused_vs_perfamily_max_diff']:.2e} != 0"
             )
 
+        # correctness: the batched-Newton period optimizer must dominate
+        # the host grid scan on every cell (the continuous optimum can
+        # only undercut a 10-point period grid; anything beyond float
+        # rounding means the optimizer converged to the wrong point)
+        if (
+            "newton_excess_waste_max" in d
+            and d["newton_excess_waste_max"] > 1e-12
+        ):
+            failures.append(
+                f"{rec['name']}: Newton period waste exceeds the host "
+                f"scan best by {d['newton_excess_waste_max']:.2e} "
+                "(must dominate to float rounding)"
+            )
+
         # performance: lanes/sec (and the fused sweep's cells/sec)
         # within perf_tol of the baseline (the jax_dev floor gates the
         # device-generation trace mode, fused_cells_per_s the fused
-        # experiment dispatch)
+        # experiment dispatch, analytic_opt_cells_per_s the batched-
+        # Newton optimizer dispatch)
         if perf_tol:
             for key in (
                 "jax_lanes_per_s", "numpy_lanes_per_s",
                 "jax_dev_lanes_per_s", "fused_cells_per_s",
-                "mixed_law_cells_per_s",
+                "mixed_law_cells_per_s", "analytic_opt_cells_per_s",
             ):
                 if key in d and key in bd and bd[key] > 0:
                     floor = (1.0 - perf_tol) * bd[key]

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, BuddyMemoryCheckpoint, CheckpointStore
 from repro.configs.paper import C, D, MU_IND, R
-from repro.core import Platform, PredictorModel, optimize_exact
+from repro.core import Platform, PredictorModel, optimize
 
 from .common import emit, timed
 
@@ -79,14 +79,14 @@ def run(quick: bool = True) -> None:
         # beyond-paper: two-level (buddy RAM + disk) optimal hierarchy
         from repro.core.periods import two_level_periods
         from repro.core.waste import waste_two_level, waste_young
-        from repro.core.periods import t_extr
 
         mu19 = MU_IND / 2**19
         f = 0.9  # single-node failures recoverable from the buddy tier
         c_m = C / 20.0
         t_m, t_d = two_level_periods(mu19, c_m, C, f)
         w2 = waste_two_level(t_m, t_d, c_m, C, D, D, R, mu19, f)
-        w1 = waste_young(max(t_extr(mu19, C), C), C, D, R, mu19)
+        t_y = optimize("young", Platform(mu=mu19, C=C, D=D, R=R)).T_R
+        w1 = waste_young(t_y, C, D, R, mu19)
         emit(
             "ckpt/two_level", 0.0,
             {
@@ -101,10 +101,10 @@ def run(quick: bool = True) -> None:
         # what C_eff means for the paper's platform (2^19 procs)
         plat0 = Platform(mu=MU_IND / 2**19, C=C, D=D, R=R)
         pred = PredictorModel(0.85, 0.82)
-        w0 = optimize_exact(plat0, pred).waste
+        w0 = optimize("exact", plat0, pred).waste
         for factor, name in [(1.0, "baseline_C"), (0.25, "int8_C"), (0.1, "async_C")]:
             plat = Platform(mu=plat0.mu, C=C * factor, D=D, R=R)
-            pol = optimize_exact(plat, pred)
+            pol = optimize("exact", plat, pred)
             emit(
                 f"ckpt/waste_impact/{name}", 0.0,
                 {

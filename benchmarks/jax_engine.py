@@ -53,6 +53,18 @@ count); the one-dispatch win is the 3x dispatch/fetch amortization and
 the single executable, which pays off in dispatch-bound regimes — real
 accelerators, many-family grids, and distributed meshes.
 
+``jax_engine/analytic_opt_cells{n}`` is the analytic-layer acceptance
+record: every bench-grid cell's optimal regular period solved in one
+jitted batched safeguarded-Newton dispatch (``jax.grad`` of the
+branchless waste twins over the shared per-cell tables) vs a host
+scalar scan of the same analytic objective over the
+``best_period_search`` period grid.  The record carries
+``analytic_opt_cells_per_s`` (the regression-gate floor),
+``speedup_vs_host_scan``, ``newton_excess_waste_max`` (gate: the
+continuous optimum must dominate the 10-point scan on every cell, to
+float rounding) and ``newton_vs_extremizer_max_rel`` (smooth-family
+periods must land on the closed-form extremizer).
+
 Acceptance trajectory: jax lanes/s >= numpy lanes/s at 10k lanes on CPU,
 device trace mode >= 2x the host-trace path end-to-end at 40960 lanes,
 and sharded lanes/s non-decreasing with device count (expected >> on an
@@ -73,7 +85,13 @@ import time
 
 import numpy as np
 
-from repro.core import Platform, PredictorModel, make_event_traces_batch, simulate_batch
+from repro.core import (
+    EngineConfig,
+    Platform,
+    PredictorModel,
+    make_event_traces_batch,
+    simulate_batch,
+)
 from repro.core import jax_sim
 from repro.core import simulator as S
 from repro.core.events import lognormal, make_trace_spec, weibull
@@ -105,6 +123,14 @@ MIXED_LAWS = (
     ("weibull", weibull(0.7)),
     ("lognormal", lognormal(0.5)),
 )
+
+
+#: engine configurations of the grid-sweep records (one fused device
+#: dispatch is the headline path; the rest are its baselines)
+_CFG_FUSED = EngineConfig(engine="jax", trace_mode="device")
+_CFG_STATS = _CFG_FUSED.replace(collect="stats")
+_CFG_PERCELL = _CFG_FUSED.replace(dispatch="percell")
+_CFG_PERFAMILY = _CFG_STATS.replace(dispatch="perfamily")
 
 
 def _cell():
@@ -220,6 +246,7 @@ def run(quick: bool = True, devices=None) -> None:
         )
     _run_fused_grid(reps=reps)
     _run_mixed_law_grid(reps=reps)
+    _run_analytic_opt(reps=reps)
     _run_devices_curve(reps=reps)
 
 
@@ -237,25 +264,21 @@ def _run_fused_grid(reps: int = 3) -> None:
     # executables on a 4-cell subgrid that covers both the plain and the
     # migration-specialized variants — per-cell chunk shapes are
     # cell-count independent, so the subgrid warms them all
-    sweep_f = run_grid(grid, engine="jax", trace_mode="device")
+    sweep_f = run_grid(grid, _CFG_FUSED)
     sub = GridSpec(tuple(cells[:4]), n_runs=FUSED_GRID_RUNS, seed=3)
     assert any(c.strategy.mode == "migration" for c in sub.cells)
-    run_grid(sub, engine="jax", trace_mode="device", dispatch="percell")
+    run_grid(sub, _CFG_PERCELL)
 
     fused_s = stats_s = percell_s = float("inf")
     fused_split = {}
     for _ in range(reps):
-        t = _timed(lambda: run_grid(grid, engine="jax", trace_mode="device"))
+        t = _timed(lambda: run_grid(grid, _CFG_FUSED))
         if t < fused_s:
             fused_s, fused_split = t, _split()
-        stats_s = min(stats_s, _timed(lambda: run_grid(
-            grid, engine="jax", trace_mode="device", collect="stats"
-        )))
+        stats_s = min(stats_s, _timed(lambda: run_grid(grid, _CFG_STATS)))
     for _ in range(max(1, reps - 1)):  # the slow leg: fewer reps
         t0 = time.monotonic()
-        sweep_p = run_grid(
-            grid, engine="jax", trace_mode="device", dispatch="percell"
-        )
+        sweep_p = run_grid(grid, _CFG_PERCELL)
         percell_s = min(percell_s, time.monotonic() - t0)
 
     # both dispatches consume identical counter streams: exact equality
@@ -307,32 +330,22 @@ def _run_mixed_law_grid(reps: int = 3) -> None:
     # grid; the per-family baseline compiles one per *shape*, reused
     # across its (equal-sized) family dispatches
     n0 = len(jax_sim._RUN_CACHE)
-    sweep_f = run_grid(
-        grid, engine="jax", trace_mode="device", collect="stats"
-    )
+    sweep_f = run_grid(grid, _CFG_STATS)
     fused_builds = len(jax_sim._RUN_CACHE) - n0
     assert jax_sim.LAST_TIMINGS["n_chunks"] == 1, (
         "mixed-law grid must run as one fused dispatch"
     )
     n0 = len(jax_sim._RUN_CACHE)
-    sweep_p = run_grid(
-        grid, engine="jax", trace_mode="device", dispatch="perfamily",
-        collect="stats",
-    )
+    sweep_p = run_grid(grid, _CFG_PERFAMILY)
     perfamily_builds = len(jax_sim._RUN_CACHE) - n0
 
     fused_s = perfam_s = float("inf")
     fused_split = {}
     for _ in range(reps):
-        t = _timed(lambda: run_grid(
-            grid, engine="jax", trace_mode="device", collect="stats"
-        ))
+        t = _timed(lambda: run_grid(grid, _CFG_STATS))
         if t < fused_s:
             fused_s, fused_split = t, _split()
-        perfam_s = min(perfam_s, _timed(lambda: run_grid(
-            grid, engine="jax", trace_mode="device",
-            dispatch="perfamily", collect="stats",
-        )))
+        perfam_s = min(perfam_s, _timed(lambda: run_grid(grid, _CFG_PERFAMILY)))
 
     # both granularities run the same law-indexed sampler on the same
     # counter streams: per-cell device-reduced stats are bit-identical
@@ -357,6 +370,87 @@ def _run_mixed_law_grid(reps: int = 3) -> None:
             "perfamily_dispatches": len(MIXED_LAWS),
             "fused_vs_perfamily_max_diff": diff,
             **fused_split,
+        },
+    )
+
+
+def _run_analytic_opt(reps: int = 3) -> None:
+    """Time the batched-Newton period optimizer: every bench-grid cell's
+    optimal regular period solved in ONE jitted device dispatch
+    (``repro.core.analytic.newton_optimize_tables`` — per-cell
+    safeguarded Newton through ``jax.grad`` of the branchless waste
+    twins) against the host baseline (a scalar Python scan of the
+    analytic objective over ``best_period_search``'s period grid,
+    argmin per cell — the pre-redesign way to pick a period without a
+    Monte-Carlo campaign).
+
+    Acceptance is dominance, not agreement: the Newton period's waste
+    must be <= the scan's best on EVERY cell up to float rounding
+    (``newton_excess_waste_max`` — the continuous optimum can only
+    undercut a 10-point grid), and on the smooth strategy families the
+    period itself must land on the closed-form extremizer
+    (``newton_vs_extremizer_max_rel``)."""
+    from dataclasses import replace
+
+    from repro.core import analytic as A
+    from repro.core.simulator import PERIOD_GRID
+    from repro.experiments import paper_grid_cells
+    from repro.experiments.validation import analytic_waste
+
+    cells = paper_grid_cells("bench")
+    n_cells = len(cells)
+    tabs = A.tables_from_cells(cells)
+    res = A.newton_optimize_tables(tabs)  # jit warmup
+
+    newton_s = float("inf")
+    for _ in range(reps):
+        newton_s = min(
+            newton_s, _timed(lambda: A.newton_optimize_tables(tabs))
+        )
+
+    # host scan baseline: the analytic objective at best_period_search's
+    # period candidates, one scalar evaluation at a time
+    t0 = time.monotonic()
+    scan_w = np.empty(n_cells)
+    for i, c in enumerate(cells):
+        periods = [
+            max(c.platform.C * 1.01, c.strategy.T_R * m) for m in PERIOD_GRID
+        ]
+        scan_w[i] = min(
+            analytic_waste(replace(c, strategy=replace(c.strategy, T_R=t)))
+            for t in periods
+        )
+    scan_s = time.monotonic() - t0
+    scan_w = np.minimum(scan_w, 1.0)
+
+    # dominance: the one-dispatch Newton periods must be at least as
+    # good as the host grid scan on every cell
+    excess = float((res["waste"] - scan_w).max())
+
+    # period agreement on the smooth families (everything except the
+    # Instant kink cells), against the closed-form extremizer the host
+    # optimizers use
+    t_ext = A.analytic_period_cells(cells)
+    smooth = np.array(
+        [
+            not (c.strategy.mode == "exact" and c.predictor.window > 0.0)
+            for c in cells
+        ]
+    ) & (res["q"] > 0.0)
+    rel = np.abs(res["T_R"] - t_ext) / t_ext
+    agree = float(rel[smooth].max()) if smooth.any() else 0.0
+
+    emit(
+        f"jax_engine/analytic_opt_cells{n_cells}",
+        newton_s * 1e6 / n_cells,
+        {
+            "n_cells": n_cells,
+            "newton_s": round(newton_s, 4),
+            "host_scan_s": round(scan_s, 4),
+            "analytic_opt_cells_per_s": round(n_cells / newton_s, 1),
+            "speedup_vs_host_scan": round(scan_s / newton_s, 2),
+            "newton_excess_waste_max": excess,
+            "newton_vs_extremizer_max_rel": agree,
         },
     )
 

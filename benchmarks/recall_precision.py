@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.paper import C, D, MU_IND, R
-from repro.core import Platform, PredictorModel, optimize_exact
+from repro.core import Platform, PredictorModel, optimize
 from repro.core import simulator as S
 from repro.experiments import ExperimentCell, run_cells
 
@@ -44,13 +44,13 @@ def run(quick: bool = True) -> None:
         plat = Platform(mu=MU_IND / n, C=C, D=D, R=R)
         for fixed_r in [0.4, 0.8]:
             for p in sweep_vals:
-                pol = optimize_exact(plat, PredictorModel(fixed_r, p))
+                pol = optimize("exact", plat, PredictorModel(fixed_r, p))
                 emit(
                     f"fig8/N{n}/r{fixed_r}/p{p}", 0.0,
                     {"waste_analytic": round(pol.waste, 4), "q": pol.q},
                 )
     for cr in sweep.cells:
-        pol = optimize_exact(cr.cell.platform, cr.cell.predictor)
+        pol = optimize("exact", cr.cell.platform, cr.cell.predictor)
         emit(
             cr.cell.label,
             us_per_run,

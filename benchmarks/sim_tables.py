@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Platform, PredictorModel
+from repro.core import EngineConfig, Platform, PredictorModel
 from repro.core import events as E
 from repro.core import simulator as S
 from repro.configs.paper import C, D, MU_IND, R
@@ -79,7 +79,10 @@ def run_sweep(quick: bool = True, engine: str = "batch", seed: int = 100):
     # batched engine amortizes extra runs almost for free, so quick now
     # carries 16 (full: 30, the paper's own count is 100)
     n_runs = 16 if quick else 30
-    return run_cells(build_cells(quick), n_runs=n_runs, seed=seed, engine=engine)
+    return run_cells(
+        build_cells(quick), n_runs=n_runs, seed=seed,
+        config=EngineConfig(engine=engine),
+    )
 
 
 def run(quick: bool = True, engine: str = "batch") -> None:

@@ -12,8 +12,7 @@ from repro.configs.paper import C, D, MU_IND, N_RANGE, R
 from repro.core import (
     Platform,
     PredictorModel,
-    optimize_exact,
-    t_extr,
+    optimize,
     waste_exact,
     waste_young,
 )
@@ -47,10 +46,11 @@ def run(quick: bool = True) -> None:
         plat, pred = cr.cell.platform, cr.cell.predictor
         r, p = pred.recall, pred.precision
         # analytic: capped (Section 3.3 domain) and uncapped (Section 5)
-        pol = optimize_exact(plat, pred)
-        t1 = t_extr(plat.mu, C, r, 1.0)
+        pol = optimize("exact", plat, pred)
+        # T_extr at q=1 and q=0 (Equation (12) extrema, uncapped)
+        t1 = float(np.sqrt(2.0 * plat.mu * C / (1.0 - r)))
         w_uncapped = waste_exact(t1, 1.0, C, D, R, plat.mu, r, p)
-        ty = t_extr(plat.mu, C)
+        ty = float(np.sqrt(2.0 * plat.mu * C))
         w_young = waste_young(ty, C, D, R, plat.mu)
         emit(
             cr.cell.label,

@@ -13,7 +13,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.configs.paper import C, D, MU_IND, N_RANGE, R
-from repro.core import Platform, PredictorModel, optimize_exact
+from repro.core import Platform, PredictorModel, optimize
 from repro.core import simulator as S
 from repro.experiments import ExperimentCell, run_cells
 
@@ -37,8 +37,8 @@ print(f"{'N':>8} {'mu(mn)':>8} | {'Young':>7} {'Exact(an)':>9} "
       f"{'Exact(sim)':>10} {'NoCkptI(sim)':>12} | gain")
 for n in N_RANGE:
     plat = Platform(mu=MU_IND / n, C=C, D=D, R=R)
-    wy = optimize_exact(plat, PredictorModel(0.0, 1.0)).waste
-    wa = optimize_exact(plat, PredictorModel(pred.recall, pred.precision)).waste
+    wy = optimize("exact", plat, PredictorModel(0.0, 1.0)).waste
+    wa = optimize("exact", plat, PredictorModel(pred.recall, pred.precision)).waste
     we = sweep[f"exact/N{n}"].mean_waste
     wn = sweep[f"nockpt/N{n}"].mean_waste
     print(

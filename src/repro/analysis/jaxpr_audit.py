@@ -362,6 +362,7 @@ def audit_mixed_law(n_runs: int = 128, chunk_lanes: int = 128) -> AuditReport:
     import dataclasses
 
     from repro.core import events as E
+    from repro.core.engine import EngineConfig
     from repro.experiments.grid import GridSpec
     from repro.experiments.paper_grid import paper_grid_cells
     from repro.experiments.runner import run_grid
@@ -382,8 +383,11 @@ def audit_mixed_law(n_runs: int = 128, chunk_lanes: int = 128) -> AuditReport:
             with warnings.catch_warnings():
                 warnings.simplefilter("ignore")  # zeroed stats -> 0/0 noise
                 run_grid(
-                    grid, engine="jax", trace_mode="device",
-                    collect="stats", chunk_lanes=chunk_lanes,
+                    grid,
+                    EngineConfig(
+                        engine="jax", trace_mode="device",
+                        collect="stats", chunk_lanes=chunk_lanes,
+                    ),
                 )
         except Exception as exc:
             # aggregation of the all-zero spy statistics may trip

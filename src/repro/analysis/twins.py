@@ -112,6 +112,25 @@ TWIN_REGISTRY: Tuple[TwinPair, ...] = (
              "repro.kernels.sim_step", "gap_transform"),
     TwinPair("repro.core.events", "gap_transform_indexed_np",
              "repro.kernels.sim_step", "gap_transform_indexed"),
+    # the differentiable analytic waste layer (branchless table models)
+    TwinPair("repro.core.analytic", "precision_from_fp",
+             "repro.kernels.analytic", "precision_from_fp"),
+    TwinPair("repro.core.analytic", "young_waste",
+             "repro.kernels.analytic", "young_waste"),
+    TwinPair("repro.core.analytic", "exact_waste",
+             "repro.kernels.analytic", "exact_waste"),
+    TwinPair("repro.core.analytic", "migration_waste",
+             "repro.kernels.analytic", "migration_waste"),
+    TwinPair("repro.core.analytic", "instant_waste",
+             "repro.kernels.analytic", "instant_waste"),
+    TwinPair("repro.core.analytic", "nockpt_waste",
+             "repro.kernels.analytic", "nockpt_waste"),
+    TwinPair("repro.core.analytic", "withckpt_waste",
+             "repro.kernels.analytic", "withckpt_waste"),
+    TwinPair("repro.core.analytic", "two_level_waste",
+             "repro.kernels.analytic", "two_level_waste"),
+    TwinPair("repro.core.analytic", "cell_waste",
+             "repro.kernels.analytic", "cell_waste"),
 )
 
 

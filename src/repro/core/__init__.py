@@ -7,6 +7,10 @@ Modules:
   events      fault/prediction traces, rate identities (Section 2)
   waste       closed-form waste models, Eqs (1)(3)(4)(5)(6) (Sections 3-4)
   periods     optimal periods T_Y / T_1 / T_P, q in {0,1}, Eq (12) (Sections 3.3-4.3)
+  analytic    the differentiable analytic layer: branchless waste twins
+              over the fused engine's per-cell tables + the unified
+              optimize() entry point (analytic / batched-Newton / search)
+  engine      EngineConfig — the one home of the engine-selection knobs
   simulator   discrete-event engine reproducing Section 5 (scalar oracle)
   batch_sim   lane-per-trace vectorized engine (NumPy, one lane per trace)
   jax_sim     device-resident engine (jit + lax.while_loop + Pallas step;
@@ -14,9 +18,19 @@ Modules:
   predictor   predictor presets (Table 3) and runtime interface
 """
 
+from .analytic import (
+    PolicyTable,
+    analytic_period_cells,
+    analytic_waste_cells,
+    optimize,
+    optimize_cells,
+)
 from .batch_sim import (
     BatchResult,
     simulate_batch,
+)
+from .engine import (
+    EngineConfig,
 )
 from .events import (
     BatchTraces,

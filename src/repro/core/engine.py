@@ -1,0 +1,145 @@
+"""Engine selection for the simulation entry points, in one place.
+
+:func:`repro.core.simulate_many`, :func:`repro.core.best_period_search`
+and :func:`repro.experiments.run_grid` historically grew overlapping
+ad-hoc keyword arguments (``engine=``, ``devices=``, ``mesh=``,
+``trace_mode=``, ``dispatch=``, ``collect=``, ``chunk_lanes=``).
+:class:`EngineConfig` collects them into one frozen dataclass threaded
+through all three, so new engine knobs land here once; the old keyword
+arguments are still accepted (per-call) through a deprecation shim that
+builds the equivalent config.
+
+The cross-field rules shared by every entry point live in
+:meth:`EngineConfig.validate`; rules specific to one entry point (e.g.
+``dispatch`` granularity, which only grid sweeps have) stay with that
+entry point, driven by the config's fields.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields, replace
+from typing import Any, Dict, Optional, Union
+
+__all__ = ["EngineConfig", "resolve_engine_config", "UNSET"]
+
+
+class _Unset:
+    """Sentinel distinguishing "not passed" from a legitimate ``None``
+    (``chunk_lanes=None`` means "one engine call", ``devices=None`` means
+    "default device")."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<unset>"
+
+
+#: module-wide "keyword not passed" sentinel of the deprecation shims
+UNSET = _Unset()
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """How to run a batch of simulations.
+
+    engine       "batch" (NumPy lanes), "jax" (device-resident),
+                 "scalar" (reference engine) or "legacy" (seed pipeline;
+                 grid sweeps only).
+    trace_mode   "host" (materialized event arrays) or "device"
+                 (counter-RNG :class:`~repro.core.events.TraceSpec`
+                 streams sampled inside the engine).
+    dispatch     grid sweeps only: "fused" / "perfamily" / "percell"
+                 (None picks the engine's default granularity).
+    collect      "lanes" (per-run results) or "stats" (device-reduced
+                 per-cell statistics; jax engine only).
+    devices      shard lanes across a device set (jax engine only):
+                 None, "all", an int, or an explicit device sequence.
+    mesh         a ``jax.sharding.Mesh`` as shorthand for ``devices=``
+                 over its device set; mutually exclusive with it.
+    chunk_lanes  lanes resident on the device per engine call ("auto",
+                 an int, or None for one single call).
+    """
+
+    engine: str = "batch"
+    trace_mode: str = "host"
+    dispatch: Optional[str] = None
+    collect: str = "lanes"
+    devices: Any = None
+    mesh: Any = None
+    chunk_lanes: Union[int, str, None] = "auto"
+
+    def validate(self) -> "EngineConfig":
+        """Check the cross-field rules every entry point shares (each
+        entry point additionally restricts ``engine`` to the set it
+        supports, with its historical error message)."""
+        if self.engine != "jax" and (
+            self.devices is not None or self.mesh is not None
+        ):
+            raise ValueError("devices=/mesh= require engine='jax'")
+        if self.trace_mode not in ("host", "device"):
+            raise ValueError(
+                f"unknown trace_mode {self.trace_mode!r} "
+                "(expected 'host' or 'device')"
+            )
+        if self.collect not in ("lanes", "stats"):
+            raise ValueError(
+                f"unknown collect {self.collect!r} "
+                "(expected 'lanes' or 'stats')"
+            )
+        return self
+
+    def replace(self, **changes) -> "EngineConfig":
+        return replace(self, **changes)
+
+
+_FIELD_NAMES = tuple(f.name for f in fields(EngineConfig))
+
+
+def resolve_engine_config(
+    config: Union[EngineConfig, str, None],
+    caller: str,
+    **legacy,
+) -> EngineConfig:
+    """Merge a ``config=`` argument with legacy ad-hoc keywords.
+
+    ``config`` may be an :class:`EngineConfig`, ``None`` (defaults +
+    legacy keywords), or — because the old signatures took ``engine`` as
+    the first optional positional — a bare engine-name string.  Legacy
+    keywords arrive valued or :data:`UNSET`; passing any of them emits a
+    :class:`DeprecationWarning` naming the replacement, and combining
+    them with an explicit :class:`EngineConfig` is an error (there is no
+    sensible precedence between the two spellings)."""
+    if isinstance(config, str):
+        if legacy.get("engine", UNSET) is not UNSET:
+            raise ValueError(
+                f"{caller}: engine given both positionally and as engine="
+            )
+        legacy["engine"] = config
+        config = None
+    provided: Dict[str, Any] = {
+        k: v for k, v in legacy.items() if v is not UNSET
+    }
+    unknown = set(provided) - set(_FIELD_NAMES)
+    if unknown:  # pragma: no cover - programming error guard
+        raise TypeError(f"{caller}: unknown engine kwargs {sorted(unknown)}")
+    if config is None:
+        if provided:
+            warnings.warn(
+                f"{caller}: the {sorted(provided)} keyword(s) are "
+                "deprecated; pass config=EngineConfig(...) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        return EngineConfig(**provided)
+    if not isinstance(config, EngineConfig):
+        raise TypeError(
+            f"{caller}: config must be an EngineConfig, an engine name or "
+            f"None, got {type(config).__name__}"
+        )
+    if provided:
+        raise ValueError(
+            f"{caller}: pass either config=EngineConfig(...) or the legacy "
+            f"{sorted(provided)} keyword(s), not both"
+        )
+    return config

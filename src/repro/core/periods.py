@@ -10,6 +10,15 @@ together with the case analyses that clamp the period to its admissible
 domain and the proof-backed fact that the optimal ``q`` is always 0 or 1
 (the waste is affine in ``q``).
 
+Public API note: the per-strategy ``optimize_*`` case analyses, the
+``t_*`` period helpers and ``best_policy`` are **deprecated aliases** —
+:func:`repro.core.optimize` (see :mod:`repro.core.analytic`) is the one
+entry point, covering the same closed forms (``method="analytic"``),
+the batched on-device Newton solver (``method="newton"``) and the
+simulated brute force (``method="search"``).  The implementations live
+on here as the underscore-prefixed functions the unified optimizer
+dispatches to.
+
 Dtype contract: every function here is scalar ``float`` — IEEE doubles
 via ``math.*``, the analytic layer's schema role ``"fdt"`` (see
 :mod:`repro.analysis.schema`).  The :mod:`.waste` formulas these optima
@@ -20,7 +29,9 @@ precision.
 
 from __future__ import annotations
 
+import functools
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -48,7 +59,7 @@ __all__ = [
 # --------------------------------------------------------------------------- #
 # Extremal and clamped periods
 # --------------------------------------------------------------------------- #
-def t_extr(mu: float, C: float, r: float = 0.0, q: float = 0.0) -> float:
+def _t_extr(mu: float, C: float, r: float = 0.0, q: float = 0.0) -> float:
     """Unified extremal period T_extr^{q} = sqrt(2 mu C / (1 - r q)).
 
     For r q -> 1 the period diverges: the predictor catches every fault and
@@ -61,7 +72,7 @@ def t_extr(mu: float, C: float, r: float = 0.0, q: float = 0.0) -> float:
     return math.sqrt(2.0 * mu * C / denom)
 
 
-def t_young(mu: float, C: float, alpha: float = W.ALPHA) -> float:
+def _t_young(mu: float, C: float, alpha: float = W.ALPHA) -> float:
     """T_Y = min(alpha mu, max(sqrt(2 mu C), C)) (Section 3.3).
 
     Degenerate platforms where alpha*mu < C have an empty validity domain;
@@ -69,12 +80,12 @@ def t_young(mu: float, C: float, alpha: float = W.ALPHA) -> float:
     return max(C, min(alpha * mu, max(math.sqrt(2.0 * mu * C), C)))
 
 
-def t_daly(mu: float, R: float, C: float) -> float:
+def _t_daly(mu: float, R: float, C: float) -> float:
     """Daly's first-order refinement T = sqrt(2 (mu + R) C) [Daly 2004]."""
     return math.sqrt(2.0 * (mu + R) * C)
 
 
-def t_one(
+def _t_one(
     mu: float,
     C: float,
     r: float,
@@ -90,10 +101,10 @@ def t_one(
     """
     cap = alpha * _mu_e(mu, r, p) - I
     cap = max(cap, C)  # degenerate platforms: keep the domain non-empty
-    return min(cap, max(t_extr(mu, C, r, 1.0), C))
+    return min(cap, max(_t_extr(mu, C, r, 1.0), C))
 
 
-def t_p_extr(C: float, p: float, I: float, E_f: Optional[float] = None) -> float:
+def _t_p_extr(C: float, p: float, I: float, E_f: Optional[float] = None) -> float:
     """Equation (7): T_P^extr = sqrt( ((1-p) I + p E_I^f) / p * C )."""
     if E_f is None:
         E_f = I / 2.0
@@ -101,7 +112,7 @@ def t_p_extr(C: float, p: float, I: float, E_f: Optional[float] = None) -> float
     return math.sqrt(K * C)
 
 
-def t_p_opt(
+def _t_p_opt(
     C: float, p: float, I: float, E_f: Optional[float] = None
 ) -> Optional[Tuple[float, int]]:
     """Integer-partition proactive period (Section 4.3).
@@ -115,7 +126,7 @@ def t_p_opt(
     if I < C or I <= 0.0:
         return None
     K = ((1.0 - p) * I + p * E_f) / p
-    te = t_p_extr(C, p, I, E_f)
+    te = _t_p_extr(C, p, I, E_f)
 
     def cost(tp: float) -> float:
         return K * C / tp + tp
@@ -140,7 +151,12 @@ def t_p_opt(
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
 class OptimalPolicy:
-    """Result of a waste minimization: the strategy's operating point."""
+    """Result of a waste minimization: the strategy's operating point.
+
+    ``objective`` / ``value`` record what the unified optimizer was asked
+    to optimize ("waste" minimization or "availability" = 1 - waste
+    maximization — same argmin, the affine flip only changes the reported
+    value); legacy constructions leave them at the waste default."""
 
     strategy: str
     q: int  # 0 or 1 — affine-in-q argument, Section 3.3
@@ -148,6 +164,8 @@ class OptimalPolicy:
     waste: float
     T_P: Optional[float] = None  # proactive period (WithCkptI only)
     k_P: Optional[int] = None  # number of proactive periods in the window
+    objective: str = "waste"
+    value: Optional[float] = None
 
 
 def _clamp(T: float, lo: float, hi: float) -> float:
@@ -156,16 +174,16 @@ def _clamp(T: float, lo: float, hi: float) -> float:
 
 
 def _t0(mu, C, alpha, capped) -> float:
-    return t_young(mu, C, alpha) if capped else max(t_extr(mu, C), C)
+    return _t_young(mu, C, alpha) if capped else max(_t_extr(mu, C), C)
 
 
 def _t1(mu, C, r, p, I, alpha, capped) -> float:
     if capped:
-        return t_one(mu, C, r, p, I, alpha)
-    return max(t_extr(mu, C, r, 1.0), C)
+        return _t_one(mu, C, r, p, I, alpha)
+    return max(_t_extr(mu, C, r, 1.0), C)
 
 
-def optimize_exact(
+def _optimize_exact(
     platform: W.Platform,
     pred: W.PredictorModel,
     alpha: float = W.ALPHA,
@@ -194,7 +212,7 @@ def optimize_exact(
     return OptimalPolicy("exact", 0, ty, min(w0, 1.0))
 
 
-def optimize_migration(
+def _optimize_migration(
     platform: W.Platform,
     pred: W.PredictorModel,
     alpha: float = W.ALPHA,
@@ -230,9 +248,9 @@ def _optimize_window(
     # q = 0 branch is Young's waste with the window-reduced cap (Section 4.3).
     if capped:
         cap0 = max(alpha * _mu_e(mu, r, p) - I, C) if r > 0 else alpha * mu
-        t_r0 = _clamp(t_extr(mu, C), C, cap0)
+        t_r0 = _clamp(_t_extr(mu, C), C, cap0)
     else:
-        t_r0 = max(t_extr(mu, C), C)
+        t_r0 = max(_t_extr(mu, C), C)
     w0 = W.waste_young(t_r0, C, D, R, mu)
     best = OptimalPolicy(strategy, 0, t_r0, min(w0, 1.0))
     if r <= 0:
@@ -246,7 +264,7 @@ def _optimize_window(
         w1 = W.waste_nockpt(t_r1, 1.0, C, D, R, mu, r, p, I, E_f)
         cand = OptimalPolicy(strategy, 1, t_r1, min(w1, 1.0))
     elif strategy == "withckpt":
-        tp = t_p_opt(C, p, I, E_f)
+        tp = _t_p_opt(C, p, I, E_f)
         if tp is None:
             return best  # window cannot hold a checkpoint
         T_P, k = tp
@@ -258,15 +276,15 @@ def _optimize_window(
     return cand if cand.waste < best.waste else best
 
 
-def optimize_instant(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+def _optimize_instant(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
     return _optimize_window("instant", platform, pred, alpha, capped)
 
 
-def optimize_nockpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+def _optimize_nockpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
     return _optimize_window("nockpt", platform, pred, alpha, capped)
 
 
-def optimize_withckpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
+def _optimize_withckpt(platform, pred, alpha: float = W.ALPHA, capped: bool = False) -> OptimalPolicy:
     return _optimize_window("withckpt", platform, pred, alpha, capped)
 
 
@@ -294,7 +312,7 @@ def two_level_periods(
     return t_m, t_d
 
 
-def nockpt_dominates(
+def _nockpt_dominates(
     C: float, p: float, I: float, E_f: Optional[float] = None
 ) -> bool:
     """Equation (12): sufficient condition for NoCkptI <= WithCkptI.
@@ -305,10 +323,10 @@ def nockpt_dominates(
     """
     if E_f is None:
         E_f = I / 2.0
-    return 2.0 * t_p_extr(C, p, I, E_f) >= E_f
+    return 2.0 * _t_p_extr(C, p, I, E_f) >= E_f
 
 
-def best_policy(
+def _best_policy(
     platform: W.Platform,
     pred: W.PredictorModel,
     alpha: float = W.ALPHA,
@@ -318,11 +336,77 @@ def best_policy(
     strategy at its own optimum and keep the best; when Equation (12)
     holds, WithCkptI cannot beat NoCkptI and is pruned."""
     if pred.window <= 0.0:
-        return optimize_exact(platform, pred, alpha, capped)
+        return _optimize_exact(platform, pred, alpha, capped)
     cands = [
-        optimize_instant(platform, pred, alpha, capped),
-        optimize_nockpt(platform, pred, alpha, capped),
+        _optimize_instant(platform, pred, alpha, capped),
+        _optimize_nockpt(platform, pred, alpha, capped),
     ]
-    if not nockpt_dominates(platform.C, pred.precision, pred.window, pred.e_f):
-        cands.append(optimize_withckpt(platform, pred, alpha, capped))
+    if not _nockpt_dominates(platform.C, pred.precision, pred.window, pred.e_f):
+        cands.append(_optimize_withckpt(platform, pred, alpha, capped))
     return min(cands, key=lambda pol: pol.waste)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecated aliases (the pre-unified-optimizer public API)
+# --------------------------------------------------------------------------- #
+def _deprecated(impl, name: str, instead: str):
+    """Thin warning shim: identical signature and behaviour, plus a
+    :class:`DeprecationWarning` pointing at the unified optimizer."""
+
+    @functools.wraps(impl)
+    def shim(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.periods.{name}() is deprecated; use {instead}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return impl(*args, **kwargs)
+
+    shim.__name__ = name
+    shim.__qualname__ = name
+    return shim
+
+
+t_extr = _deprecated(
+    _t_extr, "t_extr", "repro.core.optimize(...).T_R (method='analytic')"
+)
+t_young = _deprecated(
+    _t_young, "t_young", "repro.core.optimize('young', platform, capped=True).T_R"
+)
+t_daly = _deprecated(
+    _t_daly, "t_daly", "repro.core.optimize('daly', platform).T_R"
+)
+t_one = _deprecated(
+    _t_one, "t_one", "repro.core.optimize(..., capped=True).T_R"
+)
+t_p_extr = _deprecated(
+    _t_p_extr, "t_p_extr", "repro.core.optimize('withckpt', ...).T_P"
+)
+t_p_opt = _deprecated(
+    _t_p_opt, "t_p_opt", "repro.core.optimize('withckpt', ...).T_P"
+)
+optimize_exact = _deprecated(
+    _optimize_exact, "optimize_exact", "repro.core.optimize('exact', platform, pred)"
+)
+optimize_migration = _deprecated(
+    _optimize_migration, "optimize_migration",
+    "repro.core.optimize('migration', platform, pred)",
+)
+optimize_instant = _deprecated(
+    _optimize_instant, "optimize_instant",
+    "repro.core.optimize('instant', platform, pred)",
+)
+optimize_nockpt = _deprecated(
+    _optimize_nockpt, "optimize_nockpt",
+    "repro.core.optimize('nockpt', platform, pred)",
+)
+optimize_withckpt = _deprecated(
+    _optimize_withckpt, "optimize_withckpt",
+    "repro.core.optimize('withckpt', platform, pred)",
+)
+nockpt_dominates = _deprecated(
+    _nockpt_dominates, "nockpt_dominates", "repro.core.optimize('best', ...)"
+)
+best_policy = _deprecated(
+    _best_policy, "best_policy", "repro.core.optimize('best', platform, pred)"
+)

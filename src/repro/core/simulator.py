@@ -20,11 +20,13 @@ only ``max(0, t0 - C - ckpt_end)``, per line 12).
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .engine import UNSET, EngineConfig, resolve_engine_config
 from .events import Distribution, EventTrace, exponential
 from .waste import Platform, PredictorModel
 from . import periods as P
@@ -75,19 +77,19 @@ class Strategy:
 
 def young(platform: Platform) -> Strategy:
     """Uncapped Young period sqrt(2 mu C) (the simulation baseline)."""
-    return Strategy("Young", P.t_extr(platform.mu, platform.C), q=0.0, mode="none")
+    return Strategy("Young", P._t_extr(platform.mu, platform.C), q=0.0, mode="none")
 
 
 def daly(platform: Platform) -> Strategy:
     return Strategy(
-        "Daly", P.t_daly(platform.mu, platform.R, platform.C), q=0.0, mode="none"
+        "Daly", P._t_daly(platform.mu, platform.R, platform.C), q=0.0, mode="none"
     )
 
 
 def _t1(platform: Platform, pred: PredictorModel) -> float:
     """Uncapped T_extr^{1} = sqrt(2 mu C / (1 - r)) — Section 5 uses the
     uncapped value to mimic a real execution."""
-    return P.t_extr(platform.mu, platform.C, pred.recall, 1.0)
+    return P._t_extr(platform.mu, platform.C, pred.recall, 1.0)
 
 
 def exact_prediction(platform: Platform, pred: PredictorModel) -> Strategy:
@@ -103,7 +105,7 @@ def nockpt(platform: Platform, pred: PredictorModel) -> Strategy:
 
 
 def withckpt(platform: Platform, pred: PredictorModel) -> Strategy:
-    tp = P.t_p_opt(platform.C, pred.precision, pred.window, pred.e_f)
+    tp = P._t_p_opt(platform.C, pred.precision, pred.window, pred.e_f)
     if tp is None:  # window cannot hold a checkpoint: degenerate to NoCkptI
         return Strategy("WithCkptI", _t1(platform, pred), q=1.0, mode="nockpt")
     return Strategy(
@@ -425,10 +427,11 @@ def simulate_many(
     horizon_factor: float = 12.0,
     n_components: Optional[int] = None,
     stationary: bool = False,
-    engine: str = "batch",
-    devices=None,
-    mesh=None,
-    trace_mode: str = "host",
+    engine=UNSET,
+    devices=UNSET,
+    mesh=UNSET,
+    trace_mode=UNSET,
+    config: Optional[EngineConfig] = None,
 ) -> List[SimResult]:
     """Average behaviour over ``n_runs`` random traces (paper: 100 runs).
 
@@ -453,13 +456,20 @@ def simulate_many(
     (exp/Weibull/lognormal/uniform) without ``n_components``.
 
     ``n_components`` switches the fault trace from a single renewal stream
-    to the superposition of per-component renewals (see events.py)."""
-    if engine != "jax" and (devices is not None or mesh is not None):
-        raise ValueError("devices=/mesh= require engine='jax'")
-    if trace_mode not in ("host", "device"):
-        raise ValueError(
-            f"unknown trace_mode {trace_mode!r} (expected 'host' or 'device')"
-        )
+    to the superposition of per-component renewals (see events.py).
+
+    ``config`` is the :class:`~repro.core.engine.EngineConfig` spelling
+    of the engine knobs; the bare ``engine=``/``devices=``/``mesh=``/
+    ``trace_mode=`` keywords are deprecated shims for it."""
+    cfg = resolve_engine_config(
+        config, "simulate_many",
+        engine=engine, devices=devices, mesh=mesh, trace_mode=trace_mode,
+    ).validate()
+    engine, devices, mesh = cfg.engine, cfg.devices, cfg.mesh
+    trace_mode = cfg.trace_mode
+    if cfg.collect != "lanes":
+        raise ValueError("simulate_many returns per-run results; use "
+                         "run_grid for collect='stats'")
     rng = np.random.default_rng(seed)
     if trace_mode == "device":
         if n_components:
@@ -512,7 +522,11 @@ def simulate_many(
     )
 
 
-def best_period_search(
+#: BestPeriod's default period-multiplier grid (Section 5)
+PERIOD_GRID = (0.25, 0.4, 0.6, 0.8, 1.0, 1.25, 1.6, 2.0, 3.0, 4.0)
+
+
+def _best_period_search(
     work: float,
     platform: Platform,
     base: Strategy,
@@ -520,10 +534,8 @@ def best_period_search(
     n_runs: int = 20,
     seed: int = 0,
     fault_dist: Optional[Distribution] = None,
-    grid: Sequence[float] = (0.25, 0.4, 0.6, 0.8, 1.0, 1.25, 1.6, 2.0, 3.0, 4.0),
-    engine: str = "batch",
-    devices=None,
-    mesh=None,
+    grid: Sequence[float] = PERIOD_GRID,
+    config: Optional[EngineConfig] = None,
 ) -> tuple[float, float]:
     """BestPeriod counterpart (Section 5): brute-force the regular period.
 
@@ -540,10 +552,14 @@ def best_period_search(
     unavailable the batch engine is used as a fallback.
 
     Returns ``(best_T_R, best_mean_waste)``."""
+    cfg = (config if config is not None else EngineConfig()).validate()
+    engine, devices, mesh = cfg.engine, cfg.devices, cfg.mesh
     if engine not in ("batch", "jax"):
         raise ValueError(
             f"unknown engine {engine!r} (expected 'batch' or 'jax')"
         )
+    if cfg.trace_mode != "host":
+        raise ValueError("best_period_search generates host traces only")
     if engine == "jax":
         try:
             import jax  # noqa: F401
@@ -586,3 +602,37 @@ def best_period_search(
         mean_waste = res.waste.reshape(len(grid), n_runs).mean(axis=1)
     gi = int(np.argmin(mean_waste))
     return periods[gi], float(mean_waste[gi])
+
+
+def best_period_search(
+    work: float,
+    platform: Platform,
+    base: Strategy,
+    pred: PredictorModel,
+    n_runs: int = 20,
+    seed: int = 0,
+    fault_dist: Optional[Distribution] = None,
+    grid: Sequence[float] = PERIOD_GRID,
+    engine=UNSET,
+    devices=UNSET,
+    mesh=UNSET,
+    config: Optional[EngineConfig] = None,
+) -> tuple[float, float]:
+    """Deprecated spelling of the simulated period search — use
+    :func:`repro.core.optimize` with ``method="search"`` (one API for the
+    analytic, batched-Newton and simulated optimizers), or pass
+    ``config=EngineConfig(...)`` for the engine knobs."""
+    warnings.warn(
+        "repro.core.best_period_search() is deprecated; use "
+        "repro.core.optimize(..., method='search')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    cfg = resolve_engine_config(
+        config, "best_period_search",
+        engine=engine, devices=devices, mesh=mesh,
+    )
+    return _best_period_search(
+        work, platform, base, pred, n_runs=n_runs, seed=seed,
+        fault_dist=fault_dist, grid=grid, config=cfg,
+    )

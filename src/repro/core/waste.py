@@ -211,7 +211,7 @@ def waste_withckpt(
 def waste_two_level(
     T_m: FloatLike, T_d: FloatLike, C_m: FloatLike, C_d: FloatLike,
     D: FloatLike, R_m: FloatLike, R_d: FloatLike, mu: FloatLike,
-    f: FloatLike, r: float = 0.0, q: float = 0.0,
+    f: FloatLike, r: float = 0.0, q: float = 0.0, p: float = 1.0,
 ) -> FloatLike:
     """Beyond-paper: two-level checkpointing (memory buddy tier + disk).
 

@@ -19,10 +19,11 @@ the scalar reference engine for equivalence checks and speedup baselines.
 """
 
 from .grid import CellResult, ExperimentCell, GridSpec, SweepResult
-from .paper_grid import PAPER_PREDICTORS, paper_grid_cells
+from .paper_grid import PAPER_PREDICTORS, paper_grid_cells, paper_policy_table
 from .runner import run_cells, run_grid
 from .validation import (
     analytic_waste,
+    analytic_waste_batch,
     cell_z_rows,
     holm_bonferroni,
     validate_sweep,
@@ -38,7 +39,9 @@ __all__ = [
     "run_grid",
     "PAPER_PREDICTORS",
     "paper_grid_cells",
+    "paper_policy_table",
     "analytic_waste",
+    "analytic_waste_batch",
     "cell_z_rows",
     "holm_bonferroni",
     "validate_sweep",

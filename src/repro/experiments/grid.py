@@ -199,8 +199,24 @@ class CellResult:
             "mean_migrations", "n_migrations", lambda a: float(a.mean())
         )
 
-    def to_row(self) -> Dict:
+    @property
+    def analytic_waste(self) -> float:
+        """First-order analytic waste of the cell's strategy at its
+        operating point (shared table models; see repro.core.analytic)."""
+        return float(_analytic_cols([self.cell])[0][0])
+
+    @property
+    def analytic_period(self) -> float:
+        """The analytic optimal regular period T_extr at the cell's trust
+        level (the period the paper predicts; compare with the tabled
+        ``T_R`` the cell actually ran)."""
+        return float(_analytic_cols([self.cell])[1][0])
+
+    def to_row(self, analytic: Optional[Tuple[float, float]] = None) -> Dict:
         c = self.cell
+        if analytic is None:
+            aw, at = _analytic_cols([c])
+            analytic = (float(aw[0]), float(at[0]))
         def fin(x: float):  # keep serialized rows strict-JSON/CSV clean
             return float(x) if math.isfinite(x) else None
         return {
@@ -225,7 +241,19 @@ class CellResult:
             "mean_regular_ckpts": self.mean_regular_ckpts,
             "mean_migrations": self.mean_migrations,
             "n_exhausted": self.n_exhausted,
+            # analytic-layer columns (appended last: downstream readers
+            # key on the historical column prefix)
+            "analytic_waste": fin(analytic[0]),
+            "analytic_period": fin(analytic[1]),
         }
+
+
+def _analytic_cols(cells) -> Tuple[np.ndarray, np.ndarray]:
+    """(analytic waste at the tabled T_R, analytic optimal period) for a
+    batch of cells, via the shared per-cell table layer."""
+    from ..core import analytic as A  # lazy: grid stays light at import
+
+    return A.analytic_waste_cells(cells), A.analytic_period_cells(cells)
 
 
 #: column order of the CSV writer (and of ``to_row``)
@@ -234,6 +262,7 @@ _CSV_FIELDS = [
     "window", "dist", "work", "n_runs", "mean_waste", "ci95_waste",
     "mean_makespan", "ci95_makespan", "mean_faults", "mean_proactive_ckpts",
     "mean_regular_ckpts", "mean_migrations", "n_exhausted",
+    "analytic_waste", "analytic_period",
 ]
 
 
@@ -263,7 +292,14 @@ class SweepResult:
         return [c.cell.label for c in self.cells]
 
     def to_rows(self) -> List[Dict]:
-        return [c.to_row() for c in self.cells]
+        if not self.cells:
+            return []
+        # one table build for the whole sweep, not one per row
+        aw, at = _analytic_cols([c.cell for c in self.cells])
+        return [
+            c.to_row(analytic=(float(w), float(t)))
+            for c, w, t in zip(self.cells, aw, at)
+        ]
 
     def write_csv(self, path) -> None:
         import csv

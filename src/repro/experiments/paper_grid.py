@@ -32,7 +32,7 @@ from ..core.events import Distribution
 from ..core.waste import PredictorModel
 from .grid import ExperimentCell
 
-__all__ = ["PAPER_PREDICTORS", "paper_grid_cells"]
+__all__ = ["PAPER_PREDICTORS", "paper_grid_cells", "paper_policy_table"]
 
 #: the paper's two (recall, precision) predictor operating points
 PAPER_PREDICTORS = {
@@ -115,3 +115,17 @@ def paper_grid_cells(
                     cell(f"I{int(w)}/WithCkptI", S.withckpt(plat, wpred), wpred)
                 )
     return cells
+
+
+def paper_policy_table(preset: str = "validation", devices=None, **kwargs):
+    """Batched-Newton optimal policies for a whole paper-grid preset.
+
+    Builds the preset's cells, lowers them onto the shared per-cell
+    parameter tables and solves every cell's optimal regular period in
+    one jitted device dispatch (:func:`repro.core.optimize_cells`).
+    Returns a :class:`~repro.core.analytic.PolicyTable` indexed like the
+    cell list; ``kwargs`` pass through to :func:`paper_grid_cells`."""
+    from ..core import analytic as A  # lazy: cell factories stay jax-free
+
+    cells = paper_grid_cells(preset, **kwargs)
+    return A.optimize_cells(cells, devices=devices)

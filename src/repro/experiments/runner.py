@@ -77,6 +77,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.batch_sim import simulate_batch
+from ..core.engine import UNSET, resolve_engine_config
 from ..core.events import (
     BatchTraces,
     TraceSpec,
@@ -283,11 +284,15 @@ def _stats_cell_result(cell: ExperimentCell, sums, i: int) -> CellResult:
 
 
 def run_grid(
-    grid: GridSpec, engine: str = "batch", chunk_lanes="auto",
-    devices=None, mesh=None, trace_mode: str = "host",
-    dispatch: Optional[str] = None, collect: str = "lanes",
+    grid: GridSpec, config=None, *, engine=UNSET, chunk_lanes=UNSET,
+    devices=UNSET, mesh=UNSET, trace_mode=UNSET,
+    dispatch=UNSET, collect=UNSET,
 ) -> SweepResult:
     """Execute every cell of ``grid`` and aggregate per-cell statistics.
+
+    ``config`` is an :class:`~repro.core.engine.EngineConfig` (or a bare
+    engine-name string, honoring the historical positional form); the
+    individual engine keywords below are deprecated shims for it.
 
     ``chunk_lanes`` (jax engine only) caps the lanes resident on the
     device per engine call — "auto" picks a backend-appropriate chunk,
@@ -314,6 +319,14 @@ def run_grid(
     legacy engine is inherently per-cell.  ``collect="stats"`` (jax
     only) fetches device-reduced per-cell statistics instead of per-run
     arrays."""
+    cfg = resolve_engine_config(
+        config, "run_grid", engine=engine, chunk_lanes=chunk_lanes,
+        devices=devices, mesh=mesh, trace_mode=trace_mode,
+        dispatch=dispatch, collect=collect,
+    )
+    engine, chunk_lanes = cfg.engine, cfg.chunk_lanes
+    devices, mesh = cfg.devices, cfg.mesh
+    trace_mode, dispatch, collect = cfg.trace_mode, cfg.dispatch, cfg.collect
     if engine not in ("batch", "scalar", "legacy", "jax"):
         raise ValueError(
             f"unknown engine {engine!r} "
@@ -578,22 +591,20 @@ def run_cells(
     cells: Sequence[ExperimentCell],
     n_runs: int = 100,
     seed: int = 0,
-    engine: str = "batch",
-    chunk_lanes="auto",
-    devices=None,
-    mesh=None,
-    trace_mode: str = "host",
-    dispatch: Optional[str] = None,
-    collect: str = "lanes",
+    config=None,
+    *,
+    engine=UNSET,
+    chunk_lanes=UNSET,
+    devices=UNSET,
+    mesh=UNSET,
+    trace_mode=UNSET,
+    dispatch=UNSET,
+    collect=UNSET,
 ) -> SweepResult:
     """Convenience wrapper: build a :class:`GridSpec` and run it."""
-    return run_grid(
-        GridSpec(tuple(cells), n_runs=n_runs, seed=seed),
-        engine=engine,
-        chunk_lanes=chunk_lanes,
-        devices=devices,
-        mesh=mesh,
-        trace_mode=trace_mode,
-        dispatch=dispatch,
-        collect=collect,
+    cfg = resolve_engine_config(
+        config, "run_cells", engine=engine, chunk_lanes=chunk_lanes,
+        devices=devices, mesh=mesh, trace_mode=trace_mode,
+        dispatch=dispatch, collect=collect,
     )
+    return run_grid(GridSpec(tuple(cells), n_runs=n_runs, seed=seed), cfg)

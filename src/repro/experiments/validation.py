@@ -46,13 +46,16 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import analytic as A
 from ..core import waste as W
+from ..core.batch_sim import MODE_CODES
 from ..core.events import mu_e as _mu_e
 from ..core.events import mu_p as _mu_p
 from .grid import ExperimentCell, SweepResult
 
 __all__ = [
     "analytic_waste",
+    "analytic_waste_batch",
     "model_validity",
     "CellCheck",
     "cell_z_rows",
@@ -80,27 +83,27 @@ def analytic_waste(cell: ExperimentCell) -> float:
     Dispatches on the strategy mode: Young's model for the q = 0
     baselines, Equation (1) for exact-date predictions, Equation (3) for
     migration, and Equations (5)/(6)/(4) for Instant / NoCkptI /
-    WithCkptI window strategies."""
-    s, p, pred = cell.strategy, cell.platform, cell.predictor
-    r, prec, I = pred.recall, pred.precision, pred.window
-    if s.mode == "none" or s.q <= 0.0 or r <= 0.0:
-        return W.waste_young(s.T_R, p.C, p.D, p.R, p.mu)
-    if s.mode == "exact":
-        if I > 0.0:
-            return W.waste_instant(
-                s.T_R, s.q, p.C, p.D, p.R, p.mu, r, prec, I, pred.e_f
+    WithCkptI window strategies.
+
+    Since the analytic-layer redesign this evaluates the branchless
+    table models of :mod:`repro.core.analytic` — the same functions the
+    batched Newton optimizer differentiates — on a one-cell table; they
+    agree with the scalar :mod:`repro.core.waste` formulas to float
+    rounding (locked by the twin-parity tests)."""
+    return float(analytic_waste_batch([cell])[0])
+
+
+def analytic_waste_batch(cells: Sequence[ExperimentCell]) -> np.ndarray:
+    """Vectorized :func:`analytic_waste`: one table build + one
+    evaluation for a whole sweep's cells."""
+    for cell in cells:
+        if cell.strategy.mode not in MODE_CODES:
+            raise ValueError(
+                f"no analytic model for strategy mode {cell.strategy.mode!r}"
             )
-        return W.waste_exact(s.T_R, s.q, p.C, p.D, p.R, p.mu, r, prec)
-    if s.mode == "migration":
-        m = p.M if p.M is not None else p.C
-        return W.waste_migration(s.T_R, s.q, p.C, p.D, p.R, m, p.mu, r, prec)
-    if s.mode == "nockpt":
-        return W.waste_nockpt(s.T_R, s.q, p.C, p.D, p.R, p.mu, r, prec, I, pred.e_f)
-    if s.mode == "withckpt":
-        return W.waste_withckpt(
-            s.T_R, s.T_P, s.q, p.C, p.D, p.R, p.mu, r, prec, I, pred.e_f
-        )
-    raise ValueError(f"no analytic model for strategy mode {s.mode!r}")
+    if not cells:
+        return np.zeros(0, dtype=np.float64)
+    return A.analytic_waste_cells(cells)
 
 
 def model_validity(cell: ExperimentCell) -> float:
@@ -165,8 +168,9 @@ def cell_z_rows(
 ) -> List[CellCheck]:
     """Per-cell z-statistics of a sweep against the analytic models."""
     rows: List[CellCheck] = []
-    for cr in sweep.cells:
-        wa = analytic_waste(cr.cell)
+    was = analytic_waste_batch([cr.cell for cr in sweep.cells])
+    for wa, cr in zip(was, sweep.cells):
+        wa = float(wa)
         v = model_validity(cr.cell)
         n = cr.n_runs
         # promote the simulated moments to IEEE doubles at the boundary:

@@ -32,8 +32,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core import periods as P
+from ..core.analytic import optimize
 from ..core.predictor import OnlinePredictor, estimate_recall_precision
-from ..core.waste import Platform, PredictorModel, waste_exact, waste_young
+from ..core.waste import Platform, PredictorModel, waste_exact
 from .injection import FaultInjector, SimulatedFault
 
 __all__ = [
@@ -244,20 +245,10 @@ class FaultTolerantExecutor:
         pm = self._observed_model()
         if self.strategy == "young" or self.predictor is None:
             # uncapped Young period (the Section 5 practice; matches sims)
-            t = max(plat.C, P.t_extr(plat.mu, plat.C))
-            return P.OptimalPolicy(
-                "young", 0, t, waste_young(t, plat.C, plat.D, plat.R, plat.mu)
-            )
-        if self.strategy == "auto":
-            return P.best_policy(plat, pm)
-        if self.strategy == "exact":
-            return P.optimize_exact(plat, pm)
-        if self.strategy == "nockpt":
-            return P.optimize_nockpt(plat, pm)
-        if self.strategy == "withckpt":
-            return P.optimize_withckpt(plat, pm)
-        if self.strategy == "migration":
-            return P.optimize_migration(plat, pm)
+            return optimize("young", plat, pm)
+        name = "best" if self.strategy == "auto" else self.strategy
+        if name in ("best", "exact", "nockpt", "withckpt", "migration"):
+            return optimize(name, plat, pm)
         raise ValueError(self.strategy)
 
     # ------------------------------------------------------------------ #

@@ -1,0 +1,231 @@
+"""jnp twins of the analytic waste layer + the batched period optimizer.
+
+Every function up to :func:`cell_waste` is the jnp twin of its namesake
+in :mod:`repro.core.analytic` (registered in
+``analysis.twins.TWIN_REGISTRY``; edit both sides together).  They are
+branchless, vmappable over the fused engine's per-cell parameter
+columns, and — the point of the jnp dialect — differentiable, so the
+optimizer below runs :func:`jax.grad` / second derivatives through the
+paper's waste formulas instead of scanning period grids.
+
+:func:`newton_policy` solves every cell's optimal regular period in one
+jitted dispatch: per-cell safeguarded Newton steps (accepted only when
+the local second derivative is positive and the step stays inside a
+shrinking derivative-sign bracket, else bisection) on the domain
+``[lo, hi]`` supplied by the host, split at ``T = I`` where strategy
+Instant's waste is non-smooth (``min(E_f, T/2)``) — each sub-interval
+is convex, so bracketed Newton on both and a final compare is the
+global minimizer.  The q in {0, q_eff} case analysis of the host
+``optimize_*`` functions runs vectorized on top.
+
+The module stays dtype-polymorphic (kernel discipline: the caller picks
+x64/x32 via the enable-x64 context; nothing here names a wide dtype).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.waste import i_prime
+
+__all__ = [
+    "precision_from_fp",
+    "young_waste",
+    "exact_waste",
+    "migration_waste",
+    "instant_waste",
+    "nockpt_waste",
+    "withckpt_waste",
+    "two_level_waste",
+    "cell_waste",
+    "newton_policy",
+]
+
+#: integer strategy-mode codes of the engine tables (values of
+#: ``repro.core.batch_sim.MODE_CODES``, fixed by the packing format)
+_M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION = 0, 1, 2, 3, 4
+
+
+# --------------------------------------------------------------------------- #
+# Twin waste models (keep in lockstep with repro.core.analytic)
+# --------------------------------------------------------------------------- #
+# repro-twin: repro.core.analytic.precision_from_fp
+def precision_from_fp(mu, fp_mean, r):
+    fin = jnp.isfinite(fp_mean)
+    fp = jnp.where(fin, fp_mean, 1.0)
+    return jnp.where(fin, r * fp / (mu + r * fp), 1.0)
+
+
+# repro-twin: repro.core.analytic.young_waste
+def young_waste(T, C, DR, mu):
+    return C / T + (T / 2.0 + DR) / mu
+
+
+# repro-twin: repro.core.analytic.exact_waste
+def exact_waste(T, q, C, DR, mu, r, p):
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    pred_term = jnp.where(r > 0.0, (q * r / p_safe) * C, 0.0)
+    return C / T + ((1.0 - r * q) * T / 2.0 + DR + pred_term) / mu
+
+
+# repro-twin: repro.core.analytic.migration_waste
+def migration_waste(T, q, C, DR, M, mu, r, p):
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    pred_term = jnp.where(r > 0.0, (q * r / p_safe) * M, 0.0)
+    return C / T + ((1.0 - r * q) * (T / 2.0 + DR) + pred_term) / mu
+
+
+# repro-twin: repro.core.analytic.instant_waste
+def instant_waste(T, q, C, DR, mu, r, p, E_f):
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    pred_term = jnp.where(r > 0.0, (q * r / p_safe) * C, 0.0)
+    lost = q * r * jnp.minimum(E_f, T / 2.0)
+    return C / T + ((1.0 - r * q) * T / 2.0 + DR + pred_term + lost) / mu
+
+
+# repro-twin: repro.core.analytic.nockpt_waste
+def nockpt_waste(T, q, C, DR, mu, r, p, I, E_f):
+    r_safe = jnp.where(r > 0.0, r, 0.5)
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    m_p = p_safe * mu / r_safe
+    m_np = mu / (1.0 - r_safe)
+    ip = jnp.minimum(i_prime(q, p_safe, I, E_f), m_p)
+    reg_frac = 1.0 - ip / m_p
+    w = (reg_frac / T + q / m_p) * C
+    w = w + (p_safe * (1.0 - q) / m_p) * (T / 2.0)
+    w = w + (p_safe * q / m_p) * E_f
+    w = w + reg_frac / m_np * (T / 2.0)
+    w = w + (p_safe / m_p + reg_frac / m_np) * DR
+    return jnp.where(r > 0.0, w, young_waste(T, C, DR, mu))
+
+
+# repro-twin: repro.core.analytic.withckpt_waste
+def withckpt_waste(T, T_P, q, C, DR, mu, r, p, I, E_f):
+    r_safe = jnp.where(r > 0.0, r, 0.5)
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    m_p = p_safe * mu / r_safe
+    m_np = mu / (1.0 - r_safe)
+    ip = jnp.minimum(i_prime(q, p_safe, I, E_f), m_p)
+    reg_frac = 1.0 - ip / m_p
+    w = (reg_frac / T + (ip / m_p) / T_P + q / m_p) * C
+    w = w + (p_safe * (1.0 - q) / m_p) * (T / 2.0)
+    w = w + (p_safe * q / m_p) * T_P
+    w = w + reg_frac / m_np * (T / 2.0)
+    w = w + (p_safe / m_p + reg_frac / m_np) * DR
+    return jnp.where(r > 0.0, w, young_waste(T, C, DR, mu))
+
+
+# repro-twin: repro.core.analytic.two_level_waste
+def two_level_waste(T_m, T_d, C_m, C_d, DR_m, DR_d, mu, f, r, q, p):
+    w = C_m / T_m + C_d / T_d
+    frac = (1.0 - r * q) / mu
+    w = w + frac * (f * (T_m / 2.0 + DR_m) + (1.0 - f) * (T_d / 2.0 + DR_d))
+    p_safe = jnp.where(r > 0.0, p, 1.0)
+    pred = jnp.where((r > 0.0) & (q > 0.0), (q * r / p_safe) * C_m / mu, 0.0)
+    return w + pred
+
+
+# repro-twin: repro.core.analytic.cell_waste
+def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
+    E_f = 0.5 * window
+    tp = jnp.where(jnp.isnan(T_P), tp_eff, T_P)
+    w_y = young_waste(T, C, DR, mu)
+    w = jnp.where(
+        window > 0.0,
+        instant_waste(T, q, C, DR, mu, r, p, E_f),
+        exact_waste(T, q, C, DR, mu, r, p),
+    )
+    w = jnp.where(
+        mode == _M_MIGRATION, migration_waste(T, q, C, DR, lead_act, mu, r, p), w
+    )
+    w = jnp.where(
+        mode == _M_NOCKPT, nockpt_waste(T, q, C, DR, mu, r, p, window, E_f), w
+    )
+    w = jnp.where(
+        mode == _M_WITHCKPT,
+        withckpt_waste(T, tp, q, C, DR, mu, r, p, window, E_f),
+        w,
+    )
+    return jnp.where((mode == _M_NONE) | (q <= 0.0) | (r <= 0.0), w_y, w)
+
+
+# --------------------------------------------------------------------------- #
+# Batched safeguarded-Newton period optimization
+# --------------------------------------------------------------------------- #
+#: per-cell objective and its first/second T-derivatives, vmapped over
+#: every column (the differentiability the jnp dialect buys)
+_N_ARGS = 12
+_waste_v = jax.vmap(cell_waste, in_axes=(0,) * _N_ARGS)
+_grad_v = jax.vmap(jax.grad(cell_waste), in_axes=(0,) * _N_ARGS)
+_hess_v = jax.vmap(jax.grad(jax.grad(cell_waste)), in_axes=(0,) * _N_ARGS)
+
+
+def _solve_bracket(cols, T0, lo, hi, iters):
+    """Safeguarded Newton on one convex sub-interval, all cells at once.
+
+    Maintains a bracket on the derivative's sign change: W' <= 0 moves
+    ``lo``, W' > 0 moves ``hi`` (convexity makes the minimizer the
+    unique sign change, or a boundary — which the bracket collapses
+    onto).  A Newton step ``T - W'/W''`` is taken when the curvature is
+    positive, finite and the step stays strictly inside the bracket;
+    otherwise the iteration bisects.  ``iters`` bisections bound the
+    error by ``(hi - lo) * 2**-iters`` even if Newton never fires."""
+
+    def body(_, st):
+        T, lo_b, hi_b = st
+        g = _grad_v(T, *cols)
+        h = _hess_v(T, *cols)
+        lo_b = jnp.where(g <= 0.0, T, lo_b)
+        hi_b = jnp.where(g > 0.0, T, hi_b)
+        Tn = T - g / jnp.where(h > 0.0, h, 1.0)
+        ok = (h > 0.0) & jnp.isfinite(Tn) & (Tn > lo_b) & (Tn < hi_b)
+        T = jnp.where(ok, Tn, 0.5 * (lo_b + hi_b))
+        return (T, lo_b, hi_b)
+
+    T, _, _ = lax.fori_loop(0, iters, body, (jnp.clip(T0, lo, hi), lo, hi))
+    return T
+
+
+# repro-lint: jit-root
+@partial(jax.jit, static_argnames="iters")
+def newton_policy(
+    mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff,
+    lo, hi0, hi1, iters: int = 60,
+):
+    """One-dispatch batched period optimization over a cell table.
+
+    Solves the trusted branch (q as tabled) on ``[lo, hi1]`` — split at
+    the Instant kink ``T = window`` — and the untrusted q = 0 branch on
+    ``[lo, hi0]``, then keeps the better operating point per cell (the
+    waste is affine in q, so the optimum is at q = 0 or q = q_eff,
+    mirroring the host case analyses).  Returns
+    ``(T, q, waste, T0, waste0, T1, waste1)`` with ``waste`` min'd
+    against 1 like :class:`~repro.core.periods.OptimalPolicy`."""
+    cols1 = (mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff)
+    zq = jnp.zeros_like(q)
+    cols0 = (mode, zq, C, DR, lead_act, mu, r, p, window, T_P, tp_eff)
+
+    t0_guess = jnp.sqrt(2.0 * mu * C)
+    den = jnp.maximum(1.0 - r * q, 0.015625)
+    t1_guess = jnp.sqrt(2.0 * mu * C / den)
+
+    knot = jnp.clip(window, lo, hi1)
+    Ta = _solve_bracket(cols1, jnp.minimum(t0_guess, knot), lo, knot, iters)
+    Tb = _solve_bracket(cols1, jnp.maximum(t1_guess, knot), knot, hi1, iters)
+    wa = _waste_v(Ta, *cols1)
+    wb = _waste_v(Tb, *cols1)
+    T1 = jnp.where(wa <= wb, Ta, Tb)
+    w1 = jnp.minimum(wa, wb)
+
+    T0 = _solve_bracket(cols0, t0_guess, lo, hi0, iters)
+    w0 = _waste_v(T0, *cols0)
+
+    use1 = (w1 < w0) & (q > 0.0) & (r > 0.0)
+    T = jnp.where(use1, T1, T0)
+    qs = jnp.where(use1, q, 0.0)
+    w = jnp.where(use1, w1, w0)
+    return T, qs, jnp.minimum(w, 1.0), T0, w0, T1, w1
