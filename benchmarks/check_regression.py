@@ -14,7 +14,11 @@ Figures 4-7 cells: analytic waste vs simulated waste) and ``jax_engine``
   fused paper-grid sweep's cells/sec (``fused_cells_per_s``) or the
   mixed-law one-dispatch sweep's (``mixed_law_cells_per_s``) — falls
   more than ``--perf-tol`` (default 30%) below the committed
-  ``BENCH_*.json`` baseline.
+  ``BENCH_*.json`` baseline; or
+* the *durability* price regresses: the resumable campaign runner's
+  snapshot overhead vs the plain fused sweep at the same chunking
+  (``campaign_overhead_frac``, a self-contained in-record comparison)
+  exceeds ``--campaign-tol`` (default 5%).
 
 Fresh records are written to ``--out-dir`` so the CI workflow can upload
 them as artifacts (and a maintainer can promote them to new baselines).
@@ -53,18 +57,39 @@ def compare(
     drift_tol: float = 0.02,
     perf_tol: float = 0.30,
     agree_tol: float = 1e-9,
+    campaign_tol: float = 0.05,
 ) -> List[str]:
     """Compare fresh benchmark records against committed baselines.
 
     Returns a list of human-readable failure strings (empty = gate
-    passes).  Only names present in *both* record sets are compared, so
-    adding new benchmarks never trips the gate retroactively."""
+    passes).  Baseline-relative checks only fire for names present in
+    *both* record sets, so adding new benchmarks never trips the gate
+    retroactively; *self-contained* checks (the campaign-overhead
+    fraction, which carries its own in-record baseline) fire regardless."""
     failures: List[str] = []
     base = _by_name(baseline)
     for rec in fresh:
-        b = base.get(rec["name"])
         d = rec.get("derived")
-        if b is None or not isinstance(d, dict):
+        if not isinstance(d, dict):
+            continue
+
+        # self-contained: durable campaign sweeps must price their
+        # chunk-boundary snapshots within campaign_tol of the plain
+        # fused sweep at the same chunking (the record carries both legs)
+        if (
+            campaign_tol
+            and "campaign_overhead_frac" in d
+            and d["campaign_overhead_frac"] > campaign_tol
+        ):
+            failures.append(
+                f"{rec['name']}: campaign snapshot overhead "
+                f"{d['campaign_overhead_frac']:.1%} > {campaign_tol:.0%} "
+                f"(campaign {d.get('campaign_s')}s vs plain "
+                f"{d.get('plain_s')}s)"
+            )
+
+        b = base.get(rec["name"])
+        if b is None:
             continue
         bd = b.get("derived") if isinstance(b.get("derived"), dict) else {}
 
@@ -170,6 +195,9 @@ def main() -> None:
                     help="max simulated-waste drift vs the seeded baseline")
     ap.add_argument("--perf-tol", type=float, default=0.30,
                     help="max fractional lanes/sec regression (0 disables)")
+    ap.add_argument("--campaign-tol", type=float, default=0.05,
+                    help="max campaign-vs-plain sweep snapshot overhead "
+                    "fraction (0 disables)")
     ap.add_argument("--modules", default=None, metavar="A,B",
                     help="comma-separated subset of "
                     f"{','.join(BASELINES)} (default: all)")
@@ -231,7 +259,7 @@ def main() -> None:
             compare(
                 _load(bpath), fresh,
                 waste_tol=args.waste_tol, drift_tol=args.drift_tol,
-                perf_tol=args.perf_tol,
+                perf_tol=args.perf_tol, campaign_tol=args.campaign_tol,
             )
         )
 

@@ -115,6 +115,11 @@ TRACE_MODE_LANES = 40960
 #: dispatch granularities — the acceptance condition)
 FUSED_GRID_RUNS = 16
 
+#: lanes per chunk of the campaign-overhead record: small enough that
+#: the bench grid spans several chunks (= several snapshots at period 0,
+#: the worst-case durability cost); the plain sweep is chunked the same
+CAMPAIGN_CHUNK = 256
+
 #: failure laws of the mixed-law one-dispatch sweep — one family each of
 #: the memoryless / aging / heavy-tail classes (None = the preset's
 #: exponential default)
@@ -245,6 +250,7 @@ def run(quick: bool = True, devices=None) -> None:
             },
         )
     _run_fused_grid(reps=reps)
+    _run_campaign_grid(reps=reps)
     _run_mixed_law_grid(reps=reps)
     _run_analytic_opt(reps=reps)
     _run_devices_curve(reps=reps)
@@ -302,6 +308,59 @@ def _run_fused_grid(reps: int = 3) -> None:
             "fused_lanes_per_s": round(grid.n_lanes / fused_s, 1),
             "fused_vs_percell_max_diff": diff,
             **fused_split,
+        },
+    )
+
+
+def _run_campaign_grid(reps: int = 3) -> None:
+    """Time the resumable campaign runner (``repro.ft.run_campaign``)
+    against the plain fused sweep at the *same* chunking: the price of
+    durability — chunk-boundary CellSums snapshots through
+    CheckpointStore at the production default period (chosen online by
+    ``repro.core.optimize`` from the measured snapshot cost and the
+    configured MTBF) — expressed as ``campaign_overhead_frac``.
+    check_regression gates it at <= 5%: resilience must stay
+    effectively free."""
+    import shutil
+    import tempfile
+
+    from repro.experiments import GridSpec, paper_grid_cells, run_grid
+    from repro.ft import CampaignConfig, run_campaign
+
+    cells = paper_grid_cells("bench")
+    grid = GridSpec(tuple(cells), n_runs=FUSED_GRID_RUNS, seed=3)
+    n_cells = len(cells)
+    cfg = _CFG_STATS.replace(chunk_lanes=CAMPAIGN_CHUNK)
+
+    run_grid(grid, cfg)  # warm the chunk-shape executable
+    plain_s = camp_s = float("inf")
+    n_snapshots = 0
+    for _ in range(reps):
+        plain_s = min(plain_s, _timed(lambda: run_grid(grid, cfg)))
+        root = tempfile.mkdtemp(prefix="bench_campaign_")
+        try:
+            t0 = time.monotonic()
+            res = run_campaign(
+                grid, CampaignConfig(ckpt_dir=root), cfg
+            )
+            t = time.monotonic() - t0
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        if t < camp_s:
+            camp_s = t
+            n_snapshots = res.meta["campaign"]["n_snapshots"]
+    overhead = camp_s / plain_s - 1.0
+    emit(
+        f"jax_engine/campaign_grid_cells{n_cells}",
+        camp_s * 1e6 / n_cells,
+        {
+            "n_cells": n_cells,
+            "n_lanes": grid.n_lanes,
+            "chunk_lanes": CAMPAIGN_CHUNK,
+            "n_snapshots": n_snapshots,
+            "plain_s": round(plain_s, 3),
+            "campaign_s": round(camp_s, 3),
+            "campaign_overhead_frac": round(max(overhead, 0.0), 4),
         },
     )
 

@@ -11,8 +11,14 @@ Layout:
 Properties:
 * **Atomic commit** — payloads land in a tmp dir; `os.replace` to the final
   name is the commit point, so a fault mid-write never yields a checkpoint
-  that `latest_step` would restore.
-* **Integrity** — per-leaf crc32 checked on restore.
+  that `latest_step` would restore.  Payloads, the manifest and its
+  checksum sidecar are fsync'd before the rename, and the parent
+  directory after it — a power cut cannot commit unsynced bytes.
+* **Integrity** — per-leaf crc32 checked on restore; `manifest.crc`
+  sidecar guards the manifest itself.  `restore_latest` walks committed
+  steps newest-first and *skips* torn or corrupt ones (truncated shard,
+  crc mismatch, unreadable manifest), so a campaign resumes from the
+  newest checkpoint that actually survived.
 * **Re-shard on restore** — arrays are loaded as host numpy and
   `jax.device_put` with *target* shardings, so a checkpoint written on a
   512-chip mesh restores onto 256 chips (elastic shrink after losing a
@@ -28,9 +34,10 @@ import os
 import shutil
 import time
 import uuid
+import warnings
 import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -38,6 +45,31 @@ import numpy as np
 from . import codec as codec_mod
 
 __all__ = ["CheckpointStore", "latest_step"]
+
+
+def _write_durable(path: str, writer) -> None:
+    """Write via ``writer(file)`` and fsync before returning: bytes are
+    on the platter (or the journal) before the commit rename can make
+    the checkpoint visible."""
+    with open(path, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """Persist a directory entry (the rename itself) — best-effort on
+    filesystems without O_DIRECTORY fsync support."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic fs
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - exotic fs
+        pass
+    finally:
+        os.close(fd)
 
 
 def _flatten_with_keys(tree) -> Dict[str, Any]:
@@ -103,11 +135,17 @@ class CheckpointStore:
                     np.asarray(jax.device_get(prev)) if prev is not None else None
                 )
                 payload, meta = codec_mod.encode_array(arr, prev)
-                np.save(os.path.join(tmp, fname), payload, allow_pickle=False)
+                _write_durable(
+                    os.path.join(tmp, fname),
+                    lambda f, p=payload: np.save(f, p, allow_pickle=False),
+                )
                 meta["crc"] = zlib.crc32(payload.tobytes())
                 stored_bytes += payload.nbytes
             else:
-                np.save(os.path.join(tmp, fname), arr, allow_pickle=False)
+                _write_durable(
+                    os.path.join(tmp, fname),
+                    lambda f, a=arr: np.save(f, a, allow_pickle=False),
+                )
                 meta = {
                     "codec": "raw",
                     "dtype": str(arr.dtype),
@@ -116,12 +154,21 @@ class CheckpointStore:
                 }
                 stored_bytes += arr.nbytes
             manifest["leaves"][key] = meta
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        mbytes = json.dumps(manifest).encode("utf-8")
+        _write_durable(
+            os.path.join(tmp, "manifest.json"), lambda f: f.write(mbytes)
+        )
+        # checksum sidecar: lets restore_latest reject a manifest whose
+        # own bytes rotted without parsing garbage JSON first
+        _write_durable(
+            os.path.join(tmp, "manifest.crc"),
+            lambda f: f.write(f"{zlib.crc32(mbytes):08x}".encode()),
+        )
         final = self._dir(step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)  # commit point
+        _fsync_dir(self.root)
         t_total = time.monotonic() - t0
         return {
             "t_snapshot": t_snapshot,
@@ -142,8 +189,15 @@ class CheckpointStore:
         supplies the tree structure; ``shardings`` (matching pytree or
         single sharding) re-shards onto the current mesh."""
         d = self._dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        with open(os.path.join(d, "manifest.json"), "rb") as f:
+            mbytes = f.read()
+        crc_path = os.path.join(d, "manifest.crc")
+        if os.path.exists(crc_path):  # sidecar absent on legacy checkpoints
+            with open(crc_path) as f:
+                want = f.read().strip()
+            if f"{zlib.crc32(mbytes):08x}" != want:
+                raise IOError(f"manifest corruption at step {step}")
+        manifest = json.loads(mbytes.decode("utf-8"))
         prev_flat = _flatten_with_keys(prev_tree) if prev_tree is not None else {}
 
         host: Dict[str, np.ndarray] = {}
@@ -193,16 +247,50 @@ class CheckpointStore:
             leaves_paths[1], [restored[k] for k in keys_in_order]
         )
 
+    def steps(self) -> List[int]:
+        """Committed step numbers, ascending (staging dirs excluded)."""
+        if not os.path.isdir(self.root):
+            return []
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and "tmp-" not in d:
+                try:
+                    out.append(int(d.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def restore_latest(
+        self, target=None, shardings=None, prev_tree=None
+    ) -> Optional[Tuple[int, Any]]:
+        """Restore the newest checkpoint that passes integrity checks.
+
+        Walks committed steps newest-first; a torn or corrupt one
+        (truncated ``.npy`` shard, crc mismatch, missing or rotted
+        manifest, missing leaves) is *skipped with a warning* instead of
+        aborting the restore — the previous durable checkpoint is the
+        restore point, exactly the risk the paper's recovery term
+        already prices.  Returns ``(step, tree)`` or ``None`` if no
+        checkpoint survives."""
+        for step in reversed(self.steps()):
+            try:
+                tree = self.restore(
+                    step, target=target, shardings=shardings,
+                    prev_tree=prev_tree,
+                )
+                return step, tree
+            except (IOError, OSError, ValueError, KeyError, EOFError,
+                    json.JSONDecodeError) as e:
+                warnings.warn(
+                    f"skipping unusable checkpoint step {step}: {e}",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        return None
+
     def gc(self, keep: int = 2) -> None:
         """Drop all but the newest ``keep`` committed checkpoints."""
-        if not os.path.isdir(self.root):
-            return
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.root)
-            if d.startswith("step_") and "tmp-" not in d
-        )
-        for s in steps[:-keep]:
+        for s in self.steps()[:-keep]:
             shutil.rmtree(self._dir(s), ignore_errors=True)
 
 

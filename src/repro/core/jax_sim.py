@@ -149,6 +149,7 @@ from .waste import Platform
 __all__ = [
     "simulate_batch_jax",
     "CellSums",
+    "default_chunk_lanes",
     "device_interarrival_samples",
     "enable_compilation_cache",
     "LAST_TIMINGS",
@@ -185,6 +186,27 @@ CACHE_ENV = "REPRO_JAX_CACHE_DIR"
 _DEFAULT_CHUNK_CPU = 5120
 _DEFAULT_CHUNK_CPU_SPEC = 10240
 _DEFAULT_CHUNK_DEV = 16384
+
+
+def default_chunk_lanes(
+    devices=None, mesh=None, trace_mode: str = "device"
+) -> int:
+    """The lane count ``chunk="auto"`` resolves to for a device set.
+
+    Public so callers that own the chunk loop themselves — the resumable
+    campaign runner dispatches one engine call per campaign chunk so it
+    can snapshot between them — pick the same measured-optimal chunk as
+    the engine's internal pipeline."""
+    devs = _resolve_devices(devices, mesh)
+    n_dev = len(devs)
+    if devs[0].platform == "cpu":
+        base = (
+            _DEFAULT_CHUNK_CPU_SPEC
+            if trace_mode == "device"
+            else _DEFAULT_CHUNK_CPU
+        )
+        return base * min(n_dev, 2)
+    return _DEFAULT_CHUNK_DEV * n_dev
 
 
 def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
@@ -1459,6 +1481,28 @@ class CellSums:
             n_proactive_ckpts=cs[:, _CS_NPRO],
             n_regular_ckpts=cs[:, _CS_NREG], n_migrations=cs[:, _CS_NMIG],
             n_exhausted=cs[:, _CS_EXH],
+        )
+
+    def as_matrix(self) -> np.ndarray:
+        """The ``(n_cells, 10)`` column matrix (``_CS_*`` order, minus
+        the internal not-done flag): sums are plain f64 adds, so partial
+        sweeps accumulate by matrix addition — the resumable campaign's
+        durable accumulator (:mod:`repro.ft.campaign`) is exactly this
+        matrix summed chunk by chunk."""
+        return np.stack(
+            [
+                np.asarray(self.n, np.float64),
+                np.asarray(self.makespan_sum, np.float64),
+                np.asarray(self.makespan_sumsq, np.float64),
+                np.asarray(self.waste_sum, np.float64),
+                np.asarray(self.waste_sumsq, np.float64),
+                np.asarray(self.n_faults, np.float64),
+                np.asarray(self.n_proactive_ckpts, np.float64),
+                np.asarray(self.n_regular_ckpts, np.float64),
+                np.asarray(self.n_migrations, np.float64),
+                np.asarray(self.n_exhausted, np.float64),
+            ],
+            axis=1,
         )
 
 

@@ -273,7 +273,10 @@ class SweepResult:
     ``dispatch`` records the engine-call granularity ("fused": the grid
     rode cell-multiplexed megabatch dispatches; "percell": one call per
     cell) and ``collect`` the result layout ("lanes": per-run arrays;
-    "stats": device-reduced summary moments)."""
+    "stats": device-reduced summary moments).  ``meta`` carries
+    execution provenance that is not part of the statistical result —
+    e.g. a resumable campaign's recovery events (retries, engine
+    degradation, snapshots, resume points); ``None`` for plain sweeps."""
 
     grid: GridSpec
     cells: List[CellResult]
@@ -281,6 +284,7 @@ class SweepResult:
     wall_time_s: float
     dispatch: str = "fused"
     collect: str = "lanes"
+    meta: Optional[Dict] = None
 
     def __getitem__(self, label: str) -> CellResult:
         for c in self.cells:
@@ -320,5 +324,7 @@ class SweepResult:
             "seed": self.grid.seed,
             "cells": self.to_rows(),
         }
+        if self.meta is not None:
+            payload["meta"] = self.meta
         with open(path, "w") as f:
             json.dump(payload, f, indent=1, allow_nan=False)

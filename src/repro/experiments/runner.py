@@ -72,6 +72,7 @@ statistics (to float rounding) without the raw samples.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -88,7 +89,7 @@ from ..core.events import (
 from ..core.simulator import simulate
 from .grid import CellResult, ExperimentCell, GridSpec, SweepResult
 
-__all__ = ["run_grid", "run_cells"]
+__all__ = ["run_grid", "run_cells", "FusedLayout", "build_fused_layout"]
 
 
 def _group_cells(grid: GridSpec) -> List[Tuple[Tuple, List[int]]]:
@@ -268,6 +269,104 @@ def _cat_lane_arrays(parts: List[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray
     return {k: np.concatenate([p[k] for p in parts]) for k in _LANE_FIELDS}
 
 
+@dataclass
+class FusedLayout:
+    """The fused dispatch's lane layout, grid-deterministic.
+
+    Everything the cell-multiplexed engine call needs, assembled once
+    from a :class:`GridSpec`: cells regrouped in trace-compatibility
+    order (``cell_order``), per-cell lane counts and offsets, the
+    per-cell engine tables (``work_c`` / ``plats_c`` / ``strats_c``),
+    the lane -> cell index, and the trace source — per-group
+    :class:`TraceSpec` streams (device trace mode) or one concatenated
+    :class:`BatchTraces` (host mode).  Both :func:`run_grid` and the
+    resumable :class:`~repro.ft.campaign.CampaignRunner` build the
+    *same* layout from the same grid, which is what makes a campaign's
+    lane partition (and therefore its results) reconstructible from
+    ``(grid, cursor)`` alone — no trace replay, no stored traces."""
+
+    grid: GridSpec
+    groups: List[Tuple[Tuple, List[int]]]
+    cell_order: List[int]
+    runs_o: np.ndarray  # (n_cells,) lanes per cell, cell_order order
+    offs: np.ndarray  # (n_cells + 1,) lane offsets per cell
+    specs: List[TraceSpec]  # device trace mode: one spec per group
+    traces: Optional[BatchTraces]  # host trace mode: all lanes
+    work_c: np.ndarray
+    plats_c: List
+    strats_c: List
+    cidx: np.ndarray  # (n_lanes,) lane -> cell_order position
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.offs[-1])
+
+    def concat_spec(self) -> TraceSpec:
+        """The one-dispatch device-mode spec: multi-group grids
+        concatenate per-group specs into a single cell-indexed spec
+        (law-indexed sampler); single-group grids keep the
+        law-specialized spec — same results, cheaper draws."""
+        if not self.specs:
+            raise ValueError("concat_spec requires trace_mode='device'")
+        if len(self.specs) == 1:
+            return self.specs[0]
+        return TraceSpec.concat_cells(self.specs)
+
+    def host_traces(self) -> BatchTraces:
+        """Host-materialized event arrays for all lanes (host engines,
+        and the campaign's batch-engine degradation path in device
+        trace mode)."""
+        if self.traces is not None:
+            return self.traces
+        return BatchTraces.concat([s.materialize() for s in self.specs])
+
+
+def build_fused_layout(grid: GridSpec, trace_mode: str) -> FusedLayout:
+    """Assemble the fused dispatch's :class:`FusedLayout` for ``grid``.
+
+    Deterministic in ``(grid, trace_mode)``: host traces are generated
+    from ``grid.seed`` per group, device specs carry globally-unique
+    counter-RNG stream ids — so two processes building the layout from
+    the same grid get bit-identical lanes in the same order."""
+    groups = _group_cells(grid)
+    cell_order: List[int] = [ci for _, idx in groups for ci in idx]
+    runs_o = np.array([grid.cell_runs(ci) for ci in cell_order], np.int64)
+    offs = np.concatenate([[0], np.cumsum(runs_o)])
+    specs: List[TraceSpec] = []
+    traces: Optional[BatchTraces] = None
+    if trace_mode == "device":
+        base = 0
+        for _, idx in groups:
+            spec, base = _group_trace_spec(grid, idx, base)
+            specs.append(spec)
+    else:
+        # per-group batched generation, then one engine call over all
+        # groups: with zero-copy sentinel adoption the width padding of
+        # concat costs less than the extra iterations of per-group calls
+        traces = BatchTraces.concat(
+            [
+                _group_traces(grid, idx, gno)
+                for gno, (_, idx) in enumerate(groups)
+            ]
+        )
+    # per-cell tables in cell_order (the fused dispatch's cell axis)
+    work_c = np.asarray(
+        [grid.cells[ci].work for ci in cell_order], dtype=np.float64
+    )
+    plats_c = [grid.cells[ci].platform for ci in cell_order]
+    strats_c = [grid.cells[ci].strategy for ci in cell_order]
+    cidx = np.repeat(np.arange(len(cell_order), dtype=np.int32), runs_o)
+    return FusedLayout(
+        grid=grid, groups=groups, cell_order=cell_order, runs_o=runs_o,
+        offs=offs, specs=specs, traces=traces, work_c=work_c,
+        plats_c=plats_c, strats_c=strats_c, cidx=cidx,
+    )
+
+
 def _stats_cell_result(cell: ExperimentCell, sums, i: int) -> CellResult:
     """One stats-backed CellResult row from device-reduced CellSums."""
     return CellResult.from_stats(
@@ -386,37 +485,15 @@ def run_grid(
             grid=grid, cells=cells, engine=engine,
             wall_time_s=time.monotonic() - t0, dispatch=dispatch,
         )
-    groups = _group_cells(grid)
-    cell_order: List[int] = [ci for _, idx in groups for ci in idx]
-    runs_o = np.array([grid.cell_runs(ci) for ci in cell_order], np.int64)
-    offs = np.concatenate([[0], np.cumsum(runs_o)])
-    specs: List[TraceSpec] = []
-    if trace_mode == "device":
-        base = 0
-        for _, idx in groups:
-            spec, base = _group_trace_spec(grid, idx, base)
-            specs.append(spec)
-        traces = None
-    else:
-        # per-group batched generation, then one engine call over all
-        # groups: with zero-copy sentinel adoption the width padding of
-        # concat costs less than the extra iterations of per-group calls
-        traces = BatchTraces.concat(
-            [
-                _group_traces(grid, idx, gno)
-                for gno, (_, idx) in enumerate(groups)
-            ]
-        )
-    # per-cell tables in cell_order (the fused dispatch's cell axis)
-    work_c = np.asarray(
-        [grid.cells[ci].work for ci in cell_order], dtype=np.float64
-    )
-    plats_c = [grid.cells[ci].platform for ci in cell_order]
-    strats_c = [grid.cells[ci].strategy for ci in cell_order]
-    cidx = np.repeat(np.arange(len(cell_order), dtype=np.int32), runs_o)
+    layout = build_fused_layout(grid, trace_mode)
+    groups, cell_order = layout.groups, layout.cell_order
+    runs_o, offs, specs = layout.runs_o, layout.offs, layout.specs
+    work_c, plats_c = layout.work_c, layout.plats_c
+    strats_c, cidx = layout.strats_c, layout.cidx
+    traces = layout.traces
     if trace_mode == "device" and engine != "jax":
         # host engines replay the device streams via materialize()
-        traces = BatchTraces.concat([s.materialize() for s in specs])
+        traces = layout.host_traces()
 
     lane_parts: List[Dict[str, np.ndarray]] = []
     stats_rows: List[CellResult] = []

@@ -1,10 +1,21 @@
 """Fault-tolerance runtime: the paper's prediction-aware checkpointing
 policy driving a real training loop, plus fault injection, elastic
-migration and straggler mitigation."""
+migration, straggler mitigation, and the resumable campaign runner that
+applies the same checkpointing calculus to the sweeps themselves."""
 
 from .executor import FaultTolerantExecutor, RunReport, SimClock, WallClock, WasteLedger
-from .injection import FaultInjector, SimulatedFault
+from .injection import (
+    CampaignKilled,
+    ChaosInjector,
+    FaultInjector,
+    SimulatedFault,
+    SyntheticDeviceLoss,
+    SyntheticJaxFailure,
+    SyntheticOOM,
+)
 from .elastic import ElasticManager, StragglerDetector
+from .retry import FailureKind, RetryPolicy, classify_failure
+from .campaign import CampaignConfig, CampaignRunner, run_campaign
 
 __all__ = [
     "FaultTolerantExecutor",
@@ -14,6 +25,15 @@ __all__ = [
     "WasteLedger",
     "FaultInjector",
     "SimulatedFault",
-    "ElasticManager",
-    "StragglerDetector",
+    "CampaignKilled",
+    "ChaosInjector",
+    "SyntheticOOM",
+    "SyntheticDeviceLoss",
+    "SyntheticJaxFailure",
+    "FailureKind",
+    "RetryPolicy",
+    "classify_failure",
+    "CampaignConfig",
+    "CampaignRunner",
+    "run_campaign",
 ]

@@ -36,6 +36,7 @@ from ..core.analytic import optimize
 from ..core.predictor import OnlinePredictor, estimate_recall_precision
 from ..core.waste import Platform, PredictorModel, waste_exact
 from .injection import FaultInjector, SimulatedFault
+from .retry import FailureKind, RetryPolicy, classify_failure
 
 __all__ = [
     "SimClock",
@@ -152,6 +153,17 @@ class FaultTolerantExecutor:
                   .durable_step / .wait(); or None for simulated cost
     restore_fn    (step:int) -> pytree, used on recovery (None in pure
                   simulation mode)
+    restore_tiers ordered restore sources, each (step:int) -> pytree —
+                  e.g. [memory_tier, disk_tier].  A failing tier is
+                  retried under the shared retry/backoff classifier
+                  (:mod:`repro.ft.retry`), then the next tier is tried,
+                  then an *older* checkpointed step — every failed
+                  attempt is charged to the ledger's recovery bucket
+                  (and the re-lost work to lost_work).  Defaults to
+                  ``[restore_fn]``.
+    restore_retry RetryPolicy for the restore ladder (injectable sleep
+                  for tests; sim-clock time is charged instead of
+                  sleeping when ``clock`` is a SimClock)
     injector      FaultInjector or None
     clock         SimClock (simulated costs) or WallClock (measured)
     step_time     simulated seconds per step (SimClock mode)
@@ -172,6 +184,8 @@ class FaultTolerantExecutor:
         save_state: Callable[[Any], Any] = lambda s: s,
         load_state: Callable[[Any, Any, int], Any] = lambda s, t, k: t,
         restore_fn: Optional[Callable[[int], Any]] = None,
+        restore_tiers: Optional[List[Callable[[int], Any]]] = None,
+        restore_retry: Optional[RetryPolicy] = None,
         injector: Optional[FaultInjector] = None,
         clock: Optional[Any] = None,
         step_time: float = 1.0,
@@ -188,6 +202,11 @@ class FaultTolerantExecutor:
         self.save_state = save_state
         self.load_state = load_state
         self.restore_fn = restore_fn
+        if restore_tiers is not None:
+            self.restore_tiers = list(restore_tiers)
+        else:
+            self.restore_tiers = [restore_fn] if restore_fn is not None else []
+        self.restore_retry = restore_retry or RetryPolicy()
         self.injector = injector
         self.clock = clock or SimClock()
         self.sim = isinstance(self.clock, SimClock)
@@ -208,6 +227,8 @@ class FaultTolerantExecutor:
         self.fn_obs = 0
 
         self._last_ckpt_step = 0
+        self._ckpt_history: List[int] = [0]  # steps with a restore point
+        self._restore_ctr = 0  # deterministic backoff counter
         self._work_since_ckpt = 0.0
         self._pending: List[Any] = []  # trusted predictions not yet acted on
         self._window_until = -math.inf  # NoCkptI: suppress periodic ckpts
@@ -276,6 +297,8 @@ class FaultTolerantExecutor:
             self.ledger.ckpt += cost
             self.n_periodic += 1
         self._last_ckpt_step = step
+        if step not in self._ckpt_history:
+            self._ckpt_history.append(step)
         self._work_since_ckpt = 0.0
         if self.adapt_period:
             self._policy = self._compute_policy()
@@ -305,7 +328,7 @@ class FaultTolerantExecutor:
         self.ledger.downtime += self.platform.D
         t0 = self.clock.now()
         restored_step = self._last_ckpt_step
-        if self.restore_fn is not None:
+        if self.restore_tiers:
             if self.checkpointer is not None and hasattr(
                 self.checkpointer, "wait"
             ):
@@ -313,7 +336,7 @@ class FaultTolerantExecutor:
                     self.checkpointer.wait()
                 except Exception:
                     pass
-            tree = self.restore_fn(restored_step)
+            tree, restored_step = self._restore_with_fallback(restored_step)
             self.state = self.load_state(self.state, tree, restored_step)
         if self.sim:
             self.clock.advance(self.platform.R)
@@ -322,6 +345,52 @@ class FaultTolerantExecutor:
             self.ledger.recovery += self.clock.now() - t0 + self.platform.D * 0
         self.n_restores += 1
         return restored_step
+
+    def _restore_with_fallback(self, step: int) -> Tuple[Any, int]:
+        """Restore ``step`` through the tier ladder, newest-first.
+
+        Per candidate step: every tier in order, each with
+        ``restore_retry.max_attempts`` classified/backed-off attempts
+        (FATAL skips straight to the next tier).  A failing attempt
+        costs a restore — ``platform.R`` on the sim clock, charged to
+        the recovery bucket (wall clocks measure it for real).  When a
+        candidate step is abandoned entirely, the work between it and
+        the next-older restore point is re-lost.  Raises the last error
+        if nothing restores."""
+        candidates = sorted(
+            {s for s in self._ckpt_history if s <= step}, reverse=True
+        ) or [step]
+        pol = self.restore_retry
+        last_err: Optional[Exception] = None
+        for ci, cand in enumerate(candidates):
+            if ci:
+                # falling back to an older restore point re-loses the
+                # work in between (paper: the recovery term grows)
+                self.ledger.lost_work += (
+                    (candidates[ci - 1] - cand) * self.step_time
+                )
+            for tier in self.restore_tiers:
+                for attempt in range(pol.max_attempts):
+                    try:
+                        return tier(cand), cand
+                    except Exception as e:  # classified below
+                        last_err = e
+                        self._restore_ctr += 1
+                        # the failed attempt consumed a restore's time
+                        if self.sim:
+                            self.clock.advance(self.platform.R)
+                            self.ledger.recovery += self.platform.R
+                        if classify_failure(e) is FailureKind.FATAL:
+                            break  # this tier cannot serve this step
+                        dt = pol.backoff(attempt, self._restore_ctr)
+                        if self.sim:
+                            self.clock.advance(dt)
+                            self.ledger.recovery += dt
+                        else:
+                            pol.sleep(dt)
+        if last_err is not None:
+            raise last_err
+        raise IOError(f"no restore tier could serve step {step}")
 
     # ------------------------------------------------------------------ #
     # main loop

@@ -1,19 +1,43 @@
-"""Fault injection for the executor.
+"""Fault injection: executor-level simulated faults and campaign-level
+chaos.
 
 Real fleet faults land as SIGTERMs / slice-health events between or during
 steps; here they surface as :class:`SimulatedFault` raised at step
 boundaries when the (simulated or wall) clock crosses a fault time from an
 :class:`EventTrace` — the same trace generator the paper's simulator uses,
 so executor behaviour is directly comparable to the analytic model.
+
+:class:`ChaosInjector` is the campaign-level counterpart: it fires
+process kills, synthetic OOMs, device losses and persistent engine
+failures at *chunk boundaries* of a :class:`~repro.ft.campaign.
+CampaignRunner` sweep, from the repo's deterministic counter-based RNG
+(:func:`repro.core.events.splitmix64`) — so every chaos schedule is
+replayable from its seed and the whole recovery matrix is exercised in
+tests and CI rather than claimed.  The synthetic exceptions carry the
+same message fragments the XLA runtime uses, so they route through the
+production :func:`repro.ft.retry.classify_failure` classifier.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+import os
+import signal
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Set, Tuple
 
-from ..core.events import EventTrace
+import numpy as np
 
-__all__ = ["SimulatedFault", "FaultInjector"]
+from ..core.events import EventTrace, splitmix64, uniform24
+
+__all__ = [
+    "SimulatedFault",
+    "FaultInjector",
+    "CampaignKilled",
+    "SyntheticOOM",
+    "SyntheticDeviceLoss",
+    "SyntheticJaxFailure",
+    "ChaosInjector",
+]
 
 
 class SimulatedFault(RuntimeError):
@@ -52,3 +76,179 @@ class FaultInjector:
             predicted = self.predicted[self._i]
             self._i += 1
             raise SimulatedFault(nxt, predicted)
+
+
+# ---------------------------------------------------------------------- #
+# campaign-level chaos
+# ---------------------------------------------------------------------- #
+class CampaignKilled(BaseException):
+    """Process death injected at a chunk boundary (``kill_mode="raise"``).
+
+    Deliberately a :class:`BaseException`: recovery code that catches
+    ``Exception`` (the retry classifier) must NOT be able to swallow a
+    simulated process death — only the test harness catches it, exactly
+    as only the OS observes a real SIGKILL."""
+
+    def __init__(self, chunk: int):
+        super().__init__(f"campaign killed at chunk boundary {chunk}")
+        self.chunk = chunk
+
+
+class SyntheticOOM(RuntimeError):
+    """Chaos allocation failure; classifies as ``FailureKind.OOM``."""
+
+    def __init__(self, chunk: int):
+        super().__init__(
+            f"RESOURCE_EXHAUSTED: synthetic chaos OOM at chunk {chunk} "
+            "(out of memory while trying to allocate lane buffers)"
+        )
+        self.chunk = chunk
+
+
+class SyntheticDeviceLoss(RuntimeError):
+    """Chaos device loss; classifies as ``FailureKind.DEVICE_LOSS``.
+
+    ``n_lost`` is how many devices of the current set dropped (the
+    campaign rebuilds its dispatch on the survivors)."""
+
+    def __init__(self, chunk: int, n_lost: int = 1):
+        super().__init__(
+            f"DEVICE_LOST: synthetic chaos device loss at chunk {chunk} "
+            f"({n_lost} device(s) dropped from the dispatch set)"
+        )
+        self.chunk = chunk
+        self.n_lost = n_lost
+
+
+class SyntheticJaxFailure(RuntimeError):
+    """Chaos engine failure with no recognizable status code; classifies
+    as ``FailureKind.TRANSIENT`` and — fired persistently — exhausts the
+    retry budget, forcing the engine="jax" -> "batch" degradation."""
+
+    def __init__(self, chunk: int):
+        super().__init__(
+            f"synthetic persistent jax engine failure at chunk {chunk}"
+        )
+        self.chunk = chunk
+
+
+@dataclass
+class ChaosInjector:
+    """Deterministic chunk-boundary chaos for campaign sweeps.
+
+    Two firing modes compose:
+
+    * **scheduled** — ``kill_at`` / ``oom_at`` / ``device_loss_at`` name
+      chunk indices (fired once, in incarnation 0, on the first attempt
+      of that chunk: a retry or a resumed process proceeds past them,
+      which is what lets tests assert the recovery completed);
+      ``jax_fail_at`` fires from that chunk index onward on *every*
+      attempt while the engine is still "jax" (a persistent engine bug),
+      or on first attempts only with ``jax_fail_persistent=False``.
+    * **probabilistic** — ``p_kill`` / ``p_oom`` / ``p_device_loss`` are
+      per-chunk-boundary firing probabilities drawn from the SplitMix64
+      counter stream keyed on ``(seed, incarnation, chunk)``: the same
+      seed replays the same chaos, while a resumed incarnation sees
+      fresh draws (so a kill is not deterministically re-fired forever).
+      ``max_fires`` bounds the total probabilistic fires (fuzz budget).
+
+    ``kill_mode`` selects how process death is simulated: ``"raise"``
+    raises :class:`CampaignKilled` (in-process tests), ``"sigkill"``
+    sends the hosting process a real ``SIGKILL`` (subprocess tests — no
+    atexit handlers, no flushes, exactly a preemption)."""
+
+    seed: int = 0
+    p_kill: float = 0.0
+    p_oom: float = 0.0
+    p_device_loss: float = 0.0
+    kill_at: Sequence[int] = ()
+    oom_at: Sequence[int] = ()
+    device_loss_at: Sequence[int] = ()
+    jax_fail_at: Optional[int] = None
+    jax_fail_persistent: bool = True
+    kill_mode: str = "raise"
+    max_fires: Optional[int] = None
+    #: (chunk, kind) pairs already fired by this injector instance
+    fired: Set[Tuple[int, str]] = field(default_factory=set)
+    n_fires: int = 0
+
+    def __post_init__(self):
+        if self.kill_mode not in ("raise", "sigkill"):
+            raise ValueError(
+                f"unknown kill_mode {self.kill_mode!r} "
+                "(expected 'raise' or 'sigkill')"
+            )
+
+    # ------------------------------------------------------------------ #
+    def _u(self, incarnation: int, chunk: int, slot: int) -> float:
+        """One deterministic U(0,1) draw per (incarnation, chunk, slot)."""
+        ctr = (
+            ((incarnation & 0xFFFF) << 40)
+            | ((chunk & 0xFFFFFFFF) << 8)
+            | (slot & 0xFF)
+        )
+        hi, _lo = splitmix64(
+            np.uint64(self.seed & 0xFFFFFFFFFFFFFFFF), np.uint64(ctr)
+        )
+        return float(uniform24(hi))
+
+    def _kill(self, chunk: int) -> None:
+        if self.kill_mode == "sigkill":
+            os.kill(os.getpid(), signal.SIGKILL)  # pragma: no cover
+        raise CampaignKilled(chunk)
+
+    def _budget_ok(self) -> bool:
+        return self.max_fires is None or self.n_fires < self.max_fires
+
+    # ------------------------------------------------------------------ #
+    def at_chunk_boundary(
+        self,
+        chunk: int,
+        *,
+        incarnation: int = 0,
+        attempt: int = 0,
+        engine: str = "jax",
+    ) -> None:
+        """Fire chaos (by raising) for the chunk about to be dispatched.
+
+        ``attempt`` is the dispatch attempt of this chunk (0 = first);
+        ``engine`` is the campaign's *current* engine, so a persistent
+        jax failure stops firing once the campaign degraded to "batch"
+        (the synthetic bug lives in the jax path)."""
+        # persistent engine failure: every attempt while still on jax
+        if (
+            self.jax_fail_at is not None
+            and engine == "jax"
+            and chunk >= self.jax_fail_at
+            and (self.jax_fail_persistent or attempt == 0)
+        ):
+            raise SyntheticJaxFailure(chunk)
+        if attempt:
+            return  # scheduled/probabilistic chaos fires once per chunk
+        if incarnation == 0:
+            if chunk in self.kill_at and (chunk, "kill") not in self.fired:
+                self.fired.add((chunk, "kill"))
+                self._kill(chunk)
+            if chunk in self.oom_at and (chunk, "oom") not in self.fired:
+                self.fired.add((chunk, "oom"))
+                raise SyntheticOOM(chunk)
+            if chunk in self.device_loss_at and (
+                chunk, "devloss"
+            ) not in self.fired:
+                self.fired.add((chunk, "devloss"))
+                raise SyntheticDeviceLoss(chunk)
+        if self.p_kill and self._budget_ok() and (
+            self._u(incarnation, chunk, 0) < self.p_kill
+        ):
+            self.n_fires += 1
+            self._kill(chunk)
+        if self.p_oom and self._budget_ok() and (
+            self._u(incarnation, chunk, 1) < self.p_oom
+        ):
+            self.n_fires += 1
+            raise SyntheticOOM(chunk)
+        if self.p_device_loss and self._budget_ok() and (
+            self._u(incarnation, chunk, 2) < self.p_device_loss
+        ):
+            self.n_fires += 1
+            raise SyntheticDeviceLoss(chunk)

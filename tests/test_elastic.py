@@ -1,0 +1,116 @@
+"""ElasticManager spare accounting / shrink semantics and
+StragglerDetector windowing, patience and strike-reset behaviour."""
+
+import numpy as np
+
+from repro.ft import ElasticManager, StragglerDetector
+
+
+class TestElasticManager:
+    def test_initial_pools(self):
+        em = ElasticManager(n_nodes=4, n_spares=2)
+        assert em.active == {0, 1, 2, 3}
+        assert em.spares == [4, 5]
+        assert em.retired == set()
+        assert em.world_size == 4
+
+    def test_migrate_explicit_node_spare_accounting(self):
+        em = ElasticManager(n_nodes=4, n_spares=2)
+        ev = em.migrate(node=1, reason="prediction")
+        assert ev["kind"] == "migration"
+        assert ev["from"] == 1 and ev["to"] == 4
+        assert not ev["shrunk"]
+        assert 1 in em.retired and 1 not in em.active
+        assert 4 in em.active and em.spares == [5]
+        assert em.world_size == 4  # swap preserves the world size
+
+    def test_spares_consumed_in_order(self):
+        em = ElasticManager(n_nodes=3, n_spares=2)
+        assert em.migrate(node=0)["to"] == 3
+        assert em.migrate(node=1)["to"] == 4
+
+    def test_migrate_default_picks_an_active_node(self):
+        em = ElasticManager(n_nodes=2, n_spares=1)
+        ev = em.migrate()
+        assert ev["from"] in {0, 1}
+        assert ev["from"] in em.retired
+
+    def test_shrink_when_spares_exhausted(self):
+        em = ElasticManager(n_nodes=3, n_spares=1)
+        em.migrate(node=0)  # consumes the only spare
+        ev = em.migrate(node=1)
+        assert ev["kind"] == "shrink" and ev["shrunk"] and ev["to"] is None
+        assert em.world_size == 2  # 3 -> swap keeps 3 -> shrink drops to 2
+
+    def test_lose_node_is_failure_reason(self):
+        em = ElasticManager(n_nodes=4, n_spares=1)
+        ev = em.lose_node(2)
+        assert ev["reason"] == "failure" and ev["from"] == 2
+        assert not ev["shrunk"]
+        assert em.world_size == 4
+
+    def test_events_log_ordered(self):
+        em = ElasticManager(n_nodes=3, n_spares=1, migration_cost=123.0)
+        em.migrate(node=0, reason="prediction")
+        em.lose_node(1)
+        assert [e["kind"] for e in em.events] == ["migration", "shrink"]
+        assert [e["reason"] for e in em.events] == ["prediction", "failure"]
+        assert all(e["cost"] == 123.0 for e in em.events)
+
+
+class TestStragglerDetector:
+    def _feed(self, det, times_by_rank, rounds):
+        for _ in range(rounds):
+            for r, t in times_by_rank.items():
+                det.record(r, t)
+
+    def test_needs_window_of_evidence(self):
+        det = StragglerDetector(n_ranks=2, window=8, patience=1)
+        det.record(0, 1.0)
+        det.record(1, 9.0)
+        assert det.check() == []  # fewer than window//2 samples per rank
+
+    def test_needs_two_ranks_reporting(self):
+        det = StragglerDetector(n_ranks=4, window=4, patience=1)
+        self._feed(det, {0: 5.0}, rounds=4)
+        assert det.check() == []  # no cross-rank median to compare with
+
+    def test_patience_gates_flagging(self):
+        det = StragglerDetector(n_ranks=3, window=4, threshold=1.5,
+                                patience=3)
+        self._feed(det, {0: 1.0, 1: 1.0, 2: 4.0}, rounds=4)
+        assert det.check() == []  # strike 1
+        assert det.check() == []  # strike 2
+        assert det.check() == [2]  # strike 3 == patience
+
+    def test_strikes_reset_when_rank_recovers(self):
+        det = StragglerDetector(n_ranks=2, window=4, threshold=1.5,
+                                patience=2)
+        self._feed(det, {0: 1.0, 1: 4.0}, rounds=4)
+        assert det.check() == []  # strike 1 for rank 1
+        self._feed(det, {0: 1.0, 1: 1.0}, rounds=4)  # rank 1 recovers
+        assert det.check() == []  # strikes reset to zero
+        self._feed(det, {0: 1.0, 1: 4.0}, rounds=4)
+        assert det.check() == []  # strike 1 again, not 2: reset held
+        assert det.check() == [1]  # strike 2 == patience: flagged now
+
+    def test_threshold_is_relative_to_global_median(self):
+        det = StragglerDetector(n_ranks=3, window=4, threshold=2.0,
+                                patience=1)
+        # rank 2 is 1.8x the median: below the 2.0 threshold, never flagged
+        self._feed(det, {0: 1.0, 1: 1.0, 2: 1.8}, rounds=4)
+        assert det.check() == []
+
+    def test_multiple_stragglers(self):
+        det = StragglerDetector(n_ranks=5, window=4, threshold=1.5,
+                                patience=1)
+        self._feed(det, {0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0, 4: 5.0}, rounds=4)
+        assert sorted(det.check()) == [3, 4]
+
+    def test_noisy_uniform_fleet_stays_clean(self):
+        det = StragglerDetector(n_ranks=6, window=8, patience=2)
+        rng = np.random.default_rng(3)
+        for _ in range(50):
+            for r in range(6):
+                det.record(r, 1.0 + rng.normal(0.0, 0.05))
+            assert det.check() == []

@@ -218,6 +218,125 @@ class TestRealTrainingRecovery:
         assert inj_losses[last] == pytest.approx(ref_losses[last], rel=1e-5)
 
 
+class TestRestoreTiers:
+    """Restore failures route through the shared retry/backoff classifier:
+    memory tier -> disk tier -> older step, with the extra time charged to
+    the ledger's recovery bucket."""
+
+    def _executor(self, tiers, mu=200.0):
+        from repro.core.events import EventTrace, FaultEvent
+        from repro.ft import RetryPolicy
+
+        plat = Platform(mu=mu, C=2.0, D=0.5, R=3.0)
+        trace = EventTrace(horizon=1e9, faults=[FaultEvent(40.5)],
+                           predictions=[])
+        return FaultTolerantExecutor(
+            step_fn=lambda s, k: s,
+            state="init",
+            platform=plat,
+            restore_tiers=tiers,
+            restore_retry=RetryPolicy(max_attempts=2, base=0.25,
+                                      jitter=0.0, sleep=lambda s: None),
+            load_state=lambda st, tree, k: tree,
+            injector=FaultInjector(trace),
+            clock=SimClock(),
+            step_time=1.0,
+            strategy="young",
+        )
+
+    def test_memory_tier_down_falls_to_disk(self):
+        calls = []
+
+        def memory_tier(step):
+            calls.append(("mem", step))
+            raise IOError("buddy peer unreachable")
+
+        def disk_tier(step):
+            calls.append(("disk", step))
+            return f"disk@{step}"
+
+        ex = self._executor([memory_tier, disk_tier])
+        rep = ex.run(60)
+        assert rep.n_restores == 1
+        assert ex.state.startswith("disk@")
+        # the memory tier burned its full retry budget before the fallback
+        assert [c[0] for c in calls].count("mem") == 2
+        # each failed attempt cost a restore R plus backoff on the ledger
+        assert rep.ledger.recovery >= 2 * 3.0 + 3.0
+
+    def test_flaky_tier_recovers_via_retry(self):
+        attempts = []
+
+        def flaky(step):
+            attempts.append(step)
+            if len(attempts) == 1:
+                raise IOError("transient read failure")
+            return f"mem@{step}"
+
+        ex = self._executor([flaky])
+        rep = ex.run(60)
+        assert ex.state.startswith("mem@")
+        assert len(attempts) == 2
+        assert rep.ledger.recovery >= 3.0 + 3.0  # failed try + real restore
+
+    def test_fallback_to_older_step_relosts_work(self):
+        """Newest checkpoint unreadable everywhere: the ladder falls back
+        to an older checkpointed step and the work in between is re-lost."""
+        def tier(step):
+            if step == newest[0]:
+                raise IOError("shard torn")
+            return f"ok@{step}"
+
+        newest = [None]
+        ex = self._executor([tier])
+        # run() checkpoints a few times before the fault at t=40.5
+        orig_handle = ex._restore_with_fallback
+
+        def spy(step):
+            newest[0] = step
+            return orig_handle(step)
+
+        ex._restore_with_fallback = spy
+        rep = ex.run(60)
+        assert rep.n_restores == 1
+        restored = int(ex.state.split("@")[1])
+        assert restored < newest[0]
+        assert rep.ledger.lost_work > 0
+
+    def test_all_tiers_dead_raises_last_error(self):
+        def dead(step):
+            raise IOError("gone")
+
+        ex = self._executor([dead])
+        with pytest.raises(IOError, match="gone"):
+            ex.run(60)
+
+    def test_fatal_restore_error_skips_tier_immediately(self):
+        calls = []
+
+        def broken(step):
+            calls.append("broken")
+            raise ValueError("shape mismatch")  # FATAL: no retry
+
+        def good(step):
+            calls.append("good")
+            return f"ok@{step}"
+
+        ex = self._executor([broken, good])
+        ex.run(60)
+        assert calls.count("broken") == 1  # no second attempt on FATAL
+        assert ex.state.startswith("ok@")
+
+    def test_restore_fn_still_works_as_single_tier(self):
+        ex = self._executor(None)
+        ex.restore_tiers = []  # mimic legacy: only restore_fn given
+        ex.restore_fn = lambda step: f"legacy@{step}"
+        ex.restore_tiers = [ex.restore_fn]
+        rep = ex.run(60)
+        assert rep.n_restores == 1
+        assert ex.state.startswith("legacy@")
+
+
 class TestElastic:
     def test_spare_pool_swap(self):
         em = ElasticManager(n_nodes=8, n_spares=2)
