@@ -11,9 +11,10 @@ Figures 4-7 cells: analytic waste vs simulated waste) and ``jax_engine``
   one-dispatch mixed-law grid stops matching its per-family baseline
   bit-for-bit; or
 * the *performance* signal regresses: an engine's lanes/sec — or the
-  fused paper-grid sweep's cells/sec (``fused_cells_per_s``) or the
-  mixed-law one-dispatch sweep's (``mixed_law_cells_per_s``) — falls
-  more than ``--perf-tol`` (default 30%) below the committed
+  fused paper-grid sweep's cells/sec (``fused_cells_per_s``), the
+  mixed-law one-dispatch sweep's (``mixed_law_cells_per_s``) or the
+  two-level + silent scenario sweep's (``two_level_silent_cells_per_s``)
+  — falls more than ``--perf-tol`` (default 30%) below the committed
   ``BENCH_*.json`` baseline; or
 * the *durability* price regresses: the resumable campaign runner's
   snapshot overhead vs the plain fused sweep at the same chunking
@@ -88,12 +89,11 @@ def compare(
                 f"{d.get('plain_s')}s)"
             )
 
-        b = base.get(rec["name"])
-        if b is None:
-            continue
-        bd = b.get("derived") if isinstance(b.get("derived"), dict) else {}
+        # -- self-contained correctness invariants: these hold absolutely
+        # (no committed baseline involved), so they gate brand-new
+        # records too -------------------------------------------------- #
 
-        # correctness: simulated waste within the analytic envelope ...
+        # correctness: simulated waste within the analytic envelope
         if "waste_pred_sim" in d and "waste_pred_capped" in d:
             gap = abs(d["waste_pred_sim"] - d["waste_pred_capped"])
             if gap > waste_tol:
@@ -102,16 +102,6 @@ def compare(
                     f"> {waste_tol} (sim {d['waste_pred_sim']}, "
                     f"analytic {d['waste_pred_capped']})"
                 )
-            # ... and reproducing the seeded baseline value
-            if "waste_pred_sim" in bd:
-                drift = abs(d["waste_pred_sim"] - bd["waste_pred_sim"])
-                if drift > drift_tol:
-                    failures.append(
-                        f"{rec['name']}: simulated waste drifted "
-                        f"{drift:.4f} > {drift_tol} vs baseline "
-                        f"(fresh {d['waste_pred_sim']}, "
-                        f"baseline {bd['waste_pred_sim']})"
-                    )
 
         # correctness: device engine still agrees with the NumPy engine
         if "max_abs_waste_diff" in d and d["max_abs_waste_diff"] > agree_tol:
@@ -157,6 +147,24 @@ def compare(
                 "(must dominate to float rounding)"
             )
 
+        # -- baseline-relative checks: only for names present in the
+        # committed records ------------------------------------------- #
+        b = base.get(rec["name"])
+        if b is None:
+            continue
+        bd = b.get("derived") if isinstance(b.get("derived"), dict) else {}
+
+        # correctness: reproducing the seeded baseline waste value
+        if "waste_pred_sim" in d and "waste_pred_sim" in bd:
+            drift = abs(d["waste_pred_sim"] - bd["waste_pred_sim"])
+            if drift > drift_tol:
+                failures.append(
+                    f"{rec['name']}: simulated waste drifted "
+                    f"{drift:.4f} > {drift_tol} vs baseline "
+                    f"(fresh {d['waste_pred_sim']}, "
+                    f"baseline {bd['waste_pred_sim']})"
+                )
+
         # performance: lanes/sec (and the fused sweep's cells/sec)
         # within perf_tol of the baseline (the jax_dev floor gates the
         # device-generation trace mode, fused_cells_per_s the fused
@@ -167,6 +175,7 @@ def compare(
                 "jax_lanes_per_s", "numpy_lanes_per_s",
                 "jax_dev_lanes_per_s", "fused_cells_per_s",
                 "mixed_law_cells_per_s", "analytic_opt_cells_per_s",
+                "two_level_silent_cells_per_s",
             ):
                 if key in d and key in bd and bd[key] > 0:
                     floor = (1.0 - perf_tol) * bd[key]

@@ -65,6 +65,17 @@ continuous optimum must dominate the 10-point scan on every cell, to
 float rounding) and ``newton_vs_extremizer_max_rel`` (smooth-family
 periods must land on the closed-form extremizer).
 
+``jax_engine/two_level_silent_cells{n}`` is the scenario-family
+acceptance record: the two-level (memory + disk tiers, rho-stride
+nesting, Bernoulli(f) tier recovery) and silent-error (verified
+checkpoints every k_V-th period, detection-latency rollback) grids
+through the fused device engine with ``collect="stats"``.  It carries
+``two_level_silent_cells_per_s`` (the regression-gate perf floor),
+``fused_vs_percell_max_diff`` (0.0 — identical counter streams, tier
+coins and strike cursors included) and ``newton_excess_waste_max`` (the
+analytic-dominance gate over the corrected two-level/silent waste
+models).
+
 Acceptance trajectory: jax lanes/s >= numpy lanes/s at 10k lanes on CPU,
 device trace mode >= 2x the host-trace path end-to-end at 40960 lanes,
 and sharded lanes/s non-decreasing with device count (expected >> on an
@@ -253,6 +264,7 @@ def run(quick: bool = True, devices=None) -> None:
     _run_campaign_grid(reps=reps)
     _run_mixed_law_grid(reps=reps)
     _run_analytic_opt(reps=reps)
+    _run_two_level_silent(reps=reps)
     _run_devices_curve(reps=reps)
 
 
@@ -510,6 +522,83 @@ def _run_analytic_opt(reps: int = 3) -> None:
             "speedup_vs_host_scan": round(scan_s / newton_s, 2),
             "newton_excess_waste_max": excess,
             "newton_vs_extremizer_max_rel": agree,
+        },
+    )
+
+
+def _run_two_level_silent(reps: int = 3) -> None:
+    """Scenario-grid acceptance record: the two-level + silent phase
+    families through the SAME one-dispatch fused device engine with
+    device-reduced statistics.
+
+    Carries ``two_level_silent_cells_per_s`` (the regression-gate perf
+    floor for the scenario families), ``fused_vs_percell_max_diff``
+    (must be 0.0 — fused and per-cell dispatch consume identical counter
+    streams, including the per-fault tier coins and silent strike
+    cursors), and ``newton_excess_waste_max`` (the analytic-dominance
+    gate: the batched-Newton optimum of the corrected two-level / silent
+    waste models must dominate a host scan of the same objective on
+    every cell — the gate that would have caught the old
+    (1-rq)-scaled-disk-term extremizers, which a scan undercuts)."""
+    from dataclasses import replace
+
+    from repro.core import analytic as A
+    from repro.core.simulator import PERIOD_GRID
+    from repro.experiments import GridSpec, run_grid
+    from repro.experiments.paper_grid import (
+        silent_grid_cells,
+        two_level_grid_cells,
+    )
+    from repro.experiments.validation import analytic_waste
+
+    cells = tuple(two_level_grid_cells("bench")) + tuple(
+        silent_grid_cells("bench")
+    )
+    n_cells = len(cells)
+    grid = GridSpec(cells, n_runs=FUSED_GRID_RUNS, seed=9)
+    sweep_f = run_grid(grid, _CFG_STATS)  # jit warmup
+    sweep_p = run_grid(grid, _CFG_PERCELL)
+
+    stats_s = float("inf")
+    stats_split = {}
+    for _ in range(reps):
+        t = _timed(lambda: run_grid(grid, _CFG_STATS))
+        if t < stats_s:
+            stats_s, stats_split = t, _split()
+
+    diff = max(
+        abs(a.mean_waste - b.mean_waste)
+        for a, b in zip(sweep_f.cells, sweep_p.cells)
+    )
+
+    # analytic dominance: one batched-Newton dispatch over the scenario
+    # cell tables vs a host scan of the same corrected waste objective
+    tabs = A.tables_from_cells(cells)
+    res = A.newton_optimize_tables(tabs)
+    scan_w = np.empty(n_cells)
+    for i, c in enumerate(cells):
+        periods = [
+            max(c.platform.C * 1.01, c.strategy.T_R * m) for m in PERIOD_GRID
+        ]
+        scan_w[i] = min(
+            analytic_waste(replace(c, strategy=replace(c.strategy, T_R=t)))
+            for t in periods
+        )
+    scan_w = np.minimum(scan_w, 1.0)
+    excess = float((res["waste"] - scan_w).max())
+
+    emit(
+        f"jax_engine/two_level_silent_cells{n_cells}",
+        stats_s * 1e6 / n_cells,
+        {
+            "n_cells": n_cells,
+            "lanes_per_cell": FUSED_GRID_RUNS,
+            "n_lanes": grid.n_lanes,
+            "fused_stats_s": round(stats_s, 3),
+            "two_level_silent_cells_per_s": round(n_cells / stats_s, 1),
+            "fused_vs_percell_max_diff": diff,
+            "newton_excess_waste_max": excess,
+            **stats_split,
         },
     )
 

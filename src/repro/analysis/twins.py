@@ -129,6 +129,8 @@ TWIN_REGISTRY: Tuple[TwinPair, ...] = (
              "repro.kernels.analytic", "withckpt_waste"),
     TwinPair("repro.core.analytic", "two_level_waste",
              "repro.kernels.analytic", "two_level_waste"),
+    TwinPair("repro.core.analytic", "silent_waste",
+             "repro.kernels.analytic", "silent_waste"),
     TwinPair("repro.core.analytic", "cell_waste",
              "repro.kernels.analytic", "cell_waste"),
 )

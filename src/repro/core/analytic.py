@@ -57,6 +57,7 @@ __all__ = [
     "nockpt_waste",
     "withckpt_waste",
     "two_level_waste",
+    "silent_waste",
     "cell_waste",
     "table_waste",
     "cell_tables",
@@ -72,6 +73,7 @@ __all__ = [
 #: integer strategy-mode codes of the engine tables (values of
 #: ``repro.core.batch_sim.MODE_CODES``, fixed by the packing format)
 _M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION = 0, 1, 2, 3, 4
+_M_TWO_LEVEL, _M_SILENT = 5, 6
 
 #: table columns the analytic layer consumes (subset of
 #: ``jax_sim._CELL_TABLE_KEYS``), in the positional order of
@@ -79,6 +81,7 @@ _M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION = 0, 1, 2, 3, 4
 TABLE_COLS = (
     "mode", "q_eff", "C", "DR", "lead_act", "mtbf", "recall",
     "window", "T_P", "tp_eff_default",
+    "C2", "DR2", "V", "fmem", "rho", "kv",
 )
 
 
@@ -167,19 +170,38 @@ def withckpt_waste(T, T_P, q, C, DR, mu, r, p, I, E_f):
 
 
 # repro-twin: repro.kernels.analytic.two_level_waste
-def two_level_waste(T_m, T_d, C_m, C_d, DR_m, DR_d, mu, f, r, q, p):
-    """Beyond-paper two-level model (see ``waste.waste_two_level``),
-    branchless over per-cell columns (``DR_m = D + R_m`` etc.)."""
+def two_level_waste(T_m, T_d, C_m, C_d, D, R_m, R_d, mu, f, r, q, p):
+    """Beyond-paper two-level model, branchless over per-cell columns.
+
+    Canonical signature: ``D``/``R_m``/``R_d`` kept separate, exactly as
+    in :func:`repro.core.waste.waste_two_level` (callers holding folded
+    ``DR`` columns pass ``D=0``: the terms only ever appear summed).
+    Prediction shields only the memory-tier work loss — a disk-tier
+    failure destroys the proactive memory checkpoint along with the
+    tier."""
     w = C_m / T_m + C_d / T_d
-    frac = (1.0 - r * q) / mu
-    w = w + frac * (f * (T_m / 2.0 + DR_m) + (1.0 - f) * (T_d / 2.0 + DR_d))
+    w = w + (
+        f * ((1.0 - r * q) * T_m / 2.0 + D + R_m)
+        + (1.0 - f) * (T_d / 2.0 + D + R_d)
+    ) / mu
     p_safe = np.where(r > 0.0, p, 1.0)
     pred = np.where((r > 0.0) & (q > 0.0), (q * r / p_safe) * C_m / mu, 0.0)
     return w + pred
 
 
+# repro-twin: repro.kernels.analytic.silent_waste
+def silent_waste(T, C, V, DR, mu, k):
+    """Silent-error waste (arXiv:1310.8486, see ``waste.waste_silent``)
+    branchless over per-cell columns: ``k`` periods per verification, a
+    latent corruption forfeits the whole pattern plus recovery ``DR``."""
+    return (k * C + V) / (k * T) + (k * T + V + DR) / mu
+
+
 # repro-twin: repro.kernels.analytic.cell_waste
-def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
+def cell_waste(
+    T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff,
+    C2, DR2, V, fmem, rho, kv,
+):
     """Mode-dispatched waste over the fused engine's per-cell columns.
 
     Mirrors ``experiments.validation.analytic_waste``'s dispatch as one
@@ -209,18 +231,29 @@ def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
         withckpt_waste(T, tp, q, C, DR, mu, r, p, window, E_f),
         w,
     )
-    return np.where((mode == _M_NONE) | (q <= 0.0) | (r <= 0.0), w_y, w)
+    w = np.where((mode == _M_NONE) | (q <= 0.0) | (r <= 0.0), w_y, w)
+    w = np.where(
+        mode == _M_TWO_LEVEL,
+        two_level_waste(T, rho * T, C, C2, 0.0, DR, DR2, mu, fmem, r, q, p),
+        w,
+    )
+    return np.where(mode == _M_SILENT, silent_waste(T, C, V, DR, mu, kv), w)
 
 
 def table_waste(T, tables: Dict[str, np.ndarray]) -> np.ndarray:
     """:func:`cell_waste` applied to a ``_cell_tables`` column dict, with
-    precision recovered from the ``fp_mean`` column."""
+    precision recovered from the ``fp_mean`` column.  Tables predating
+    the two-level/silent columns get their benign fills (0/0/0/0/1/1)."""
+    C = np.asarray(tables["C"], np.float64)
+    z, one = np.zeros_like(C), np.ones_like(C)
     with np.errstate(divide="ignore", invalid="ignore"):
         p = precision_from_fp(tables["mtbf"], tables["fp_mean"], tables["recall"])
         return cell_waste(
             T, tables["mode"], tables["q_eff"], tables["C"], tables["DR"],
             tables["lead_act"], tables["mtbf"], tables["recall"], p,
             tables["window"], tables["T_P"], tables["tp_eff_default"],
+            tables.get("C2", z), tables.get("DR2", z), tables.get("V", z),
+            tables.get("fmem", z), tables.get("rho", one), tables.get("kv", one),
         )
 
 
@@ -248,15 +281,19 @@ def cell_tables(
     from . import jax_sim as J  # NumPy-only at import; kept lazy like core.__init__
 
     n = len(strategies)
-    Wk, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
-        work, list(platforms), list(strategies), n
+    Wk, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv = (
+        B._lane_params(work, list(platforms), list(strategies), n)
     )
     mtbf = np.asarray([p.mu for p in platforms], dtype=np.float64)
     recall = np.asarray([p.recall for p in predictors], dtype=np.float64)
     precision = np.asarray([p.precision for p in predictors], dtype=np.float64)
     window = np.asarray([p.window for p in predictors], dtype=np.float64)
     fp_mean = E.false_prediction_mtbf_batch(mtbf, recall, precision)
-    q_eff = np.where(mode == B._M_NONE, 0.0, np.clip(q, 0.0, 1.0))
+    # silent-error cells never trust the fail-stop predictor
+    q_eff = np.where(
+        (mode == B._M_NONE) | (mode == B._M_SILENT),
+        0.0, np.clip(q, 0.0, 1.0),
+    )
     fault_laws = E.law_table(fault_dists) if fault_dists is not None else None
     fp_laws = E.law_table(fp_dists) if fp_dists is not None else None
     return J._cell_tables(
@@ -265,6 +302,7 @@ def cell_tables(
         np.broadcast_to(np.asarray(horizon, np.float64), (n,)), window, -1.0,
         mtbf=mtbf, fp_mean=fp_mean, recall=recall, q_eff=q_eff,
         fault_laws=fault_laws, fp_laws=fp_laws,
+        C2=C2, R2=R2, V=V, fmem=fmem, rho=rho, kv=kv,
     )
 
 
@@ -358,6 +396,11 @@ def _newton_bounds(
     te0 = np.sqrt(2.0 * mu * C)
     te1 = np.sqrt(2.0 * mu * C / np.maximum(1.0 - r * q, 0.015625))
     hi = 64.0 * np.maximum(te0, te1) + I + C
+    if "fmem" in tables:  # two-level cells: T_m* grows like 1/sqrt(f)
+        fm = np.maximum(np.asarray(tables["fmem"], np.float64), 0.015625)
+        hi = np.where(
+            np.asarray(tables["mode"]) == _M_TWO_LEVEL, hi / np.sqrt(fm), hi
+        )
     return lo, hi, hi
 
 
@@ -385,12 +428,21 @@ def newton_optimize_tables(
 
     from ..kernels import analytic as K
 
+    defaults = {"C2": 0.0, "DR2": 0.0, "V": 0.0, "fmem": 0.0,
+                "rho": 1.0, "kv": 1.0}
+    if any(k not in tables for k in defaults):
+        tables = dict(tables)
+        base = np.asarray(tables["C"], np.float64)
+        for k, v in defaults.items():
+            tables.setdefault(k, np.full_like(base, v))
+
     n = int(np.asarray(tables["C"]).shape[0])
     n_tab = max(8, 1 << max(int(n) - 1, 0).bit_length())
     if n and n_tab != n:
         padded = dict(tables)
         fills = {"T_P": np.nan, "fp_mean": np.inf, "C": 1.0, "mtbf": 1.0,
-                 "T_R": 2.0, "lead_act": 1.0, "tp_eff_default": 1.0}
+                 "T_R": 2.0, "lead_act": 1.0, "tp_eff_default": 1.0,
+                 "rho": 1.0, "kv": 1.0}
         for k in TABLE_COLS + ("T_R", "fp_mean"):
             col = np.asarray(tables[k])
             pad = np.full(n_tab - n, fills.get(k, 0.0), col.dtype)
@@ -423,7 +475,8 @@ def newton_optimize_tables(
         args = [
             t["mode"], t["q_eff"], t["C"], t["DR"], t["lead_act"],
             t["mtbf"], t["recall"], p, t["window"], t["T_P"],
-            t["tp_eff_default"], lo, hi0, hi1,
+            t["tp_eff_default"], t["C2"], t["DR2"], t["V"], t["fmem"],
+            t["rho"], t["kv"], lo, hi0, hi1,
         ]
         if dev is not None:
             args = [jax.device_put(a, dev) for a in args]
@@ -478,12 +531,14 @@ _ANALYTIC_DISPATCH = {
     "instant": P._optimize_instant,
     "nockpt": P._optimize_nockpt,
     "withckpt": P._optimize_withckpt,
+    "two_level": P._optimize_two_level,
+    "silent": P._optimize_silent,
     "best": P._best_policy,
 }
 
 _STRATEGY_NAMES = (
     "young", "daly", "exact", "instant", "nockpt", "withckpt",
-    "migration", "best",
+    "migration", "two_level", "silent", "best",
 )
 
 
@@ -520,6 +575,8 @@ def _strategy_stub(name: str, platform, pred):
         "nockpt": lambda: S.nockpt(platform, pred),
         "withckpt": lambda: S.withckpt(platform, pred),
         "migration": lambda: S.migration(platform, pred),
+        "two_level": lambda: S.two_level(platform, pred),
+        "silent": lambda: S.silent(platform),
     }[name]
     return factory()
 

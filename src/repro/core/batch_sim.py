@@ -57,8 +57,14 @@ from .waste import Platform
 __all__ = ["MODE_CODES", "BatchResult", "pad_lane_axis", "simulate_batch"]
 
 #: strategy-mode codes shared with :class:`repro.core.simulator.Strategy`
-MODE_CODES = {"none": 0, "exact": 1, "nockpt": 2, "withckpt": 3, "migration": 4}
-_M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION = range(5)
+MODE_CODES = {
+    "none": 0, "exact": 1, "nockpt": 2, "withckpt": 3, "migration": 4,
+    "two_level": 5, "silent": 6,
+}
+(
+    _M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION,
+    _M_TWO_LEVEL, _M_SILENT,
+) = range(7)
 
 # lane phases (continuation points of the scalar engine's control flow)
 _PH_MAIN = 0  # top of Algorithm 1's regular-mode loop
@@ -97,9 +103,13 @@ _CONT2PH = np.array(
 )
 
 #: strategy mode -> phase after the episode head (Instant returns to regular
-#: mode, NoCkptI idles through the window, WithCkptI enters the T_P loop)
+#: mode, NoCkptI idles through the window, WithCkptI enters the T_P loop;
+#: two-level episodes behave like exact — the proactive checkpoint hits the
+#: memory tier — and silent lanes never trust predictions, so both are MAIN)
 _MODE2PH = np.array(
-    [_PH_MAIN, _PH_MAIN, _PH_EP_NOCKPT, _PH_EP_WC, _PH_MAIN], dtype=np.int8
+    [_PH_MAIN, _PH_MAIN, _PH_EP_NOCKPT, _PH_EP_WC, _PH_MAIN,
+     _PH_MAIN, _PH_MAIN],
+    dtype=np.int8,
 )
 
 
@@ -114,6 +124,11 @@ class BatchResult:
     n_regular_ckpts: np.ndarray
     n_migrations: np.ndarray
     trace_exhausted: np.ndarray
+    #: two-level disk-tier recoveries / silent-error detections per lane
+    #: (zeros unless the lane runs the corresponding mode; ``None`` only on
+    #: legacy hand-built results predating the two phase families)
+    n_disk_recoveries: Optional[np.ndarray] = None
+    n_detections: Optional[np.ndarray] = None
 
     @property
     def n_lanes(self) -> int:
@@ -125,6 +140,8 @@ class BatchResult:
 
     def lane(self, i: int) -> SimResult:
         """Scalar :class:`SimResult` view of lane ``i``."""
+        nd = self.n_disk_recoveries
+        nv = self.n_detections
         return SimResult(
             makespan=float(self.makespan[i]),
             work=float(self.work[i]),
@@ -133,6 +150,8 @@ class BatchResult:
             n_regular_ckpts=int(self.n_regular_ckpts[i]),
             n_migrations=int(self.n_migrations[i]),
             trace_exhausted=bool(self.trace_exhausted[i]),
+            n_disk_recoveries=int(nd[i]) if nd is not None else 0,
+            n_detections=int(nv[i]) if nv is not None else 0,
         )
 
     def to_results(self) -> List[SimResult]:
@@ -159,7 +178,30 @@ def _lane_params(work, platform, strategy, L: int):
     )
     mode = np.array([MODE_CODES[s.mode] for s in strats], dtype=np.int8)
     q = np.array([s.q for s in strats], dtype=np.float64)
-    return W, C, D, R, M, T_R, T_P, mode, q
+    # two-level / silent-error columns (benign on every other mode's lanes:
+    # a missing disk tier mirrors the memory one, f=0 sends every failure to
+    # disk, rho/k_V=1 make the nesting/verification strides degenerate)
+    C2 = np.array(
+        [p.C2 if p.C2 is not None else p.C for p in plats], dtype=np.float64
+    )
+    R2 = np.array(
+        [p.R2 if p.R2 is not None else p.R for p in plats], dtype=np.float64
+    )
+    V = np.array(
+        [p.V if p.V is not None else p.C for p in plats], dtype=np.float64
+    )
+    fmem = np.array(
+        [p.f if p.f is not None else 0.0 for p in plats], dtype=np.float64
+    )
+    rho = np.array(
+        [s.rho if getattr(s, "rho", None) is not None else 1 for s in strats],
+        dtype=np.int64,
+    )
+    kv = np.array(
+        [s.k_V if getattr(s, "k_V", None) is not None else 1 for s in strats],
+        dtype=np.int64,
+    )
+    return W, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv
 
 
 def pad_lane_axis(a: np.ndarray, n: int, fill) -> np.ndarray:
@@ -186,7 +228,9 @@ def _filter_trusted(
     t0 = traces.pred_t0
     ft = traces.pred_fault
     n = traces.n_preds.astype(np.int64)
-    q_eff = np.where(mode == _M_NONE, 0.0, q)
+    # silent-error lanes never trust predictions: a latent corruption is not
+    # a fail-stop event, so the fail-stop predictor has nothing to predict
+    q_eff = np.where((mode == _M_NONE) | (mode == _M_SILENT), 0.0, q)
     frac_any = bool(((q_eff > 0.0) & (q_eff < 1.0)).any())
     if not frac_any and not ((q_eff <= 0.0) & (n > 0)).any():
         return t0, ft, n  # nothing dropped: arrays already engine-ready
@@ -209,7 +253,10 @@ def _filter_trusted(
 
 
 class _BatchEngine:
-    def __init__(self, W, C, D, R, M, T_R, T_P, mode, traces, p_t0, p_ft):
+    def __init__(
+        self, W, C, D, R, M, T_R, T_P, mode, traces, p_t0, p_ft,
+        C2=None, R2=None, V=None, fmem=None, rho=None, kv=None,
+    ):
         L = W.shape[0]
         self.L = L
         self.W, self.C, self.D, self.R, self.M = W, C, D, R, M
@@ -217,6 +264,12 @@ class _BatchEngine:
         self.T_R, self.T_P, self.mode = T_R, T_P, mode
         self.horizon = np.asarray(traces.horizon, dtype=np.float64)
         self.window = np.asarray(traces.window, dtype=np.float64)
+        self.C2 = C2 if C2 is not None else C
+        self.R2 = R2 if R2 is not None else R
+        self.V = V if V is not None else C
+        self.fmem = fmem if fmem is not None else np.zeros(L)
+        self.rho = rho if rho is not None else np.ones(L, dtype=np.int64)
+        self.kv = kv if kv is not None else np.ones(L, dtype=np.int64)
 
         # the cursors need an +inf sentinel column; generated batches carry
         # one already, so the arrays are adopted without copying (the engine
@@ -226,6 +279,16 @@ class _BatchEngine:
         self.Fcancel = np.zeros(F.shape, dtype=bool)
         self.P0 = pad_sentinel(p_t0, traces.n_preds, np.inf)
         self.Pft = pad_sentinel(p_ft, traces.n_preds, np.nan)
+        # per-fault recovery-tier uniforms, aligned with F's columns (only
+        # consulted on two-level lanes; the 1.0 pad means "disk")
+        FT = getattr(traces, "fault_tier", None)
+        if FT is None:
+            FT = np.ones((L, 1))
+        elif FT.shape[1] < F.shape[1]:
+            FT = np.concatenate(
+                [FT, np.ones((L, F.shape[1] - FT.shape[1]))], axis=1
+            )
+        self.Ftier = FT
 
         z = lambda dt: np.zeros(L, dtype=dt)
         self.t = z(np.float64)
@@ -245,6 +308,19 @@ class _BatchEngine:
         self.phase = z(np.int8)
         self.done = z(bool)
         self.exhausted = z(bool)
+        # two-level lane state: work at the last disk checkpoint, memory
+        # checkpoints since it, and the duration of the repair in progress
+        # (faults during a repair restart the SAME repair: rc, not D+R)
+        self.saved_d = z(np.float64)
+        self.dk_ctr = z(np.int64)
+        self.rc = (D + R).copy()
+        # silent-error lane state: work at the last *verified* checkpoint,
+        # unverified checkpoints since it, earliest latent corruption time
+        self.saved_v = z(np.float64)
+        self.ck_v = z(np.int64)
+        self.corrupt = np.full(L, np.inf)
+        self.n_disk = z(np.int64)
+        self.n_det = z(np.int64)
 
         # finished lanes are harvested into these and repacked away, so the
         # iteration cost tracks the number of *live* lanes, not the batch size
@@ -255,24 +331,34 @@ class _BatchEngine:
         self.out_n_reg = z(np.int64)
         self.out_n_mig = z(np.int64)
         self.out_exhausted = z(bool)
+        self.out_n_disk = z(np.int64)
+        self.out_n_det = z(np.int64)
 
     #: per-lane state sliced on repack (2-D trace arrays included)
     _LANE_ATTRS = (
         "W", "C", "D", "R", "M", "T_R", "T_P", "mode", "horizon", "window",
+        "C2", "R2", "V", "fmem", "rho", "kv",
         "t", "saved", "unsaved", "period_work", "na_saved",
         "ep_t0", "ep_end", "ep_ft", "fi", "pi",
         "n_faults", "n_pro", "n_reg", "n_mig",
+        "saved_d", "dk_ctr", "rc", "saved_v", "ck_v", "corrupt",
+        "n_disk", "n_det",
         "phase", "done", "exhausted", "lane_id",
-        "F", "Fcancel", "P0", "Pft",
+        "F", "Fcancel", "P0", "Pft", "Ftier",
     )
 
     def _derived(self) -> None:
         """Per-lane constants, recomputed whenever lanes are repacked."""
         self.lanes = np.arange(self.t.shape[0])
         self.DR = self.D + self.R
+        self.DR2 = self.D + self.R2
         self.wpp = np.maximum(self.T_R - self.C, 1e-9)
         self.lead_act = np.where(self.mode == _M_MIGRATION, self.M, self.C)
         self.tp_eff_default = np.maximum(self.C, self.window)
+        self.tl_m = self.mode == _M_TWO_LEVEL
+        self.sil_m = self.mode == _M_SILENT
+        self.has_tl = bool(self.tl_m.any())
+        self.has_sil = bool(self.sil_m.any())
 
     def _harvest(self, rows: np.ndarray) -> None:
         ids = self.lane_id[rows]
@@ -282,6 +368,8 @@ class _BatchEngine:
         self.out_n_reg[ids] = self.n_reg[rows]
         self.out_n_mig[ids] = self.n_mig[rows]
         self.out_exhausted[ids] = self.exhausted[rows]
+        self.out_n_disk[ids] = self.n_disk[rows]
+        self.out_n_det[ids] = self.n_det[rows]
 
     def _repack(self, keep: np.ndarray) -> None:
         for name in self._LANE_ATTRS:
@@ -445,10 +533,23 @@ class _BatchEngine:
                 remw = self.W - self.saved - self.unsaved
                 target[workm] = np.minimum(target[workm], (self.t + remw)[workm])
             ckend = np.where(ckm, self.t + self.C, 0.0)
+            # intent masks fixed with the end date: the rho-th regular ckpt
+            # of a two-level lane is the disk tier (cost C + C2); the k_V-th
+            # regular ckpt of a silent-error lane verifies (cost C + V).
+            # Proactive ckpts hit the memory tier and never verify.
+            reg_int = ckm & (cont == _C_CKPTREG)
+            disk_int = reg_int & self.tl_m & (self.dk_ctr >= self.rho - 1)
+            ver_int = reg_int & self.sil_m & (self.ck_v >= self.kv - 1)
+            ckend[disk_int] += self.C2[disk_int]
+            ckend[ver_int] += self.V[ver_int]
 
-            # resolve stale faults (fault during downtime: recovery restarts)
+            # resolve stale faults (fault during downtime: recovery restarts;
+            # rc is the duration of the repair in progress — D+R everywhere
+            # except after a two-level disk recovery — and silent-error
+            # strikes are not fail-stop events, so those lanes skip the
+            # cascade entirely)
             res = workm | idlem | ckm
-            idx = np.flatnonzero(res)
+            idx = np.flatnonzero(res & ~self.sil_m)
             while idx.size:
                 curf = self.F[idx, self.fi[idx]]
                 curc = self.Fcancel[idx, self.fi[idx]]
@@ -457,22 +558,39 @@ class _BatchEngine:
                     break
                 idx = idx[step]
                 f = curf[step]
-                hit = ~curc[step] & (f >= self.t[idx] - DR[idx])
+                hit = ~curc[step] & (f >= self.t[idx] - self.rc[idx])
                 sub = idx[hit]
                 self.n_faults[sub] += 1
-                self.t[sub] = f[hit] + DR[sub]
+                self.t[sub] = f[hit] + self.rc[sub]
                 self.fi[idx] += 1
             nf = self.F[lanes, self.fi]
+            # silent strikes never interrupt a primitive (latent until the
+            # next verification): mask them out of the fail-stop check
+            nf_k = np.where(self.sil_m, np.inf, nf) if self.has_sil else nf
 
-            faulted = ((workm | idlem) & (nf <= target)) | (ckm & (nf < ckend))
+            faulted = ((workm | idlem) & (nf_k <= target)) | (ckm & (nf_k < ckend))
             ok = res & ~faulted
             if faulted.any():
+                if self.has_tl:
+                    # tier coin consumed with the fault (column read before
+                    # the cursor advances): u >= f sends recovery to disk
+                    u = self.Ftier[lanes, self.fi]
+                    disk = faulted & self.tl_m & (u >= self.fmem)
+                    mem = faulted & self.tl_m & ~disk
                 self.fi[faulted] += 1
                 self.n_faults[faulted] += 1
                 self.unsaved[faulted] = 0.0
                 self.period_work[faulted] = 0.0
                 self.t[faulted] = nf[faulted] + DR[faulted]
                 self.phase[faulted] = _PH_MAIN
+                if self.has_tl:
+                    self.rc[mem] = DR[mem]
+                    # disk-tier recovery: restart from the last disk ckpt
+                    self.t[disk] = nf[disk] + self.DR2[disk]
+                    self.saved[disk] = self.saved_d[disk]
+                    self.dk_ctr[disk] = 0
+                    self.rc[disk] = self.DR2[disk]
+                    self.n_disk[disk] += 1
 
             wok = workm & ok
             if wok.any():
@@ -496,6 +614,51 @@ class _BatchEngine:
                 self.n_pro[cok & ~reg] += 1
                 self.n_reg[reg] += 1
                 self.period_work[reg] = 0.0
+
+            if self.has_tl and cok.any():
+                # completed disk-tier ckpt: promote the durable frontier;
+                # completed memory-tier regular ckpt: advance the nesting
+                # counter (proactive ckpts hit the memory tier but do not)
+                dk = cok & disk_int
+                self.saved_d[dk] = self.saved[dk]
+                self.dk_ctr[dk] = 0
+                self.dk_ctr[
+                    cok & self.tl_m & (cont == _C_CKPTREG) & ~disk_int
+                ] += 1
+
+            if self.has_sil:
+                # consume latent strikes up to the new clock: they corrupt
+                # state silently instead of interrupting the primitive
+                sidx = np.flatnonzero(res & self.sil_m)
+                while sidx.size:
+                    curf = self.F[sidx, self.fi[sidx]]
+                    hit = curf <= self.t[sidx]
+                    if not hit.any():
+                        break
+                    sidx = sidx[hit]
+                    self.corrupt[sidx] = np.minimum(
+                        self.corrupt[sidx], curf[hit]
+                    )
+                    self.fi[sidx] += 1
+                if cok.any():
+                    vok = cok & ver_int
+                    det = vok & np.isfinite(self.corrupt)
+                    if det.any():
+                        # verification caught a latent corruption: roll back
+                        # past every unverified ckpt to the verified frontier
+                        self.t[det] += DR[det]
+                        self.saved[det] = self.saved_v[det]
+                        self.period_work[det] = 0.0
+                        self.ck_v[det] = 0
+                        self.corrupt[det] = np.inf
+                        self.n_faults[det] += 1
+                        self.n_det[det] += 1
+                    clean = vok & ~det
+                    self.saved_v[clean] = self.saved[clean]
+                    self.ck_v[clean] = 0
+                    self.ck_v[
+                        cok & self.sil_m & (cont == _C_CKPTREG) & ~ver_int
+                    ] += 1
 
             # ---- continuations on success ------------------------------ #
             cidx = np.flatnonzero(ok & ~self.done)
@@ -538,6 +701,8 @@ class _BatchEngine:
             n_regular_ckpts=self.out_n_reg,
             n_migrations=self.out_n_mig,
             trace_exhausted=self.out_exhausted,
+            n_disk_recoveries=self.out_n_disk,
+            n_detections=self.out_n_det,
         )
 
     def _fast_forward(
@@ -582,6 +747,15 @@ class _BatchEngine:
         # (scalar done-check: saved + unsaved >= W - eps)
         k_done = np.where(sv + k_done * w >= w_job - _EPS, k_done - 1.0, k_done)
         k = np.minimum(np.minimum(k_fault, k_act), np.minimum(k_done, 4e15))
+        if self.has_tl or self.has_sil:
+            # never fuse across a disk-tier or verification checkpoint (they
+            # cost more than C): cap the run at the current stride remainder
+            cap = np.full(idx.shape[0], 4e15)
+            tl = self.tl_m[idx]
+            sl = self.sil_m[idx]
+            cap[tl] = (self.rho[idx] - 1 - self.dk_ctr[idx])[tl]
+            cap[sl] = (self.kv[idx] - 1 - self.ck_v[idx])[sl]
+            k = np.minimum(k, np.maximum(cap, 0.0))
         ff = k >= 2.0
         if not ff.any():
             return
@@ -589,7 +763,14 @@ class _BatchEngine:
         k = k[ff]
         self.t[idx] += k * self.T_R[idx]
         self.saved[idx] += k * wpp[idx]
-        self.n_reg[idx] += k.astype(np.int64)
+        kk = k.astype(np.int64)
+        self.n_reg[idx] += kk
+        if self.has_tl:
+            tl = self.tl_m[idx]
+            self.dk_ctr[idx[tl]] += kk[tl]
+        if self.has_sil:
+            sl = self.sil_m[idx]
+            self.ck_v[idx[sl]] += kk[sl]
 
     def _pop_pred(self, idx: np.ndarray) -> None:
         pi = self.pi[idx]
@@ -622,7 +803,22 @@ def simulate_batch(
     if isinstance(traces, TraceSpec):
         traces = traces.materialize()
     L = traces.n_lanes
-    W, C, D, R, M, T_R, T_P, mode, q = _lane_params(work, platform, strategy, L)
+    (
+        W, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv
+    ) = _lane_params(work, platform, strategy, L)
     p_t0, p_ft, _ = _filter_trusted(traces, q, mode, rng)
-    eng = _BatchEngine(W, C, D, R, M, T_R, T_P, mode, traces, p_t0, p_ft)
+    tl = mode == _M_TWO_LEVEL
+    if (
+        tl.any()
+        and float(fmem[tl].max()) > 0.0
+        and getattr(traces, "fault_tier", None) is None
+    ):
+        raise ValueError(
+            "two-level lanes with f > 0 need per-fault tier draws: generate "
+            "traces with make_event_traces_batch(..., tier=True)"
+        )
+    eng = _BatchEngine(
+        W, C, D, R, M, T_R, T_P, mode, traces, p_t0, p_ft,
+        C2=C2, R2=R2, V=V, fmem=fmem, rho=rho, kv=kv,
+    )
     return eng.run(max_iters=max_iters)

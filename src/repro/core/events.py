@@ -201,11 +201,15 @@ class FaultEvent:
     """A fault striking the platform at absolute ``time``.
 
     ``predicted`` marks true positives (the matching PredictionEvent carries
-    the same ``fault_time``).
+    the same ``fault_time``).  ``tier_u`` is the recovery-tier uniform of
+    two-level checkpointing strategies (``tier_u >= f`` sends the recovery
+    to the disk tier; the 1.0 default means "disk", so legacy traces stay
+    valid for every strategy with ``f = 0``).
     """
 
     time: float
     predicted: bool = field(default=False, compare=False)
+    tier_u: float = field(default=1.0, compare=False)
 
 
 @dataclass(order=True)
@@ -450,6 +454,9 @@ class BatchTraces:
     n_preds: np.ndarray  # (L,) valid prediction count per lane
     window: np.ndarray  # (L,) prediction-window length
     lead: np.ndarray  # (L,) announce lead
+    #: (L, F) per-fault recovery-tier uniforms (two-level strategies;
+    #: ``None`` on batches generated without ``tier=True``)
+    fault_tier: Optional[np.ndarray] = None
 
     @property
     def n_lanes(self) -> int:
@@ -459,9 +466,16 @@ class BatchTraces:
         """Scalar :class:`EventTrace` view of lane ``i``."""
         nf = int(self.n_faults[i])
         npred = int(self.n_preds[i])
+        tiers = (
+            self.fault_tier[i, :nf]
+            if self.fault_tier is not None
+            else np.ones(nf)
+        )
         faults = [
-            FaultEvent(float(t), predicted=bool(p))
-            for t, p in zip(self.fault_times[i, :nf], self.fault_predicted[i, :nf])
+            FaultEvent(float(t), predicted=bool(p), tier_u=float(u))
+            for t, p, u in zip(
+                self.fault_times[i, :nf], self.fault_predicted[i, :nf], tiers
+            )
         ]
         w, ld = float(self.window[i]), float(self.lead[i])
         preds = []
@@ -491,6 +505,11 @@ class BatchTraces:
             n_preds=np.tile(self.n_preds, reps),
             window=np.tile(self.window, reps),
             lead=np.tile(self.lead, reps),
+            fault_tier=(
+                None
+                if self.fault_tier is None
+                else np.tile(self.fault_tier, (reps, 1))
+            ),
         )
 
     def take(self, rows) -> "BatchTraces":
@@ -507,6 +526,9 @@ class BatchTraces:
             n_preds=self.n_preds[rows],
             window=self.window[rows],
             lead=self.lead[rows],
+            fault_tier=(
+                None if self.fault_tier is None else self.fault_tier[rows]
+            ),
         )
 
     @staticmethod
@@ -527,6 +549,19 @@ class BatchTraces:
             ]
             return np.concatenate(padded, axis=0)
 
+        if any(p.fault_tier is not None for p in parts):
+            # lanes without draws fall back to the 1.0 ("disk") fill
+            tier = cat2(
+                [
+                    p.fault_tier
+                    if p.fault_tier is not None
+                    else np.ones(p.fault_times.shape)
+                    for p in parts
+                ],
+                1.0,
+            )
+        else:
+            tier = None
         return BatchTraces(
             horizon=np.concatenate([p.horizon for p in parts]),
             fault_times=cat2([p.fault_times for p in parts], np.inf),
@@ -537,6 +572,7 @@ class BatchTraces:
             n_preds=np.concatenate([p.n_preds for p in parts]),
             window=np.concatenate([p.window for p in parts]),
             lead=np.concatenate([p.lead for p in parts]),
+            fault_tier=tier,
         )
 
 
@@ -730,6 +766,7 @@ def make_event_traces_batch(
     false_pred_dist: Distribution | None = None,
     n_components: Optional[int] = None,
     stationary: bool = False,
+    tier: bool = False,
 ) -> BatchTraces:
     """Batched :func:`make_event_trace`: one array-of-events generation pass
     per distribution instead of ``n_traces`` Python loops.
@@ -739,6 +776,11 @@ def make_event_traces_batch(
     windows).  The generated traces are distributionally identical to the
     scalar path but consume the RNG in a different order, so individual
     traces differ draw-for-draw from :func:`make_event_trace` at equal seeds.
+
+    ``tier=True`` additionally draws per-fault recovery-tier uniforms
+    (two-level checkpointing strategies).  The draw happens *after* every
+    other draw, so traces at a given seed are unchanged when ``tier`` is
+    left off.
     """
     L = int(n_traces)
     horizon = _bc(horizon, L)
@@ -804,6 +846,7 @@ def make_event_traces_batch(
         n_preds=n_preds,
         window=window,
         lead=lead,
+        fault_tier=rng.random(fault_times.shape) if tier else None,
     )
 
 
@@ -811,7 +854,7 @@ def make_event_traces_batch(
 # Counter-based RNG trace specifications (device-side generation)
 # --------------------------------------------------------------------------- #
 #: stream kinds of the per-lane counter-based RNG layout.  Every lane owns
-#: five independent streams, one per kind (the TP coin stream's two output
+#: six independent streams, one per kind (the TP coin stream's two output
 #: words carry the predicted coin and the window offset); draw ``i`` of a
 #: stream never depends on any other draw, so the device engine, the NumPy
 #: :meth:`TraceSpec.materialize` reference, and any cursor replaying the
@@ -822,7 +865,8 @@ def make_event_traces_batch(
     STREAM_FP_GAP,  # false-prediction inter-arrival time j
     STREAM_TP_TRUST,  # trust coin for fault i's prediction (0 < q < 1 only)
     STREAM_FP_TRUST,  # trust coin for false prediction j (0 < q < 1 only)
-) = range(5)
+    STREAM_TIER,  # recovery-tier coin for fault i (two-level strategies)
+) = range(6)
 
 #: Threefry-2x32 key-schedule parity constant (Salmon et al., SC'11)
 _TF_PARITY = 0x1BD11BDA
@@ -1332,6 +1376,14 @@ class TraceSpec:
             )
         else:
             fault_times = fault_times[:, :fwidth]
+        # recovery-tier uniforms: counter draw i of the tier stream belongs
+        # to fault column i — bit-identical to the device engine's
+        # counter_uniform(tier_key, sf_ctr) read at each consumed fault
+        tkey = stream_key64_np(self.seed, self.stream, STREAM_TIER)
+        tctr = np.broadcast_to(
+            np.arange(fault_times.shape[1], dtype=np.int64), fault_times.shape
+        )
+        fault_tier = uniform24(splitmix64(tkey[:, None], tctr)[0])
         return BatchTraces(
             horizon=self.horizon,
             fault_times=fault_times,
@@ -1342,6 +1394,7 @@ class TraceSpec:
             n_preds=n_preds,
             window=self.window,
             lead=self.lead,
+            fault_tier=fault_tier,
         )
 
 

@@ -210,7 +210,8 @@ def default_chunk_lanes(
 
 
 def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
-             has_migration, gen=None, gathered=(), n_seg=0):
+             has_migration, has_two_level=False, has_silent=False,
+             gen=None, gathered=(), n_seg=0):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -248,6 +249,16 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
     horizon, window = consts["horizon"], consts["window"]
     wpp, lead_act = consts["wpp"], consts["lead_act"]
     tp_eff_default = consts["tp_eff_default"]
+    # two-level / silent-error phase families (specialized out of every
+    # other sweep's compiled step, exactly like has_migration)
+    tl_m = (mode == B._M_TWO_LEVEL) if has_two_level else None
+    sil_m = (mode == B._M_SILENT) if has_silent else None
+    if has_two_level:
+        C2, DR2 = consts["C2"], consts["DR2"]
+        fmem, rho = consts["fmem"], consts["rho"]
+        Ftier = None if gen is not None else consts["Ftier"]
+    if has_silent:
+        V, kv = consts["V"], consts["kv"]
 
     def take(a, idx):
         return jnp.take_along_axis(a, idx[None, :], axis=0)[0]
@@ -273,6 +284,10 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         fg_key = subkey(E.STREAM_FAULT_GAP)
         tc_key = subkey(E.STREAM_TP_COIN)
         fp_key = subkey(E.STREAM_FP_GAP)
+        if has_two_level:
+            # recovery-tier coin of fault i: counter i of the tier stream
+            # (the NumPy twin lives in TraceSpec.materialize)
+            tier_key = subkey(E.STREAM_TIER)
         if frac_q:
             tt_key = subkey(E.STREAM_TP_TRUST)
             ft_key = subkey(E.STREAM_FP_TRUST)
@@ -365,6 +380,15 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         period_work, na_saved = st["period_work"], st["na_saved"]
         ep_t0, ep_end = st["ep_t0"], st["ep_end"]
         phase = st["phase"]  # PH_DONE marks finished lanes (no done array)
+        n_disk, n_det = st["n_disk"], st["n_det"]
+        if has_two_level:
+            saved_d, dk_ctr = st["saved_d"], st["dk_ctr"]
+            rc = st["rc"]  # duration of the repair in progress
+        else:
+            rc = DR
+        if has_silent:
+            saved_v, ck_v = st["saved_v"], st["ck_v"]
+            corrupt = st["corrupt"]
         if device_gen:
             fi = pi = None
             sf_ctr, sf_time = st["sf_ctr"], st["sf_time"]
@@ -463,10 +487,26 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         k = jnp.minimum(
             jnp.minimum(k_fault, k_act), jnp.minimum(k_done, 4e15)
         )
+        # never fuse across a disk-tier or verification checkpoint (they
+        # cost more than C): cap the run at the current stride remainder
+        if has_two_level:
+            k = jnp.where(
+                tl_m,
+                jnp.minimum(k, jnp.maximum(rho - 1.0 - dk_ctr, 0.0)), k,
+            )
+        if has_silent:
+            k = jnp.where(
+                sil_m,
+                jnp.minimum(k, jnp.maximum(kv - 1.0 - ck_v, 0.0)), k,
+            )
         ff = ffm & (k >= 2.0)
         t = jnp.where(ff, t + k * T_R, t)
         saved = jnp.where(ff, saved + k * wpp, saved)
         n_reg = st["n_reg"] + jnp.where(ff, k, 0.0).astype(st["n_reg"].dtype)
+        if has_two_level:
+            dk_ctr = jnp.where(ff & tl_m, dk_ctr + k, dk_ctr)
+        if has_silent:
+            ck_v = jnp.where(ff & sil_m, ck_v + k, ck_v)
 
         exhausted = st["exhausted"] | (mn & (t > horizon))
         remaining = wpp - period_work
@@ -600,26 +640,44 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         remw = W - saved - unsaved
         target = jnp.where(workm, jnp.minimum(target, t + remw), target)
         ckend = t + C  # only consulted under ckm
+        # intent masks fixed with the end date (before stale-fault
+        # resolution, mirroring the NumPy engine): the rho-th regular
+        # ckpt of a two-level lane is the disk tier (cost C + C2), the
+        # k_V-th regular ckpt of a silent-error lane verifies (cost
+        # C + V).  Proactive ckpts hit the memory tier and never verify.
+        if has_two_level or has_silent:
+            reg_int = ckm & (cont == B._C_CKPTREG)
+        if has_two_level:
+            disk_int = reg_int & tl_m & (dk_ctr >= rho - 1.0)
+            ckend = jnp.where(disk_int, ckend + C2, ckend)
+        if has_silent:
+            ver_int = reg_int & sil_m & (ck_v >= kv - 1.0)
+            ckend = jnp.where(ver_int, ckend + V, ckend)
 
-        # resolve stale faults (fault during downtime: recovery restarts)
+        # resolve stale faults (fault during downtime: recovery restarts;
+        # rc is the duration of the repair in progress — D+R everywhere
+        # except after a two-level disk recovery — and silent-error
+        # strikes are not fail-stop events, so those lanes skip the
+        # cascade entirely)
+        res_f = res & ~sil_m if has_silent else res
         if device_gen:
             def s_cond(c):
                 t_, ctr_, tm_, _ = c
                 stale = tm_ < t_
                 if has_migration:
                     stale |= is_cancelled(ctr_)
-                return jnp.any(res & stale)
+                return jnp.any(res_f & stale)
 
             def s_body(c):
                 t_, ctr_, tm_, nflt_ = c
                 if has_migration:
                     cc = is_cancelled(ctr_)
-                    stepm = res & (cc | (tm_ < t_))
-                    hit = stepm & ~cc & (tm_ >= t_ - DR)
+                    stepm = res_f & (cc | (tm_ < t_))
+                    hit = stepm & ~cc & (tm_ >= t_ - rc)
                 else:
-                    stepm = res & (tm_ < t_)
-                    hit = stepm & (tm_ >= t_ - DR)
-                t_ = jnp.where(hit, tm_ + DR, t_)
+                    stepm = res_f & (tm_ < t_)
+                    hit = stepm & (tm_ >= t_ - rc)
+                t_ = jnp.where(hit, tm_ + rc, t_)
                 nflt_ = nflt_ + hit.astype(nflt_.dtype)
                 ctr_, tm_ = adv_fault(stepm, ctr_, tm_)
                 return t_, ctr_, tm_, nflt_
@@ -635,19 +693,19 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
                 stale = cf < t_
                 if has_migration:
                     stale |= take(Fcancel, fi_)
-                return jnp.any(res & stale)
+                return jnp.any(res_f & stale)
 
             def s_body(c):
                 t_, fi_, nflt_ = c
                 cf = take(F, fi_)
                 if has_migration:
                     cc = take(Fcancel, fi_)
-                    stepm = res & (cc | (cf < t_))
-                    hit = stepm & ~cc & (cf >= t_ - DR)
+                    stepm = res_f & (cc | (cf < t_))
+                    hit = stepm & ~cc & (cf >= t_ - rc)
                 else:
-                    stepm = res & (cf < t_)
-                    hit = stepm & (cf >= t_ - DR)
-                t_ = jnp.where(hit, cf + DR, t_)
+                    stepm = res_f & (cf < t_)
+                    hit = stepm & (cf >= t_ - rc)
+                t_ = jnp.where(hit, cf + rc, t_)
                 nflt_ = nflt_ + hit.astype(nflt_.dtype)
                 fi_ = fi_ + stepm.astype(fi_.dtype)
                 return t_, fi_, nflt_
@@ -656,14 +714,33 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
                 s_cond, s_body, (t, fi, st["n_faults"])
             )
             nf = take(F, fi)
+        if has_silent:
+            # silent strikes never interrupt a primitive (latent until
+            # the next verification): mask them off the fail-stop check;
+            # the refill inside the kernel is masked on `faulted`, so the
+            # strike cursor of a silent lane stays untouched
+            nf = jnp.where(sil_m, jnp.asarray(jnp.inf, nf.dtype), nf)
+        if has_two_level:
+            # tier coin consumed with the fault (read at the
+            # pre-consumption cursor): u >= f sends recovery to disk
+            if device_gen:
+                u_tier = counter_uniform(tier_key, sf_ctr, horizon.dtype)
+            else:
+                u_tier = take(Ftier, fi)
 
         upd = masked_primitive_update if use_pallas else primitive_update
         kw = {"interpret": interpret} if use_pallas else {}
         if device_gen:
             # the struck fault is consumed: the sampling step (refill the
             # strike cursor with one counter draw where faulted) is fused
-            # into the hot-step kernel itself
-            kw["stream"] = (fg_key, sf_ctr, sf_time, mtbf, horizon)
+            # into the hot-step kernel itself.  The kernel contract wants
+            # stream[2] == nf (the Pallas entry reads the cursor time off
+            # the nf input), so the silent lanes' +inf mask rides along
+            # and their true cursor — untouched by construction, silent
+            # lanes never fault in the kernel — is restored afterwards
+            if has_silent:
+                sil_ctr, sil_time = sf_ctr, sf_time
+            kw["stream"] = (fg_key, sf_ctr, nf, mtbf, horizon)
             if f_kind == "indexed":
                 kw["stream"] += (f_law, f_lp[0], f_lp[1])
             kw["gap"] = (f_kind, f_param)
@@ -672,6 +749,9 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
                 t, saved, unsaved, period_work, W, DR,
                 eps=eps, reg_cont=int(B._C_CKPTREG), **kw,
             )
+            if has_silent:
+                sf_ctr = jnp.where(sil_m, sil_ctr, sf_ctr)
+                sf_time = jnp.where(sil_m, sil_time, sf_time)
         else:
             t, saved, unsaved, period_work, flags = upd(
                 prim, cont, target, ckend, nf,
@@ -691,6 +771,75 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
         phase = jnp.where(fin, B._PH_DONE, phase)
         n_pro = st["n_pro"] + (cok & ~reg).astype(st["n_pro"].dtype)
         n_reg = n_reg + reg.astype(n_reg.dtype)
+
+        if has_two_level:
+            # disk-tier recovery: restart from the last disk ckpt (the
+            # kernel already applied the memory-tier rollback t = nf+DR)
+            disk = faulted & tl_m & (u_tier >= fmem)
+            mem = faulted & tl_m & ~disk
+            t = jnp.where(disk, nf + DR2, t)
+            saved = jnp.where(disk, saved_d, saved)
+            dk_ctr = jnp.where(disk, 0.0, dk_ctr)
+            rc = jnp.where(mem, DR, jnp.where(disk, DR2, rc))
+            n_disk = n_disk + disk.astype(n_disk.dtype)
+            # completed disk-tier ckpt: promote the durable frontier;
+            # completed memory-tier regular ckpt: advance the nesting
+            # counter (proactive ckpts hit the memory tier but do not)
+            dk = cok & disk_int
+            saved_d = jnp.where(dk, saved, saved_d)
+            dk_ctr = jnp.where(dk, 0.0, dk_ctr)
+            dk_ctr = jnp.where(reg & tl_m & ~disk_int, dk_ctr + 1.0, dk_ctr)
+
+        if has_silent:
+            # consume latent strikes up to the new clock: they corrupt
+            # state silently instead of interrupting the primitive
+            silr = res & sil_m
+            if device_gen:
+                def sc_cond(c):
+                    _, tm_, _ = c
+                    return jnp.any(silr & (tm_ <= t))
+
+                def sc_body(c):
+                    ctr_, tm_, cor_ = c
+                    hit = silr & (tm_ <= t)
+                    cor_ = jnp.where(hit, jnp.minimum(cor_, tm_), cor_)
+                    ctr_, tm_ = adv_fault(hit, ctr_, tm_)
+                    return ctr_, tm_, cor_
+
+                sf_ctr, sf_time, corrupt = lax.while_loop(
+                    sc_cond, sc_body, (sf_ctr, sf_time, corrupt)
+                )
+            else:
+                def sc_cond(c):
+                    fi_, _ = c
+                    return jnp.any(silr & (take(F, fi_) <= t))
+
+                def sc_body(c):
+                    fi_, cor_ = c
+                    cf = take(F, fi_)
+                    hit = silr & (cf <= t)
+                    cor_ = jnp.where(hit, jnp.minimum(cor_, cf), cor_)
+                    return fi_ + hit.astype(fi_.dtype), cor_
+
+                fi, corrupt = lax.while_loop(
+                    sc_cond, sc_body, (fi, corrupt)
+                )
+            # verification caught a latent corruption: roll back past
+            # every unverified ckpt to the verified frontier
+            vok = cok & ver_int
+            det = vok & jnp.isfinite(corrupt)
+            t = jnp.where(det, t + DR, t)
+            saved = jnp.where(det, saved_v, saved)
+            period_work = jnp.where(det, 0.0, period_work)
+            corrupt = jnp.where(
+                det, jnp.asarray(jnp.inf, corrupt.dtype), corrupt
+            )
+            n_faults = n_faults + det.astype(n_faults.dtype)
+            n_det = n_det + det.astype(n_det.dtype)
+            clean = vok & ~det
+            saved_v = jnp.where(clean, saved, saved_v)
+            ck_v = jnp.where(vok, 0.0, ck_v)
+            ck_v = jnp.where(reg & sil_m & ~ver_int, ck_v + 1.0, ck_v)
 
         # ---- continuations on success ------------------------------ #
         cmask = ok & (phase != B._PH_DONE)
@@ -803,7 +952,12 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
             "n_faults": n_faults, "n_pro": n_pro, "n_reg": n_reg,
             "n_mig": n_mig, "phase": phase,
             "exhausted": exhausted,
+            "n_disk": n_disk, "n_det": n_det,
         }
+        if has_two_level:
+            st.update(saved_d=saved_d, dk_ctr=dk_ctr, rc=rc)
+        if has_silent:
+            st.update(saved_v=saved_v, ck_v=ck_v, corrupt=corrupt)
         if device_gen:
             st.update(
                 sf_ctr=sf_ctr, sf_time=sf_time,
@@ -857,10 +1011,27 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
             state["cancel1"] = neg1
             state["cancel2"] = neg1
 
+    # two-level / silent lane state materializes in-jit (the packers ship
+    # none of it); the disk/detection counters ride along unconditionally
+    # so the fetch path and the stats reduction see a fixed column set
+    state = dict(state)
+    zt = jnp.zeros_like(state["t"])
+    zctr = jnp.zeros_like(state["n_faults"])
+    state.setdefault("n_disk", zctr)
+    state.setdefault("n_det", zctr)
+    if has_two_level:
+        state.setdefault("saved_d", zt)
+        state.setdefault("dk_ctr", zt)
+        state.setdefault("rc", jnp.broadcast_to(DR, zt.shape) + zt)
+    if has_silent:
+        state.setdefault("saved_v", zt)
+        state.setdefault("ck_v", zt)
+        state.setdefault("corrupt", jnp.full_like(state["t"], jnp.inf))
+
     n_it, final = lax.while_loop(cond, step, (jnp.int32(0), state))
     final = dict(final); final["_iters"] = n_it
     if n_seg:
-        # per-cell segment reduction on device: one (n_seg, 11) matrix of
+        # per-cell segment reduction on device: one (n_seg, 13) matrix of
         # Monte-Carlo sums per chunk instead of O(lanes) result fetches.
         # Padding lanes carry the sacrificial pad-row index, so their
         # degenerate waste (t = 0) lands in rows the host drops.
@@ -877,6 +1048,8 @@ def _jit_run(consts, state, *, use_pallas, interpret, max_iters, eps,
                 final["n_reg"].astype(fdt2),
                 final["n_mig"].astype(fdt2),
                 final["exhausted"].astype(fdt2),
+                final["n_disk"].astype(fdt2),
+                final["n_det"].astype(fdt2),
                 (final["phase"] != B._PH_DONE).astype(fdt2),  # convergence
             ],
             cidx, n_seg,
@@ -1003,7 +1176,7 @@ class _ShardedRunner:
 
         if key in self._gathered:
             return P()  # replicated cell table
-        if key in ("F", "P0", "Pft", "Fcancel"):
+        if key in ("F", "P0", "Pft", "Fcancel", "Ftier"):
             return P(None, "lanes")  # (events, lanes) slab
         return P("lanes")
 
@@ -1064,12 +1237,13 @@ class _ShardedRunner:
 def _get_runner(
     use_pallas: bool, interpret: bool, max_iters: int, eps: float,
     has_migration: bool, devs, gen=None, gathered=(), n_seg=0,
-    stats=False,
+    stats=False, has_two_level: bool = False, has_silent: bool = False,
 ):
     import jax
 
     key = (
         use_pallas, interpret, max_iters, eps, has_migration,
+        has_two_level, has_silent,
         tuple(d.id for d in devs), gen, gathered, n_seg, stats,
     )
     runner = _RUN_CACHE.get(key)
@@ -1079,6 +1253,7 @@ def _get_runner(
     step = partial(
         _jit_run, use_pallas=use_pallas, interpret=interpret,
         max_iters=max_iters, eps=eps, has_migration=has_migration,
+        has_two_level=has_two_level, has_silent=has_silent,
         gen=gen, gathered=gathered, n_seg=n_seg,
     )
     if len(devs) > 1:
@@ -1099,7 +1274,10 @@ def _get_runner(
 
 
 #: per-lane result arrays pulled back from the device after each chunk
-_OUT_KEYS = ("t", "n_faults", "n_pro", "n_reg", "n_mig", "exhausted", "phase")
+_OUT_KEYS = (
+    "t", "n_faults", "n_pro", "n_reg", "n_mig", "n_disk", "n_det",
+    "exhausted", "phase",
+)
 
 
 def _chunk_state(sl: slice, n_pad: int, fdt, idt):
@@ -1126,7 +1304,7 @@ def _chunk_state(sl: slice, n_pad: int, fdt, idt):
 def _pack_scalar_chunk(
     sl: slice, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
-    cidx=None, pad_cell=0,
+    cidx=None, pad_cell=0, tl=None, sil=None,
 ):
     """Shared scalar packing of one lane chunk (pure NumPy): the
     per-lane engine constants and zeroed lane state common to both trace
@@ -1159,6 +1337,18 @@ def _pack_scalar_chunk(
         "lead_act": np.where(modeh == B._M_MIGRATION, Mh, Ch),
         "tp_eff_default": np.maximum(Ch, windowh),
     }
+    if tl is not None:
+        # two-level lanes: disk-tier cost/recovery, memory-tier
+        # probability, nesting stride (benign pad fills, as in the tables)
+        C2a, R2a, fmema, rhoa = tl
+        consts["C2"] = fvec(C2a)
+        consts["DR2"] = fvec(D) + fvec(R2a)
+        consts["fmem"] = fvec(fmema)
+        consts["rho"] = fvec(rhoa, 1.0)
+    if sil is not None:
+        Va, kva = sil
+        consts["V"] = fvec(Va)
+        consts["kv"] = fvec(kva, 1.0)
     if cidx is not None:
         consts["cidx"] = pad_lane_axis(
             cidx[sl].astype(np.int32), n_pad, pad_cell
@@ -1193,6 +1383,7 @@ _CELL_TABLE_KEYS = (
     "W", "C", "DR", "T_R", "T_P", "mode", "horizon", "window",
     "wpp", "lead_act", "tp_eff_default", "mtbf", "fp_mean", "recall", "q_eff",
     "fault_law", "fault_s1", "fault_s2", "fp_law", "fp_s1", "fp_s2",
+    "C2", "DR2", "V", "fmem", "rho", "kv",
 )
 
 
@@ -1201,6 +1392,7 @@ def _cell_tables(
     W, C, D, R, M, T_R, T_P, mode, horizon, window, horizon_fill,
     mtbf=None, fp_mean=None, recall=None, q_eff=None,
     fault_laws=None, fp_laws=None,
+    C2=None, R2=None, V=None, fmem=None, rho=None, kv=None,
 ) -> dict:
     """Per-cell engine-parameter tables of a fused sweep (pure NumPy).
 
@@ -1258,6 +1450,17 @@ def _cell_tables(
             fp_s1=tab(lp[:, 1]),
             fp_s2=tab(lp[:, 2]),
         )
+    if C2 is not None:
+        # two-level / silent-error columns (benign pad rows: degenerate
+        # strides, zero extra costs, f = 0 sends every failure to disk)
+        tables.update(
+            C2=tab(C2),
+            DR2=tab(np.asarray(D) + np.asarray(R2)),
+            V=tab(V),
+            fmem=tab(fmem),
+            rho=tab(rho, 1.0),
+            kv=tab(kv, 1.0),
+        )
     return tables
 
 
@@ -1284,7 +1487,7 @@ def _pack_chunk_spec_cells(
 def _pack_chunk(
     has_migration: bool, sl: slice, n_pad: int, fdt, idt,
     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft, horizon, window,
-    cidx=None, pad_cell=0,
+    cidx=None, pad_cell=0, tl=None, sil=None, Ftier=None,
 ):
     """Host-side packing of one lane chunk into engine pytrees.
 
@@ -1295,7 +1498,7 @@ def _pack_chunk(
     fvec, consts, state = _pack_scalar_chunk(
         sl, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, horizon, window, np.inf,
-        cidx=cidx, pad_cell=pad_cell,
+        cidx=cidx, pad_cell=pad_cell, tl=tl, sil=sil,
     )
 
     def events(a):  # (n_pad, E) -> (E, n_pad)
@@ -1307,6 +1510,11 @@ def _pack_chunk(
         P0=events(pad_lane_axis(P0[sl], n_pad, np.inf).astype(fdt)),
         Pft=events(pad_lane_axis(Pft[sl], n_pad, np.nan).astype(fdt)),
     )
+    if Ftier is not None:
+        # per-fault recovery-tier coins, aligned column for column with F
+        consts["Ftier"] = events(
+            pad_lane_axis(Ftier[sl], n_pad, 1.0).astype(fdt)
+        )
     state["fi"] = np.zeros(n_pad, np.int32)
     state["pi"] = np.zeros(n_pad, np.int32)
     if has_migration:
@@ -1318,7 +1526,7 @@ def _pack_chunk(
 def _pack_chunk_spec(
     spec: TraceSpec, fp_mean, q_eff, sl: slice, n_pad: int,
     fdt, idt, W, C, D, R, M, T_R, T_P, mode, cidx=None, pad_cell=0,
-    f_laws=None, fp_laws=None,
+    f_laws=None, fp_laws=None, tl=None, sil=None,
 ):
     """Host-side packing of one lane chunk of a per-lane :class:`TraceSpec`.
 
@@ -1333,7 +1541,7 @@ def _pack_chunk_spec(
     fvec, consts, state = _pack_scalar_chunk(
         sl, n_pad, fdt, idt,
         W, C, D, R, M, T_R, T_P, mode, spec.horizon, spec.window, -1.0,
-        cidx=cidx, pad_cell=pad_cell,
+        cidx=cidx, pad_cell=pad_cell, tl=tl, sil=sil,
     )
 
     consts.update(
@@ -1387,7 +1595,7 @@ def _dispatch(runner, devs, consts, state, *acc):
 
 
 def _acc_init(n_seg: int, fdt, devs):
-    """Zeroed on-device ``(n_seg, 11)`` CellSums accumulator.
+    """Zeroed on-device ``(n_seg, 13)`` CellSums accumulator.
 
     Donated through every chunk dispatch of a ``collect="stats"`` call
     (replicated across the lane mesh when sharded) and explicitly
@@ -1395,7 +1603,7 @@ def _acc_init(n_seg: int, fdt, devs):
     whole call."""
     import jax
 
-    z = np.zeros((n_seg, 11), fdt)
+    z = np.zeros((n_seg, 13), fdt)
     if len(devs) == 1:
         return jax.device_put(z, devs[0])
     from jax.sharding import Mesh, NamedSharding, PartitionSpec
@@ -1418,8 +1626,8 @@ def _fetch(final, n_real: int):
 #: column order of the device-side per-cell segment reduction
 (
     _CS_N, _CS_T, _CS_T2, _CS_WASTE, _CS_WASTE2, _CS_NF, _CS_NPRO,
-    _CS_NREG, _CS_NMIG, _CS_EXH, _CS_NOTDONE,
-) = range(11)
+    _CS_NREG, _CS_NMIG, _CS_EXH, _CS_DISK, _CS_DET, _CS_NOTDONE,
+) = range(13)
 
 
 @dataclass
@@ -1440,6 +1648,8 @@ class CellSums:
     n_regular_ckpts: np.ndarray
     n_migrations: np.ndarray
     n_exhausted: np.ndarray
+    n_disk_recoveries: np.ndarray
+    n_detections: np.ndarray
 
     @property
     def n_cells(self) -> int:
@@ -1481,10 +1691,12 @@ class CellSums:
             n_proactive_ckpts=cs[:, _CS_NPRO],
             n_regular_ckpts=cs[:, _CS_NREG], n_migrations=cs[:, _CS_NMIG],
             n_exhausted=cs[:, _CS_EXH],
+            n_disk_recoveries=cs[:, _CS_DISK],
+            n_detections=cs[:, _CS_DET],
         )
 
     def as_matrix(self) -> np.ndarray:
-        """The ``(n_cells, 10)`` column matrix (``_CS_*`` order, minus
+        """The ``(n_cells, 12)`` column matrix (``_CS_*`` order, minus
         the internal not-done flag): sums are plain f64 adds, so partial
         sweeps accumulate by matrix addition — the resumable campaign's
         durable accumulator (:mod:`repro.ft.campaign`) is exactly this
@@ -1501,6 +1713,8 @@ class CellSums:
                 np.asarray(self.n_regular_ckpts, np.float64),
                 np.asarray(self.n_migrations, np.float64),
                 np.asarray(self.n_exhausted, np.float64),
+                np.asarray(self.n_disk_recoveries, np.float64),
+                np.asarray(self.n_detections, np.float64),
             ],
             axis=1,
         )
@@ -1637,19 +1851,27 @@ def simulate_batch_jax(
             raise ValueError(
                 f"cell_index entries must be in [0, {n_cells})"
             )
-    W, C, D, R, M, T_R, T_P, mode, q = B._lane_params(
-        work, platform, strategy, n_cells if celled else L
+    W, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv = (
+        B._lane_params(work, platform, strategy, n_cells if celled else L)
     )
     if celled and not is_spec:
         # host event arrays are inherently per-lane: broadcast the cell
         # table host-side (cheap NumPy gathers) and keep only the
         # lane -> cell index for the device-side per-cell reduction
-        W, C, D, R, M, T_R, T_P, mode, q = (
-            a[cidx_g] for a in (W, C, D, R, M, T_R, T_P, mode, q)
+        W, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv = (
+            a[cidx_g] for a in (
+                W, C, D, R, M, T_R, T_P, mode, q, C2, R2, V, fmem, rho, kv
+            )
         )
+    # two-level / silent phase families are specialized out of every
+    # other sweep's compiled step (and its packed payload), like migration
+    any_tl = bool((mode == B._M_TWO_LEVEL).any())
+    any_sil = bool((mode == B._M_SILENT).any())
+    tl_extra = (C2, R2, fmem, rho) if any_tl else None
+    sil_extra = (V, kv) if any_sil else None
     if L == 0:
         if collect == "stats":
-            return CellSums.from_matrix(np.zeros((n_cells, 11)))
+            return CellSums.from_matrix(np.zeros((n_cells, 13)))
         z = np.zeros(0)
         zi = np.zeros(0, np.int64)
         return BatchResult(z, z, zi, zi, zi, zi, np.zeros(0, bool))
@@ -1679,8 +1901,12 @@ def simulate_batch_jax(
         # engine-side trust: mode "none" / q<=0 sees no predictions,
         # fractional q thins both prediction streams via trust coins
         # (per-cell arrays in the fused layout — the gathered per-lane
-        # values are identical, so is the compiled program)
-        q_eff = np.where(mode == B._M_NONE, 0.0, np.clip(q, 0.0, 1.0))
+        # values are identical, so is the compiled program); silent-error
+        # lanes never trust the fail-stop predictor
+        q_eff = np.where(
+            (mode == B._M_NONE) | (mode == B._M_SILENT),
+            0.0, np.clip(q, 0.0, 1.0),
+        )
         frac_q = bool(((q_eff > 0.0) & (q_eff < 1.0)).any())
         gen = (f_kind, f_param, fp_kind, fp_param, frac_q)
         fp_mean = traces.fp_mean
@@ -1696,6 +1922,29 @@ def simulate_batch_jax(
                           round_pow2=True, min_width=8)
         Pft = pad_sentinel(p_ft, traces.n_preds, np.nan,
                            round_pow2=True, min_width=8)
+        if any_tl:
+            FT = getattr(traces, "fault_tier", None)
+            if FT is None:
+                tl_lanes = mode == B._M_TWO_LEVEL
+                if float(fmem[tl_lanes].max(initial=0.0)) > 0.0:
+                    raise ValueError(
+                        "two-level lanes with f > 0 need per-fault tier "
+                        "draws: generate traces with "
+                        "make_event_traces_batch(..., tier=True)"
+                    )
+                FT = np.ones_like(traces.fault_times)
+            elif FT.shape[1] < traces.fault_times.shape[1]:
+                FT = np.concatenate(
+                    [FT, np.ones(
+                        (FT.shape[0],
+                         traces.fault_times.shape[1] - FT.shape[1])
+                    )],
+                    axis=1,
+                )
+            Ftier = pad_sentinel(FT, traces.n_faults, 1.0,
+                                 round_pow2=True, min_width=8)
+        else:
+            Ftier = None
     t_pack += _time.monotonic() - t0
 
     devs = _resolve_devices(devices, mesh)
@@ -1758,6 +2007,8 @@ def simulate_batch_jax(
                 mtbf=traces.mtbf, fp_mean=fp_mean,
                 recall=traces.recall, q_eff=q_eff,
                 fault_laws=f_laws, fp_laws=fp_laws,
+                C2=C2 if (any_tl or any_sil) else None,
+                R2=R2, V=V, fmem=fmem, rho=rho, kv=kv,
             )
         acc = None
         if not want_lanes:
@@ -1772,17 +2023,16 @@ def simulate_batch_jax(
         for lo in range(0, L, chunk):
             sl = slice(lo, min(lo + chunk, L))
             n_chunks += 1
-            # migration-free chunks compile a specialized step with no
-            # fault-cancellation state (most sweeps; much less traffic)
-            if spec_celled:
-                has_mig = bool(
-                    (mode[cidx_g[sl]] == B._M_MIGRATION).any()
-                )
-            else:
-                has_mig = bool((mode[sl] == B._M_MIGRATION).any())
+            # migration-free (and two-level-free, silent-free) chunks
+            # compile a specialized step with none of that family's state
+            chunk_mode = mode[cidx_g[sl]] if spec_celled else mode[sl]
+            has_mig = bool((chunk_mode == B._M_MIGRATION).any())
+            has_tl = bool((chunk_mode == B._M_TWO_LEVEL).any())
+            has_sil = bool((chunk_mode == B._M_SILENT).any())
             runner = _get_runner(
                 use_pallas, interpret, max_iters, float(_EPS), has_mig,
                 devs, gen, gathered, n_seg, stats=not want_lanes,
+                has_two_level=has_tl, has_silent=has_sil,
             )
             t0 = _time.monotonic()
             if spec_celled:
@@ -1795,6 +2045,8 @@ def simulate_batch_jax(
                     traces, fp_mean, q_eff, sl, n_pad, fdt, idt,
                     W, C, D, R, M, T_R, T_P, mode,
                     f_laws=f_laws, fp_laws=fp_laws,
+                    tl=tl_extra if has_tl else None,
+                    sil=sil_extra if has_sil else None,
                 )
             else:
                 consts, state = _pack_chunk(
@@ -1802,6 +2054,9 @@ def simulate_batch_jax(
                     W, C, D, R, M, T_R, T_P, mode, F, P0, Pft,
                     traces.horizon, traces.window,
                     cidx=cidx_g if celled else None, pad_cell=n_cells,
+                    tl=tl_extra if has_tl else None,
+                    sil=sil_extra if has_sil else None,
+                    Ftier=Ftier if has_tl else None,
                 )
             t_pack += _time.monotonic() - t0
             t0 = _time.monotonic()
@@ -1842,6 +2097,8 @@ def simulate_batch_jax(
         n_regular_ckpts=cat["n_reg"].astype(np.int64),
         n_migrations=cat["n_mig"].astype(np.int64),
         trace_exhausted=cat["exhausted"],
+        n_disk_recoveries=cat["n_disk"].astype(np.int64),
+        n_detections=cat["n_det"].astype(np.int64),
     )
 
 

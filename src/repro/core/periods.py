@@ -53,6 +53,8 @@ __all__ = [
     "optimize_withckpt",
     "best_policy",
     "nockpt_dominates",
+    "two_level_periods",
+    "silent_period",
 ]
 
 
@@ -166,6 +168,8 @@ class OptimalPolicy:
     k_P: Optional[int] = None  # number of proactive periods in the window
     objective: str = "waste"
     value: Optional[float] = None
+    T_d: Optional[float] = None  # disk-tier period (two-level only)
+    k_V: Optional[int] = None  # checkpoints per verification (silent only)
 
 
 def _clamp(T: float, lo: float, hi: float) -> float:
@@ -295,21 +299,139 @@ def two_level_periods(
     f: float,
     r: float = 0.0,
     q: float = 0.0,
+    p: float = 1.0,
+    D: float = 0.0,
+    R_m: float = 0.0,
+    R_d: float = 0.0,
 ) -> Tuple[float, float]:
-    """Optimal periods of the two-level model (see waste.waste_two_level).
+    """Argmin periods of the two-level model (see waste.waste_two_level).
 
-    Each tier's term is Young-shaped in its own period, so
+    The model's proactive term ``(qr/p) C_m / mu`` is constant in both
+    periods, so it shifts the waste but never the argmin; ``p`` (and the
+    D/R costs) are threaded through so this optimizer evaluates the same
+    model :func:`waste.waste_two_level` charges.  Each tier's term is
+    Young-shaped in its own period — but prediction shields only the
+    memory tier (a disk-tier failure destroys the proactive memory
+    checkpoint with the tier, see ``waste.waste_two_level``), so ``rq``
+    stretches the memory extremizer alone:
+
       T_m* = sqrt(2 mu C_m / ((1-rq) f))
-      T_d* = sqrt(2 mu C_d / ((1-rq)(1-f)))
-    (clamped so T_d >= max(C_d, T_m) and T_m >= C_m — a period can never
-    be shorter than its own checkpoint, and a disk checkpoint subsumes a
-    memory one)."""
+      T_d* = sqrt(2 mu C_d / (1-f))
+
+    When the unconstrained extremizers violate ``T_d >= T_m`` the
+    constrained argmin sits ON that boundary (the objective is separable
+    convex), where every checkpoint is a combined memory+disk one of cost
+    ``C_m + C_d`` against the blended loss slope ``f(1-rq) + (1-f)`` — a
+    joint Young problem, NOT the pair of independently clamped per-tier
+    optima the previous revision returned:
+
+      T* = sqrt(2 mu (C_m + C_d) / (f(1-rq) + 1-f))     (T_m = T_d = T*)
+
+    Periods are floored at their own checkpoint cost (``T_m >= C_m``,
+    ``T_d >= C_d`` per tier, ``T >= C_m + C_d`` on the boundary)."""
+    del p  # constant proactive term: affects the waste, never the argmin
     denom = max(1.0 - r * q, 1e-12)
     t_m = math.sqrt(2.0 * mu * C_m / (denom * max(f, 1e-12)))
-    t_d = math.sqrt(2.0 * mu * C_d / (denom * max(1.0 - f, 1e-12)))
+    t_d = math.sqrt(2.0 * mu * C_d / max(1.0 - f, 1e-12))
     t_m = max(t_m, C_m)
-    t_d = max(t_d, C_d, t_m)
+    t_d = max(t_d, C_d)
+    if t_d < t_m:
+        blend = max(f * denom + (1.0 - f), 1e-12)
+        t = max(math.sqrt(2.0 * mu * (C_m + C_d) / blend), C_m + C_d)
+        return t, t
+    del D, R_m, R_d  # additive fault costs: shift the waste, not the argmin
     return t_m, t_d
+
+
+def silent_period(
+    mu: float,
+    C: float,
+    V: float,
+    D: float = 0.0,
+    R: float = 0.0,
+    k: Optional[int] = None,
+    k_max: int = 16,
+) -> Tuple[float, int]:
+    """Argmin period and verification stride of the silent-error model
+    (see waste.waste_silent, arXiv:1310.8486).
+
+    For a fixed stride ``k`` (one verification every ``k`` checkpoints)
+    the waste (k C + V)/(k T) + (k T + V + D + R)/mu is Young-shaped with
+    extremizer
+
+      T*(k) = sqrt(mu (k C + V)) / k
+
+    (note: no factor 2 — a latent corruption forfeits the *whole* pattern,
+    not half a period).  With ``k=None`` the stride is chosen by scanning
+    ``1..k_max`` and keeping the argmin of the full model."""
+    def t_star(kk: int) -> float:
+        return max(math.sqrt(mu * (kk * C + V)) / kk, C)
+
+    if k is not None:
+        return t_star(k), k
+    best = None
+    for kk in range(1, max(k_max, 1) + 1):
+        t = t_star(kk)
+        w = W.waste_silent(t, C, V, D, R, mu, kk)
+        if best is None or w < best[0]:
+            best = (w, t, kk)
+    return best[1], best[2]
+
+
+def _two_level_platform(platform: W.Platform):
+    """Two-level knobs with their degenerate-platform fallbacks: a missing
+    disk tier costs like the memory one, a missing coverage fraction means
+    no failure is memory-recoverable."""
+    C2 = platform.C2 if platform.C2 is not None else platform.C
+    R2 = platform.R2 if platform.R2 is not None else platform.R
+    f = platform.f if platform.f is not None else 0.0
+    return C2, R2, f
+
+
+def _optimize_two_level(
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float = W.ALPHA,
+    capped: bool = False,
+) -> OptimalPolicy:
+    """Two-level case analysis: the corrected extremizers of
+    :func:`two_level_periods` under the q in {0, 1} affine argument."""
+    mu, C, D, R = platform.mu, platform.C, platform.D, platform.R
+    C2, R2, f = _two_level_platform(platform)
+    r, p = pred.recall, pred.precision
+
+    def pol(q: float) -> OptimalPolicy:
+        t_m, t_d = two_level_periods(mu, C, C2, f, r, q, p, D, R, R2)
+        if capped:
+            cap = max(alpha * mu, C)
+            t_m = _clamp(t_m, C, cap)
+            t_d = max(min(t_d, max(cap, C2)), t_m)
+        w = W.waste_two_level(t_m, t_d, C, C2, D, R, R2, mu, f, r, q, p)
+        return OptimalPolicy("two_level", int(q), t_m, min(w, 1.0), T_d=t_d)
+
+    best = pol(0.0)
+    if r <= 0:
+        return best
+    cand = pol(1.0)
+    return cand if cand.waste < best.waste else best
+
+
+def _optimize_silent(
+    platform: W.Platform,
+    pred: W.PredictorModel,
+    alpha: float = W.ALPHA,
+    capped: bool = False,
+) -> OptimalPolicy:
+    """Silent-error optimum: scan the verification stride, Young-shaped
+    period per stride (predictions never fire on latent corruptions, so
+    the predictor is ignored: q = 0 always)."""
+    mu, C, D, R = platform.mu, platform.C, platform.D, platform.R
+    V = platform.V if platform.V is not None else C
+    t, k = silent_period(mu, C, V, D, R)
+    if capped:
+        t = _clamp(t, C, max(alpha * mu, C))
+    w = W.waste_silent(t, C, V, D, R, mu, k)
+    return OptimalPolicy("silent", 0, t, min(w, 1.0), k_V=k)
 
 
 def _nockpt_dominates(

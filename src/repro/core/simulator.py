@@ -44,6 +44,8 @@ __all__ = [
     "nockpt",
     "withckpt",
     "migration",
+    "two_level",
+    "silent",
     "SimResult",
     "simulate",
     "simulate_many",
@@ -66,6 +68,11 @@ class Strategy:
       "nockpt"    Section 4 — no checkpoints inside the window
       "withckpt"  Section 4 — proactive period T_P inside the window
       "migration" Section 3.4 — migrate (cost M) instead of checkpointing
+      "two_level" beyond-paper — memory-tier checkpoints of period T_R
+                  nested in disk-tier checkpoints every ``rho``-th period
+                  (see waste.waste_two_level)
+      "silent"    beyond-paper — latent corruptions, verification every
+                  ``k_V``-th checkpoint (see waste.waste_silent)
     """
 
     name: str
@@ -73,6 +80,10 @@ class Strategy:
     q: float = 0.0
     mode: str = "none"
     T_P: Optional[float] = None
+    #: two-level nesting stride (every rho-th regular ckpt is disk-tier)
+    rho: Optional[int] = None
+    #: silent-error verification stride (every k_V-th regular ckpt verifies)
+    k_V: Optional[int] = None
 
 
 def young(platform: Platform) -> Strategy:
@@ -117,6 +128,32 @@ def migration(platform: Platform, pred: PredictorModel) -> Strategy:
     return Strategy("Migration", _t1(platform, pred), q=1.0, mode="migration")
 
 
+def two_level(platform: Platform, pred: Optional[PredictorModel] = None) -> Strategy:
+    """Two-level checkpointing at the corrected joint extremizers: memory
+    period T_m, disk stride rho = round(T_d / T_m) (>= 1 by the T_d >= T_m
+    constraint of :func:`~repro.core.periods.two_level_periods`)."""
+    C2 = platform.C2 if platform.C2 is not None else platform.C
+    R2 = platform.R2 if platform.R2 is not None else platform.R
+    f = platform.f if platform.f is not None else 0.0
+    r = pred.recall if pred is not None else 0.0
+    q = 1.0 if pred is not None and r > 0.0 else 0.0
+    p = pred.precision if pred is not None else 1.0
+    t_m, t_d = P.two_level_periods(
+        platform.mu, platform.C, C2, f, r, q, p, platform.D, platform.R, R2
+    )
+    return Strategy(
+        "TwoLevel", t_m, q=q, mode="two_level", rho=max(1, round(t_d / t_m))
+    )
+
+
+def silent(platform: Platform) -> Strategy:
+    """Silent-error strategy: verified checkpoints every k_V-th period (the
+    predictor never fires on latent corruptions, so q = 0 always)."""
+    V = platform.V if platform.V is not None else platform.C
+    t, k = P.silent_period(platform.mu, platform.C, V, platform.D, platform.R)
+    return Strategy("Silent", t, q=0.0, mode="silent", k_V=k)
+
+
 # --------------------------------------------------------------------------- #
 # Simulation engine
 # --------------------------------------------------------------------------- #
@@ -129,6 +166,10 @@ class SimResult:
     n_regular_ckpts: int
     n_migrations: int
     trace_exhausted: bool = False
+    #: two-level disk-tier recoveries / silent-error detections (zero
+    #: unless the strategy runs the corresponding mode)
+    n_disk_recoveries: int = 0
+    n_detections: int = 0
 
     @property
     def waste(self) -> float:
@@ -160,11 +201,40 @@ class _Engine:
         self.n_reg = 0
         self.n_mig = 0
 
+        # two-level state: durable frontier, memory ckpts since it, and the
+        # duration of the repair in progress (a fault during a repair
+        # restarts the SAME repair — rc, not D+R)
+        self.tl = strategy.mode == "two_level"
+        self.sil = strategy.mode == "silent"
+        self.C2 = platform.C2 if platform.C2 is not None else platform.C
+        self.R2 = platform.R2 if platform.R2 is not None else platform.R
+        self.V = platform.V if platform.V is not None else platform.C
+        self.fmem = platform.f if platform.f is not None else 0.0
+        self.rho = strategy.rho if strategy.rho is not None else 1
+        self.kv = strategy.k_V if strategy.k_V is not None else 1
+        self.saved_d = 0.0
+        self.dk_ctr = 0
+        self.rc = self.D + self.R
+        # silent-error state: verified frontier, unverified ckpts since it,
+        # earliest latent corruption time
+        self.saved_v = 0.0
+        self.ck_v = 0
+        self.corrupt = math.inf
+        self.n_disk = 0
+        self.n_det = 0
+
         self.fault_times: List[float] = [f.time for f in trace.faults]
+        # per-fault recovery-tier uniforms (u >= f sends recovery to disk;
+        # the 1.0 default means "disk" and keeps legacy traces valid)
+        self.tiers: List[float] = [
+            getattr(f, "tier_u", 1.0) for f in trace.faults
+        ]
         self.fi = 0
-        # Trust decisions are drawn per prediction (probability q).
+        # Trust decisions are drawn per prediction (probability q).  Silent
+        # lanes never trust: a latent corruption is not a fail-stop event,
+        # so the fail-stop predictor has nothing to predict.
         preds = trace.predictions
-        if strategy.mode == "none" or strategy.q <= 0.0:
+        if strategy.mode in ("none", "silent") or strategy.q <= 0.0:
             self.preds = []
         elif strategy.q >= 1.0:
             self.preds = list(preds)
@@ -176,16 +246,31 @@ class _Engine:
 
     # -- event peeking ------------------------------------------------------ #
     def _next_fault(self) -> float:
+        if self.sil:
+            # silent strikes never interrupt a primitive (latent until the
+            # next verification): consumed by _consume_silent instead
+            return math.inf
         while self.fi < len(self.fault_times) and self.fault_times[self.fi] < self.t:
-            # fault during downtime/recovery: recovery restarts
+            # fault during downtime/recovery: recovery restarts (rc is the
+            # duration of the repair in progress — D+R everywhere except
+            # after a two-level disk recovery)
             f = self.fault_times[self.fi]
-            if f >= self.t - (self.D + self.R):
+            if f >= self.t - self.rc:
                 self.n_faults += 1
-                self.t = f + self.D + self.R
+                self.t = f + self.rc
             self.fi += 1
         return (
             self.fault_times[self.fi] if self.fi < len(self.fault_times) else math.inf
         )
+
+    def _consume_silent(self) -> None:
+        """Consume latent strikes up to the current clock: they corrupt
+        state silently instead of interrupting the primitive."""
+        if not self.sil:
+            return
+        while self.fi < len(self.fault_times) and self.fault_times[self.fi] <= self.t:
+            self.corrupt = min(self.corrupt, self.fault_times[self.fi])
+            self.fi += 1
 
     def _next_action(self) -> float:
         """Time at which the next trusted prediction requires action."""
@@ -201,6 +286,19 @@ class _Engine:
         self.n_faults += 1
         self.unsaved = 0.0
         self.period_work = 0.0
+        if self.tl:
+            # tier coin consumed with the fault (callers advanced fi past
+            # the consumed column already): u >= f sends recovery to disk
+            u = self.tiers[self.fi - 1] if self.fi - 1 < len(self.tiers) else 1.0
+            if u >= self.fmem:
+                # disk-tier recovery: restart from the last disk checkpoint
+                self.t = t_fault + self.D + self.R2
+                self.saved = self.saved_d
+                self.dk_ctr = 0
+                self.rc = self.D + self.R2
+                self.n_disk += 1
+                return
+            self.rc = self.D + self.R
         self.t = t_fault + self.D + self.R
 
     def _work_until(self, t_target: float, credit_period: bool = True) -> bool:
@@ -219,6 +317,7 @@ class _Engine:
         if credit_period:
             self.period_work += dt
         self.t = t_target
+        self._consume_silent()
         if self.saved + self.unsaved >= self.W - _EPS:
             self.done = True
         return False
@@ -231,6 +330,7 @@ class _Engine:
             self._handle_fault(nf)
             return True
         self.t = t_target
+        self._consume_silent()
         return False
 
     def _checkpoint(self, proactive: bool) -> bool:
@@ -238,8 +338,23 @@ class _Engine:
 
         A fault at the exact completion instant does *not* abort the
         checkpoint (this realizes the exact-date prediction semantics where
-        the checkpoint completes right when the fault strikes)."""
-        end = self.t + self.C
+        the checkpoint completes right when the fault strikes).
+
+        The rho-th regular checkpoint of a two-level lane is the disk tier
+        (cost C + C2); the k_V-th regular checkpoint of a silent-error lane
+        verifies (cost C + V) and detects any latent corruption, rolling
+        back past every unverified checkpoint to the verified frontier.
+        Proactive checkpoints hit the memory tier and never verify."""
+        cost = self.C
+        disk_int = ver_int = False
+        if not proactive:
+            disk_int = self.tl and self.dk_ctr >= self.rho - 1
+            ver_int = self.sil and self.ck_v >= self.kv - 1
+            if disk_int:
+                cost += self.C2
+            if ver_int:
+                cost += self.V
+        end = self.t + cost
         nf = self._next_fault()
         if nf < end:
             self.fi += 1
@@ -253,6 +368,29 @@ class _Engine:
         else:
             self.n_reg += 1
             self.period_work = 0.0
+            if self.tl:
+                if disk_int:
+                    self.saved_d = self.saved
+                    self.dk_ctr = 0
+                else:
+                    self.dk_ctr += 1
+        self._consume_silent()
+        if not proactive and self.sil:
+            if ver_int:
+                if math.isfinite(self.corrupt):
+                    # verification caught a latent corruption: recover and
+                    # roll back to the last verified checkpoint
+                    self.t += self.D + self.R
+                    self.saved = self.saved_v
+                    self.period_work = 0.0
+                    self.corrupt = math.inf
+                    self.n_faults += 1
+                    self.n_det += 1
+                else:
+                    self.saved_v = self.saved
+                self.ck_v = 0
+            else:
+                self.ck_v += 1
         return False
 
     # -- proactive episodes (Section 4 strategies) --------------------------- #
@@ -298,8 +436,13 @@ class _Engine:
             if self.done:
                 return
 
-        if mode == "exact":
-            return  # Instant: straight back to regular mode at t0
+        if mode in ("exact", "two_level"):
+            # Instant: straight back to regular mode at t0.  Two-level
+            # episodes behave the same — the proactive checkpoint above
+            # hit the memory tier (cost C, no disk-stride advance), and a
+            # disk-tier fault will ignore it and roll back to the durable
+            # frontier anyway (see _handle_fault).
+            return
 
         if mode == "nockpt":
             self._work_until(t0 + I, credit_period=False)
@@ -370,6 +513,8 @@ class _Engine:
             n_regular_ckpts=self.n_reg,
             n_migrations=self.n_mig,
             trace_exhausted=self.exhausted,
+            n_disk_recoveries=self.n_disk,
+            n_detections=self.n_det,
         )
 
 

@@ -47,6 +47,8 @@ __all__ = [
     "waste_instant",
     "waste_nockpt",
     "waste_withckpt",
+    "waste_two_level",
+    "waste_silent",
     "i_prime",
 ]
 
@@ -67,6 +69,10 @@ class Platform:
     D: float  # downtime
     R: float  # recovery duration
     M: Optional[float] = None  # migration duration (Section 3.4)
+    C2: Optional[float] = None  # disk-tier checkpoint duration (two-level)
+    R2: Optional[float] = None  # disk-tier recovery duration (two-level)
+    f: Optional[float] = None  # fraction of failures covered by the fast tier
+    V: Optional[float] = None  # verification duration (silent errors)
 
     @staticmethod
     def from_components(
@@ -219,20 +225,52 @@ def waste_two_level(
     tier (single-node loss: cost D + R_m, work lost since the last
     *memory* checkpoint, period T_m, cost C_m); the remaining (1-f)
     require the durable disk tier (period T_d >= T_m, cost C_d, recovery
-    R_d).  Unpredicted-failure frequency scales by (1-rq) exactly as in
-    Equation (1), so prediction composes with the hierarchy:
+    R_d).  Prediction only protects the *memory* tier: a trusted true
+    positive triggers a proactive memory checkpoint right before the
+    fault, so a memory-tier failure then loses (almost) no work — but a
+    disk-tier failure destroys the memory tier, proactive checkpoint
+    included, and still rolls back to the last disk checkpoint.  (The
+    previous revision scaled the disk term by (1-rq) too, which
+    simulation refutes: predictions cannot shield losses the surviving
+    tier never held.)  Downtime + recovery is paid on every fault,
+    predicted or not:
 
       WASTE = C_m/T_m + C_d/T_d
-            + ((1-rq)/mu) [ f (T_m/2 + D + R_m) + (1-f)(T_d/2 + D + R_d) ]
+            + (1/mu) [ f ((1-rq) T_m/2 + D + R_m)
+                       + (1-f)(T_d/2 + D + R_d) ]
             + (qr/p) C_m / mu                      (proactive ckpts hit the
                                                     fast tier)
     """
     waste = C_m / T_m + C_d / T_d
-    frac = (1.0 - r * q) / mu
-    waste += frac * (f * (T_m / 2.0 + D + R_m) + (1 - f) * (T_d / 2.0 + D + R_d))
+    waste += (
+        f * ((1.0 - r * q) * T_m / 2.0 + D + R_m)
+        + (1 - f) * (T_d / 2.0 + D + R_d)
+    ) / mu
     if r > 0 and q > 0:
-        waste += (q * r / p) * C_m / mu
+        # p <= 0 means "no true positive is ever trusted for free": clamp the
+        # denominator exactly like the other prediction-aware models instead
+        # of raising ZeroDivisionError when a predictor is active with p=0.
+        waste += (q * r / max(p, 1e-12)) * C_m / mu
     return waste
+
+
+def waste_silent(
+    T: FloatLike, C: FloatLike, V: FloatLike, D: FloatLike, R: FloatLike,
+    mu: FloatLike, k: int = 1,
+) -> FloatLike:
+    """Beyond-paper: silent-data-corruption waste (arXiv:1310.8486).
+
+    Pattern of ``k`` checkpointing periods of length ``T`` (each ending in a
+    checkpoint of cost ``C``); the ``k``-th checkpoint additionally runs a
+    verification of cost ``V``, so the pattern wall time is ``P = k T + V``.
+    Corruptions strike at rate ``1/mu`` but stay latent until the pattern-end
+    verification, which rolls back to the last *verified* checkpoint: a
+    struck pattern forfeits its full wall time (detection latency reaches
+    past the k-1 unverified checkpoints) plus the recovery ``D + R``:
+
+      WASTE = (k C + V) / (k T) + (k T + V + D + R) / mu
+    """
+    return (k * C + V) / (k * T) + (k * T + V + D + R) / mu
 
 
 def withckpt_minus_nockpt(

@@ -169,6 +169,11 @@ def _group_traces(grid: GridSpec, cell_idx: List[int], group_no: int) -> BatchTr
         false_pred_dist=proto.false_pred_dist,
         n_components=proto.n_components,
         stationary=proto.stationary,
+        # recovery-tier uniforms for two-level cells; drawn after every
+        # other draw, so enabling them never perturbs the group's traces
+        tier=any(
+            grid.cells[ci].strategy.mode == "two_level" for ci in cell_idx
+        ),
     )
     return traces.take(rows)
 

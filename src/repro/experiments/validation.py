@@ -125,9 +125,23 @@ def model_validity(cell: ExperimentCell) -> float:
     pessimistic formula."""
     s, p, pred = cell.strategy, cell.platform, cell.predictor
     r, prec = pred.recall, pred.precision
-    trusts = s.mode != "none" and s.q > 0.0 and r > 0.0
+    trusts = s.mode not in ("none", "silent") and s.q > 0.0 and r > 0.0
     me = _mu_e(p.mu, r, prec) if trusts else p.mu
-    v = s.T_R / me if math.isfinite(me) else 0.0
+    if s.mode == "two_level":
+        # expected rollback span: memory-tier faults (fraction f) lose at
+        # most one memory period, disk-tier faults lose up to rho of them
+        rho = s.rho if s.rho is not None else 1
+        f = p.f if p.f is not None else 0.0
+        span = s.T_R * (f + (1.0 - f) * rho)
+    elif s.mode == "silent":
+        # detection latency: a corruption survives up to k_V periods, and
+        # a struck pattern forfeits its FULL wall time (not the T/2 mean
+        # loss of a fail-stop fault) — twice the second-order sensitivity,
+        # so the span doubles relative to the fail-stop scale
+        span = 2.0 * s.T_R * (s.k_V if s.k_V is not None else 1)
+    else:
+        span = s.T_R
+    v = span / me if math.isfinite(me) else 0.0
     if trusts and pred.window > 0.0:
         mp = _mu_p(p.mu, r, prec)
         if math.isfinite(mp):

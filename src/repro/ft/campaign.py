@@ -200,7 +200,7 @@ class CampaignRunner:
         )
         self._host_traces_cache = self.layout.traces  # device mode: lazy
         # mutable campaign state (the durable part of it is snapshotted)
-        self._sums = np.zeros((n_cells, 10), np.float64)
+        self._sums = np.zeros((n_cells, 12), np.float64)
         self._lane_parts: List[Dict[str, np.ndarray]] = []
         self._lanes_done = 0
         self._chunk_lanes = self._chunk_lanes0
@@ -288,7 +288,15 @@ class CampaignRunner:
         self._chunk_index = int(cur[2])
         self._incarnation = int(cur[3]) + 1  # this process is the next life
         self._degraded = bool(cur[4])
-        self._sums = np.asarray(host["sums"], np.float64).copy()
+        sums = np.asarray(host["sums"], np.float64)
+        if sums.shape != self._sums.shape:
+            raise ValueError(
+                "refusing to resume: snapshot accumulator has shape "
+                f"{sums.shape}, this build expects {self._sums.shape} "
+                "(snapshot predates the two-level/silent stats columns "
+                "— rerun the campaign with resume=False)"
+            )
+        self._sums = sums.copy()
         self._wall_prev = float(np.asarray(host["wall"])[0])
         self._events = list(meta["events"])
         self._n_snapshots = int(meta["n_snapshots"])
@@ -383,14 +391,19 @@ class CampaignRunner:
 
     def _lanes_to_matrix(self, res, cidx_sub: np.ndarray) -> np.ndarray:
         """Host-side per-cell reduction of a degraded (batch-engine)
-        chunk: the same 10 CellSums columns, np.add.at over lanes."""
+        chunk: the same 12 CellSums columns, np.add.at over lanes."""
         m = np.zeros_like(self._sums)
+        zeros = np.zeros(cidx_sub.shape[0])
+        nd = res.n_disk_recoveries
+        nv = res.n_detections
         cols = (
             np.ones(cidx_sub.shape[0]),
             res.makespan, res.makespan ** 2,
             res.waste, res.waste ** 2,
             res.n_faults, res.n_proactive_ckpts, res.n_regular_ckpts,
             res.n_migrations, res.trace_exhausted,
+            zeros if nd is None else nd,
+            zeros if nv is None else nv,
         )
         for j, v in enumerate(cols):
             np.add.at(m[:, j], cidx_sub, np.asarray(v, np.float64))

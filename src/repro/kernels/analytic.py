@@ -41,6 +41,7 @@ __all__ = [
     "nockpt_waste",
     "withckpt_waste",
     "two_level_waste",
+    "silent_waste",
     "cell_waste",
     "newton_policy",
 ]
@@ -48,6 +49,7 @@ __all__ = [
 #: integer strategy-mode codes of the engine tables (values of
 #: ``repro.core.batch_sim.MODE_CODES``, fixed by the packing format)
 _M_NONE, _M_EXACT, _M_NOCKPT, _M_WITHCKPT, _M_MIGRATION = 0, 1, 2, 3, 4
+_M_TWO_LEVEL, _M_SILENT = 5, 6
 
 
 # --------------------------------------------------------------------------- #
@@ -120,17 +122,27 @@ def withckpt_waste(T, T_P, q, C, DR, mu, r, p, I, E_f):
 
 
 # repro-twin: repro.core.analytic.two_level_waste
-def two_level_waste(T_m, T_d, C_m, C_d, DR_m, DR_d, mu, f, r, q, p):
+def two_level_waste(T_m, T_d, C_m, C_d, D, R_m, R_d, mu, f, r, q, p):
     w = C_m / T_m + C_d / T_d
-    frac = (1.0 - r * q) / mu
-    w = w + frac * (f * (T_m / 2.0 + DR_m) + (1.0 - f) * (T_d / 2.0 + DR_d))
+    w = w + (
+        f * ((1.0 - r * q) * T_m / 2.0 + D + R_m)
+        + (1.0 - f) * (T_d / 2.0 + D + R_d)
+    ) / mu
     p_safe = jnp.where(r > 0.0, p, 1.0)
     pred = jnp.where((r > 0.0) & (q > 0.0), (q * r / p_safe) * C_m / mu, 0.0)
     return w + pred
 
 
+# repro-twin: repro.core.analytic.silent_waste
+def silent_waste(T, C, V, DR, mu, k):
+    return (k * C + V) / (k * T) + (k * T + V + DR) / mu
+
+
 # repro-twin: repro.core.analytic.cell_waste
-def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
+def cell_waste(
+    T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff,
+    C2, DR2, V, fmem, rho, kv,
+):
     E_f = 0.5 * window
     tp = jnp.where(jnp.isnan(T_P), tp_eff, T_P)
     w_y = young_waste(T, C, DR, mu)
@@ -150,7 +162,13 @@ def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
         withckpt_waste(T, tp, q, C, DR, mu, r, p, window, E_f),
         w,
     )
-    return jnp.where((mode == _M_NONE) | (q <= 0.0) | (r <= 0.0), w_y, w)
+    w = jnp.where((mode == _M_NONE) | (q <= 0.0) | (r <= 0.0), w_y, w)
+    w = jnp.where(
+        mode == _M_TWO_LEVEL,
+        two_level_waste(T, rho * T, C, C2, 0.0, DR, DR2, mu, fmem, r, q, p),
+        w,
+    )
+    return jnp.where(mode == _M_SILENT, silent_waste(T, C, V, DR, mu, kv), w)
 
 
 # --------------------------------------------------------------------------- #
@@ -158,7 +176,7 @@ def cell_waste(T, mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff):
 # --------------------------------------------------------------------------- #
 #: per-cell objective and its first/second T-derivatives, vmapped over
 #: every column (the differentiability the jnp dialect buys)
-_N_ARGS = 12
+_N_ARGS = 18
 _waste_v = jax.vmap(cell_waste, in_axes=(0,) * _N_ARGS)
 _grad_v = jax.vmap(jax.grad(cell_waste), in_axes=(0,) * _N_ARGS)
 _hess_v = jax.vmap(jax.grad(jax.grad(cell_waste)), in_axes=(0,) * _N_ARGS)
@@ -194,6 +212,7 @@ def _solve_bracket(cols, T0, lo, hi, iters):
 @partial(jax.jit, static_argnames="iters")
 def newton_policy(
     mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff,
+    C2, DR2, V, fmem, rho, kv,
     lo, hi0, hi1, iters: int = 60,
 ):
     """One-dispatch batched period optimization over a cell table.
@@ -202,12 +221,15 @@ def newton_policy(
     the Instant kink ``T = window`` — and the untrusted q = 0 branch on
     ``[lo, hi0]``, then keeps the better operating point per cell (the
     waste is affine in q, so the optimum is at q = 0 or q = q_eff,
-    mirroring the host case analyses).  Returns
+    mirroring the host case analyses).  The two-level / silent-error
+    columns (``C2``/``DR2``/``V``/``fmem``/``rho``/``kv``) are benign
+    fills (0/0/0/0/1/1) on every other mode's cells.  Returns
     ``(T, q, waste, T0, waste0, T1, waste1)`` with ``waste`` min'd
     against 1 like :class:`~repro.core.periods.OptimalPolicy`."""
-    cols1 = (mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff)
+    extra = (C2, DR2, V, fmem, rho, kv)
+    cols1 = (mode, q, C, DR, lead_act, mu, r, p, window, T_P, tp_eff) + extra
     zq = jnp.zeros_like(q)
-    cols0 = (mode, zq, C, DR, lead_act, mu, r, p, window, T_P, tp_eff)
+    cols0 = (mode, zq, C, DR, lead_act, mu, r, p, window, T_P, tp_eff) + extra
 
     t0_guess = jnp.sqrt(2.0 * mu * C)
     den = jnp.maximum(1.0 - r * q, 0.015625)

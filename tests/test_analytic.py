@@ -157,7 +157,7 @@ class TestTableWaste:
             T_m, T_d = rng.uniform(400, 3000), rng.uniform(3000, 2e4)
             want = W.waste_two_level(T_m, T_d, C_m, C_d, D, R_m, R_d, mu, f, r, q, p)
             got = A.two_level_waste(
-                T_m, T_d, C_m, C_d, D + R_m, D + R_d, mu, f, r, q, p
+                T_m, T_d, C_m, C_d, D, R_m, R_d, mu, f, r, q, p
             )
             assert got == pytest.approx(want, rel=1e-12)
 
@@ -175,7 +175,8 @@ class TestJnpTwins:
                     T, tabs["mode"].astype(np.int32), tabs["q_eff"],
                     tabs["C"], tabs["DR"], tabs["lead_act"], tabs["mtbf"],
                     tabs["recall"], p, tabs["window"], tabs["T_P"],
-                    tabs["tp_eff_default"],
+                    tabs["tp_eff_default"], tabs["C2"], tabs["DR2"],
+                    tabs["V"], tabs["fmem"], tabs["rho"], tabs["kv"],
                 )
             )
         np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
@@ -269,9 +270,11 @@ class TestGradients:
             tabs["mode"].astype(np.int32), tabs["q_eff"], tabs["C"],
             tabs["DR"], tabs["lead_act"], tabs["mtbf"], tabs["recall"], p,
             tabs["window"], tabs["T_P"], tabs["tp_eff_default"],
+            tabs["C2"], tabs["DR2"], tabs["V"], tabs["fmem"],
+            tabs["rho"], tabs["kv"],
         )
         with _x64():
-            grad_v = jax.vmap(jax.grad(K.cell_waste), in_axes=(0,) * 12)
+            grad_v = jax.vmap(jax.grad(K.cell_waste), in_axes=(0,) * 18)
             got = np.asarray(grad_v(T, *cols))
         np.testing.assert_allclose(
             got[~kink], want[~kink], rtol=1e-6, atol=1e-10

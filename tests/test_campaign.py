@@ -237,6 +237,105 @@ class TestKillResume:
         assert b["meta"]["campaign"]["incarnation"] >= 1
 
 
+def scenario_grid(n_runs=30, seed=13):
+    """A small mixed scenario grid: two-level (untrusted) + silent cells,
+    exercising the DISK/DET statistics columns through the campaign."""
+    from repro.experiments.paper_grid import (
+        silent_grid_cells,
+        two_level_grid_cells,
+    )
+
+    cells = tuple(two_level_grid_cells("validation")[:2]) + tuple(
+        silent_grid_cells("validation")[:2]
+    )
+    return GridSpec(cells=cells, n_runs=n_runs, seed=seed)
+
+
+class TestScenarioCampaign:
+    """Kill/resume + snapshot-matrix coverage of the two new phase
+    families (two-level checkpointing, silent errors)."""
+
+    @pytest.fixture(scope="class")
+    def sgrid(self):
+        return scenario_grid()
+
+    @pytest.mark.parametrize("trace_mode", ["device", "host"])
+    def test_kill_resume_scenario_bit_exact(self, tmp_path, sgrid,
+                                            trace_mode):
+        c = cfg(trace_mode)
+        ref = run_grid(sgrid, config=c)
+        base = run_campaign(
+            sgrid,
+            CampaignConfig(ckpt_dir=str(tmp_path / "base"), ckpt_period=0.0,
+                           async_snapshots=False),
+            c,
+        )
+        np.testing.assert_array_equal(key_vec(ref), key_vec(base))
+        for k in (1, 3):
+            d = str(tmp_path / f"{trace_mode}_{k}")
+            with pytest.raises(CampaignKilled):
+                run_campaign(
+                    sgrid,
+                    CampaignConfig(ckpt_dir=d, ckpt_period=0.0,
+                                   async_snapshots=False,
+                                   chaos=ChaosInjector(kill_at=(k,))),
+                    c,
+                )
+            res = run_campaign(
+                sgrid,
+                CampaignConfig(ckpt_dir=d, ckpt_period=0.0,
+                               async_snapshots=False),
+                c,
+            )
+            np.testing.assert_array_equal(key_vec(base), key_vec(res))
+            ev = res.meta["campaign"]["events"]
+            assert any(e["kind"] == "resume" for e in ev)
+
+    def test_snapshot_matrix_carries_scenario_columns(self, tmp_path, sgrid):
+        """The campaign accumulator is the full 12-column CellSums
+        matrix: disk-tier recoveries on the two-level cells, silent
+        detections on the silent cells, zero cross-talk."""
+        from repro.core.jax_sim import CellSums
+
+        runner = CampaignRunner(
+            sgrid,
+            CampaignConfig(ckpt_dir=str(tmp_path), ckpt_period=0.0),
+            cfg("device"),
+        )
+        runner.run()
+        assert runner._sums.shape == (len(sgrid.cells), 12)
+        sums = CellSums.from_matrix(runner._sums)
+        disk = np.asarray(sums.n_disk_recoveries)
+        det = np.asarray(sums.n_detections)
+        assert (disk[:2] > 0).all()  # two-level cells hit the disk tier
+        assert (det[2:] > 0).all()  # silent cells detect corruptions
+        assert (disk[2:] == 0).all() and (det[:2] == 0).all()
+
+    def test_pre_scenario_snapshot_shape_refused(self, tmp_path, sgrid):
+        """A snapshot written before the DISK/DET columns existed (10-col
+        accumulator) must be refused, not silently mis-summed."""
+        from repro.checkpoint.store import CheckpointStore
+
+        d = str(tmp_path)
+        with pytest.raises(CampaignKilled):
+            run_campaign(
+                sgrid,
+                CampaignConfig(ckpt_dir=d, ckpt_period=0.0,
+                               async_snapshots=False,
+                               chaos=ChaosInjector(kill_at=(2,))),
+                cfg("device"),
+            )
+        store = CheckpointStore(d, codec="raw")
+        step, tree = store.restore_latest()
+        tree["sums"] = np.asarray(tree["sums"])[:, :10]
+        store.save(step + 1, tree)
+        with pytest.raises(ValueError, match="refusing to resume"):
+            run_campaign(
+                sgrid, CampaignConfig(ckpt_dir=d, ckpt_period=0.0),
+                cfg("device"), resume=True,
+            )
+
+
 class TestChaosRecovery:
     def test_oom_halves_chunk_and_completes(self, tmp_path, grid,
                                             ref_device):

@@ -101,6 +101,19 @@ class TestOnlineEstimation:
         assert r == pytest.approx(0.75)
         assert p == pytest.approx(0.75)
 
+    def test_zero_true_faults_recall_is_zero(self):
+        """Edge: a campaign segment with no true faults at all (TP + FN
+        == 0 — e.g. a silent-error lane, whose corruptions the fail-stop
+        predictor never sees) must degrade recall to 0.0 instead of
+        raising ZeroDivisionError or claiming perfect recall."""
+        from repro.core.predictor import estimate_recall_precision
+
+        r, p = estimate_recall_precision(0, 5, 0)
+        assert r == 0.0
+        assert p == 0.0
+        r, p = estimate_recall_precision(0, 0, 0)
+        assert (r, p) == (0.0, 0.0)
+
     def test_reoptimization_gated_on_prediction_evidence(self):
         """A silent predictor (25 faults seen, zero predictions) must not
         inflate the precision fed to the online re-optimization: the

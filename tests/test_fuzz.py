@@ -50,7 +50,13 @@ LAWS = {
     "weibull0.5": E.weibull(0.5),
     "lognormal": E.lognormal(1.0),
 }
-MODES = ["none", "exact", "nockpt", "withckpt", "migration"]
+MODES = [
+    "none", "exact", "two_level", "silent", "nockpt", "withckpt",
+    "migration",
+]
+#: modes whose strategy factory fixes q itself (silent is never
+#: predictor-trusted; two_level trusts iff it is built with a predictor)
+_FIXED_Q_MODES = ("none", "two_level", "silent")
 
 #: scalar-vs-vectorized tolerance (fast-forward float fusion)
 MK_TOL = 1e-3
@@ -58,7 +64,11 @@ MK_TOL = 1e-3
 
 def _make_grid(mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed):
     plat = Platform(
-        mu=mu_mn * MN, C=c_mn * MN, D=1 * MN, R=c_mn * MN, M=3 * MN
+        mu=mu_mn * MN, C=c_mn * MN, D=1 * MN, R=c_mn * MN, M=3 * MN,
+        # scenario knobs, inert for the paper modes: a 3x-cost disk tier
+        # covering the non-buddy failures, and a half-checkpoint-cost
+        # verification step
+        C2=3 * c_mn * MN, R2=3 * c_mn * MN, f=0.8, V=0.5 * c_mn * MN,
     )
     work = 5 * 86400.0
     pred = PredictorModel(recall, precision, window=window, lead=3600.0)
@@ -66,13 +76,21 @@ def _make_grid(mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed):
         strat = S.young(plat)
     elif mode == "exact":
         strat = S.instant(plat, pred) if window > 0 else S.exact_prediction(plat, pred)
+    elif mode == "two_level":
+        # exact-date predictions only (proactive memory checkpoints);
+        # q <= 0 draws the untrusted factory variant
+        epred = dataclasses.replace(pred, window=0.0)
+        strat = S.two_level(plat, epred if q > 0 else None)
+        pred = epred
+    elif mode == "silent":
+        strat = S.silent(plat)  # corruptions are never predicted: q = 0
     elif mode == "nockpt":
         strat = S.nockpt(plat, pred)
     elif mode == "withckpt":
         strat = S.withckpt(plat, pred)
     else:
         strat = S.migration(plat, pred)
-    if q != strat.q and strat.mode != "none":
+    if q != strat.q and strat.mode not in _FIXED_Q_MODES:
         strat = dataclasses.replace(strat, q=q)
     cells = (
         ExperimentCell(
@@ -224,6 +242,21 @@ else:
         _check_differential(
             mu_mn, c_mn, law_key, mode, window, q, recall, precision, seed
         )
+
+
+@pytest.mark.parametrize(
+    "mode,q",
+    [("two_level", 0.0), ("two_level", 1.0), ("silent", 0.0)],
+)
+def test_scenario_modes_differential(mode, q):
+    """Guaranteed coverage of the scenario phase families regardless of
+    the fuzz budget: two-level (untrusted + predictor-trusted) and
+    silent-error lanes through the full three-engine / two-trace-mode /
+    two-dispatch differential contract."""
+    _check_differential(
+        mu_mn=900.0, c_mn=6.0, law_key="weibull0.7", mode=mode,
+        window=0.0, q=q, recall=0.8, precision=0.7, seed=42,
+    )
 
 
 def test_fractional_trust_dispatch_invariance():

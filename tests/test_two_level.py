@@ -47,13 +47,63 @@ class TestTwoLevel:
         assert t_d == pytest.approx(math.sqrt(2 * MU * C_D), rel=1e-3)
 
     def test_prediction_composes(self):
-        """rq > 0 lengthens both periods by 1/sqrt(1-rq), as in Eq (1)."""
+        """rq > 0 lengthens the MEMORY period by 1/sqrt(1-rq) — Eq (1)
+        applied to the only tier predictions can shield.  The disk
+        extremizer is rq-free: a disk-tier failure destroys the
+        proactive memory checkpoint along with the tier, so the old
+        revision's (1-rq) scaling of the disk term was a latent bug
+        (refuted by all three engines)."""
         f, r, q = 0.9, 0.85, 1.0
         t_m0, t_d0 = two_level_periods(MU, C_M, C_D, f)
         t_m1, t_d1 = two_level_periods(MU, C_M, C_D, f, r, q)
         k = 1 / math.sqrt(1 - r * q)
         assert t_m1 / t_m0 == pytest.approx(k, rel=1e-6)
-        assert t_d1 / t_d0 == pytest.approx(k, rel=1e-6)
+        assert t_d1 == pytest.approx(t_d0, rel=1e-6)
+
+    def test_precision_zero_guard(self):
+        """Regression: an active predictor with precision 0 (every
+        prediction false) used to raise ZeroDivisionError through the
+        proactive term ``(qr/p) C_m / mu``.  The clamp must keep the
+        waste finite and monotone in p (worse precision, more waste)."""
+        f, r, q = 0.9, 0.85, 1.0
+        t_m, t_d = two_level_periods(MU, C_M, C_D, f, r, q, p=0.0)
+        w0 = waste_two_level(t_m, t_d, C_M, C_D, D_, R_M, R_D, MU, f, r, q,
+                             p=0.0)
+        assert math.isfinite(w0)
+        w_half = waste_two_level(t_m, t_d, C_M, C_D, D_, R_M, R_D, MU, f,
+                                 r, q, p=0.5)
+        w_one = waste_two_level(t_m, t_d, C_M, C_D, D_, R_M, R_D, MU, f,
+                                r, q, p=1.0)
+        assert w0 >= w_half >= w_one
+
+    def test_extremizers_dominate_period_scan(self):
+        """The corrected closed-form periods must beat (or match) a dense
+        feasible-set scan of the same waste model — including trusted
+        cells, where the old extremizers stretched the disk period by the
+        spurious 1/sqrt(1-rq) factor and a scan would undercut them."""
+        scan = np.geomspace(C_M, 20 * MU, 80)
+        for f, r, q, p in (
+            (0.9, 0.0, 0.0, 1.0),
+            (0.9, 0.85, 1.0, 0.82),
+            (0.5, 0.6, 0.7, 0.5),
+            (0.05, 0.85, 1.0, 0.82),
+        ):
+            t_m, t_d = two_level_periods(
+                MU, C_M, C_D, f, r, q, p, D_, R_M, R_D
+            )
+            w_star = waste_two_level(
+                t_m, t_d, C_M, C_D, D_, R_M, R_D, MU, f, r, q, p
+            )
+            w_scan = min(
+                waste_two_level(tm, td, C_M, C_D, D_, R_M, R_D, MU, f,
+                                r, q, p)
+                for tm in scan
+                for td in scan
+                if td >= tm and td >= C_D
+            )
+            # the scan is a subset of the feasible set: the closed form
+            # may only undercut it, never sit above (beyond grid slack)
+            assert w_star <= w_scan * (1.0 + 1e-6), (f, r, q, p)
 
     def test_disk_period_not_shorter_than_memory(self):
         for f in (0.05, 0.5, 0.99):

@@ -32,6 +32,7 @@ from repro.experiments import (
     paper_grid_cells,
     run_grid,
 )
+from repro.experiments.paper_grid import silent_grid_cells, two_level_grid_cells
 from repro.experiments.validation import (
     analytic_waste,
     cell_z_rows,
@@ -71,6 +72,19 @@ def paper_rows(paper_sweep):
             os.path.join(art, "validation_ztable.json"),
         )
     return rows
+
+
+@pytest.fixture(scope="module")
+def scenario_sweep():
+    """The two new phase families — two-level (memory + disk tiers, with
+    and without a trusted predictor) and silent errors (verified
+    checkpoints, detection-latency rollback) — through the SAME fused
+    device dispatch with device-reduced statistics as the paper grid."""
+    cells = tuple(two_level_grid_cells("validation")) + tuple(
+        silent_grid_cells("validation")
+    )
+    grid = GridSpec(cells, n_runs=N_RUNS, seed=SEED)
+    return run_grid(grid, engine="jax", trace_mode="device", collect="stats")
 
 
 def _subset(sweep: SweepResult, keep) -> SweepResult:
@@ -117,6 +131,46 @@ def test_full_grid_family_controlled(paper_rows):
     assert not [r for r in paper_rows if r.reject]
     assert all(math.isfinite(r.z) for r in paper_rows)
     assert all(r.se_sim > 0 for r in paper_rows)
+
+
+def test_two_level_cells_match_theory(scenario_sweep):
+    """The corrected two-level model (prediction shields only the memory
+    tier): every untrusted AND predictor-trusted two-level cell sits
+    inside its margin.  The trusted cells are the regression sentinel —
+    under the old (1-rq)-scaled disk term they overshot by up to +0.30
+    absolute waste (z ~ +58)."""
+    sub = _subset(scenario_sweep, lambda c: c.label.startswith("tl/"))
+    assert len(sub.cells) >= 18
+    rows = _assert_no_rejects(sub)
+    trusted = [r for r in rows if r.label.count("/") == 4]
+    untrusted = [r for r in rows if r.label.count("/") == 3]
+    assert trusted and untrusted
+    assert all(r.strategy == "TwoLevel" for r in rows)
+
+
+def test_silent_cells_match_theory(scenario_sweep):
+    """The silent-error model (arXiv:1310.8486 detection-latency
+    rollback): every verified-checkpoint cell sits inside its margin at
+    both verification costs.  Under the strike-cursor clobbering bug the
+    fused device path simulated zero corruptions (zero variance,
+    z = +inf); these cells pin the counter-stream contract."""
+    sub = _subset(scenario_sweep, lambda c: c.label.startswith("sil/"))
+    assert len(sub.cells) >= 6
+    rows = _assert_no_rejects(sub)
+    assert all(r.strategy == "Silent" for r in rows)
+    # the cells genuinely corrupt: Monte-Carlo noise is present
+    assert all(r.se_sim > 0 for r in rows)
+
+
+def test_scenario_grid_family_controlled(scenario_sweep):
+    """Holm over the combined two-level + silent grid rejects nothing,
+    with finite statistics in every cell (the acceptance gate of the
+    scenario phase families)."""
+    rows, fails = validate_sweep(scenario_sweep, alpha=ALPHA)
+    assert not fails
+    assert all(math.isfinite(r.z) for r in rows)
+    assert all(r.se_sim > 0 for r in rows)
+    assert len(rows) >= 24
 
 
 def test_suite_catches_an_engine_regression(paper_sweep):
@@ -227,6 +281,39 @@ def test_analytic_waste_dispatch():
             0.85, 0.82, 3000.0, 1500.0,
         )
     )
+    # the scenario families dispatch through the same one-cell table:
+    # two-level maps (T_m = T_R, T_d = rho T_R) with D+R folded per tier
+    plat2 = Platform(
+        mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN,
+        C2=30 * MN, R2=30 * MN, f=0.85,
+    )
+    tl = S.two_level(plat2)
+
+    def cell2(strat, p=pred):
+        return ExperimentCell("x", 6 * 86400.0, plat2, p, strat)
+
+    def w_tl(s, r=0.0, q=0.0, prec=1.0):
+        return W.waste_two_level(
+            s.T_R, s.rho * s.T_R, plat2.C, plat2.C2, 0.0,
+            plat2.D + plat2.R, plat2.D + plat2.R2, plat2.mu, plat2.f,
+            r, q, prec,
+        )
+
+    assert analytic_waste(cell2(tl)) == pytest.approx(w_tl(tl))
+    tlt = S.two_level(plat2, pred)
+    assert tlt.q == 1.0
+    assert analytic_waste(cell2(tlt)) == pytest.approx(
+        w_tl(tlt, 0.85, 1.0, 0.82)
+    )
+    plats = Platform(mu=1000 * MN, C=10 * MN, D=1 * MN, R=10 * MN, V=5 * MN)
+    sil = S.silent(plats)
+    assert analytic_waste(
+        ExperimentCell("x", 6 * 86400.0, plats, pred, sil)
+    ) == pytest.approx(
+        W.waste_silent(
+            sil.T_R, plats.C, plats.V, plats.D, plats.R, plats.mu, sil.k_V
+        )
+    )
 
 
 def test_model_validity_scales_with_period_and_window():
@@ -251,6 +338,33 @@ def test_model_validity_scales_with_period_and_window():
     assert v(big, pred, S.young(big)) == pytest.approx(
         S.young(big).T_R / big.mu
     )
+
+
+def test_model_validity_scenario_spans():
+    """The scenario families widen the validity distance by their actual
+    rollback span: two-level by the rho-weighted mixture of tier losses,
+    silent by 2 k_V periods (a struck pattern forfeits its full wall
+    time, not the T/2 mean loss of a fail-stop fault)."""
+    MN = 60.0
+    plat = Platform(
+        mu=250 * MN, C=10 * MN, D=1 * MN, R=10 * MN,
+        C2=40 * MN, R2=40 * MN, f=0.6, V=10 * MN,
+    )
+
+    def v(strat):
+        return model_validity(
+            ExperimentCell("x", 1e5, plat, PredictorModel(0.0, 1.0), strat)
+        )
+
+    tl = S.two_level(plat)
+    f = plat.f
+    assert v(tl) == pytest.approx(
+        tl.T_R * (f + (1.0 - f) * tl.rho) / plat.mu
+    )
+    assert tl.rho > 1  # the span genuinely exceeds one memory period
+    sil = S.silent(plat)
+    assert v(sil) == pytest.approx(2.0 * sil.T_R * sil.k_V / plat.mu)
+    assert v(sil) > sil.T_R / plat.mu
 
 
 def test_cell_z_rows_margin_sides(paper_sweep):
